@@ -1,0 +1,133 @@
+"""Paper-figure harnesses (one function per figure/table).
+
+Each ``figN_*`` returns a list of CSV rows ``(name, us_per_call, derived)``
+where `us_per_call` is the simulator wall time for the cell and `derived`
+is the figure's metric (normalized performance / coalescing rate / idle
+share). Figure data is also dumped to benchmarks/results/.
+"""
+
+from __future__ import annotations
+
+import functools
+import json
+import os
+import time
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.core.warpsim import machines, runner
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+Row = Tuple[str, float, float]
+
+
+def _save(name: str, obj) -> None:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, name), "w") as f:
+        json.dump(obj, f, indent=1)
+
+
+@functools.lru_cache(maxsize=None)
+def _suite():
+    t0 = time.time()
+    res = runner.run_suite(machines.paper_suite())
+    return res, (time.time() - t0) * 1e6
+
+
+@functools.lru_cache(maxsize=None)
+def _simd_sweep(simd_width: int):
+    t0 = time.time()
+    res = runner.run_suite(machines.warp_size_sweep(simd_width))
+    return res, (time.time() - t0) * 1e6
+
+
+def fig1_warpsize_simd() -> List[Row]:
+    """Fig. 1: perf vs warp size for SIMD widths 8/16/32, normalized to
+    8-wide SIMD with 4x warp size (=warp 32)."""
+    rows, dump = [], {}
+    base_res, _ = _simd_sweep(8)
+    base = runner.mean_ipc(base_res["simd8_ws32"])
+    for simd in (8, 16, 32):
+        res, us = _simd_sweep(simd)
+        for name, per_bench in res.items():
+            norm = runner.mean_ipc(per_bench) / base
+            rows.append((f"fig1/{name}", us / len(res), norm))
+            dump[name] = norm
+    _save("fig1_warpsize_simd.json", dump)
+    return rows
+
+
+def _per_bench_metric(metric: str, mnames) -> List[Row]:
+    res, us = _suite()
+    rows, dump = [], {}
+    for m in mnames:
+        for b, r in res[m].items():
+            val = getattr(r, metric)
+            rows.append((f"{m}/{b}", us / (len(res) * len(res[m])), val))
+            dump[f"{m}/{b}"] = val
+    return rows, dump
+
+
+def fig2_coalescing() -> List[Row]:
+    """Fig. 2: coalescing rate (offchip requests / mem insn) per warp size,
+    normalized to ws32."""
+    res, us = _suite()
+    rows, dump = [], {}
+    for m in ("ws8", "ws16", "ws32", "ws64"):
+        for b, r in res[m].items():
+            norm = r.coalescing_rate / max(res["ws32"][b].coalescing_rate,
+                                           1e-12)
+            rows.append((f"fig2/{m}/{b}", us / 60, norm))
+            dump[f"{m}/{b}"] = norm
+    _save("fig2_coalescing.json", dump)
+    return rows
+
+
+def fig3_idle() -> List[Row]:
+    """Fig. 3: idle-cycle share per warp size."""
+    rows, dump = _per_bench_metric("idle_share",
+                                   ("ws8", "ws16", "ws32", "ws64"))
+    rows = [(f"fig3/{n}", u, v) for n, u, v in rows]
+    _save("fig3_idle.json", dump)
+    return rows
+
+
+def fig4_perf() -> List[Row]:
+    """Fig. 4: performance (IPC) per warp size."""
+    rows, dump = _per_bench_metric("ipc", ("ws8", "ws16", "ws32", "ws64"))
+    rows = [(f"fig4/{n}", u, v) for n, u, v in rows]
+    _save("fig4_perf.json", dump)
+    return rows
+
+
+def fig5_swlw_coalescing() -> List[Row]:
+    """Fig. 5: coalescing rate incl. SW+ and LW+."""
+    rows, dump = _per_bench_metric(
+        "coalescing_rate", ("ws8", "ws16", "ws32", "ws64", "SW+", "LW+"))
+    rows = [(f"fig5/{n}", u, v) for n, u, v in rows]
+    _save("fig5_swlw_coalescing.json", dump)
+    return rows
+
+
+def fig6_swlw_idle() -> List[Row]:
+    """Fig. 6: idle share incl. SW+ and LW+."""
+    rows, dump = _per_bench_metric(
+        "idle_share", ("ws8", "ws16", "ws32", "ws64", "SW+", "LW+"))
+    rows = [(f"fig6/{n}", u, v) for n, u, v in rows]
+    _save("fig6_swlw_idle.json", dump)
+    return rows
+
+
+def fig7_swlw_perf() -> List[Row]:
+    """Fig. 7: performance incl. SW+ and LW+, plus the headline averages."""
+    rows, dump = _per_bench_metric(
+        "ipc", ("ws8", "ws16", "ws32", "ws64", "SW+", "LW+"))
+    rows = [(f"fig7/{n}", u, v) for n, u, v in rows]
+    res, us = _suite()
+    summary = runner.suite_summary(res)
+    for k, v in summary.items():
+        rows.append((f"fig7/summary/{k}", us, v))
+    dump["summary"] = summary
+    _save("fig7_swlw_perf.json", dump)
+    return rows

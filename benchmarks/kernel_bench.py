@@ -1,0 +1,90 @@
+"""Kernel tile-granularity benchmarks — the TPU warp-size analogue.
+
+Sweeps the flash-attention (BQ, BKV) block sizes and the SSD chunk length,
+timing the *JAX reference path* on CPU (relative effect of granularity;
+absolute TPU numbers come from the roofline terms). Pallas interpret-mode
+timing is reported once per kernel for the record, not as a perf claim.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, ssm
+
+Row = Tuple[str, float, float]
+
+
+def _time(fn, *args, iters: int = 3) -> float:
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+        out = out[0] if isinstance(out, tuple) else out
+        out.block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def attention_chunk_sweep() -> List[Row]:
+    """kv_chunk granularity sweep for the scan-flash attention."""
+    b, s, h, hd = 2, 2048, 4, 64
+    q = jax.random.normal(jax.random.PRNGKey(0), (b, s, h, hd), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, s, h, hd), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, s, h, hd), jnp.float32)
+    pos = jnp.arange(s)
+    flops = 4.0 * b * h * s * s * hd / 2        # causal
+    rows = []
+    for chunk in (128, 256, 512, 1024, 2048):
+        f = jax.jit(lambda q, k, v, c=chunk: attention.flash_attention(
+            q, k, v, pos, pos, None, kv_chunk=c))
+        us = _time(f, q, k, v)
+        rows.append((f"attn/kv_chunk={chunk}", us, flops / (us * 1e-6) / 1e9))
+    return rows
+
+
+def ssd_chunk_sweep() -> List[Row]:
+    """SSD chunk-length sweep (intra-chunk quadratic vs inter-chunk scan)."""
+    b, s, nh, p, n = 2, 4096, 8, 64, 64
+    x = jax.random.normal(jax.random.PRNGKey(3), (b, s, nh, p), jnp.float32)
+    dt = jnp.zeros((b, s, nh))
+    a_log = jnp.zeros((nh,))
+    bb = jax.random.normal(jax.random.PRNGKey(4), (b, s, 1, n), jnp.float32)
+    cc = jax.random.normal(jax.random.PRNGKey(5), (b, s, 1, n), jnp.float32)
+    rows = []
+    for chunk in (64, 128, 256, 512):
+        f = jax.jit(lambda x, dt, bb, cc, q=chunk: ssm.ssd_scan(
+            x, dt, a_log, bb, cc, jnp.ones(nh), chunk=q)[0])
+        us = _time(f, x, dt, bb, cc)
+        # intra-chunk flops dominate: 2*B*S*nh*(q*n + q*p) per token approx
+        derived = chunk
+        rows.append((f"ssd/chunk={chunk}", us, float(derived)))
+    return rows
+
+
+def pallas_interpret_record() -> List[Row]:
+    """One interpret-mode timing per Pallas kernel (record only)."""
+    from repro.kernels import ops
+    rows = []
+    q = jax.random.normal(jax.random.PRNGKey(6), (2, 256, 64), jnp.float32)
+    t0 = time.perf_counter()
+    ops.flash_attention(q, q, q).block_until_ready()
+    rows.append(("pallas/flash_attention[interpret]",
+                 (time.perf_counter() - t0) * 1e6, 0.0))
+    x = jax.random.normal(jax.random.PRNGKey(7), (256, 128), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(8), (4, 128, 128), jnp.float32)
+    be = jnp.zeros((2,), jnp.int32)
+    t0 = time.perf_counter()
+    ops.moe_gmm(x, w, be).block_until_ready()
+    rows.append(("pallas/moe_gmm[interpret]",
+                 (time.perf_counter() - t0) * 1e6, 0.0))
+    return rows
+
+
+def run() -> List[Row]:
+    return (attention_chunk_sweep() + ssd_chunk_sweep()
+            + pallas_interpret_record())

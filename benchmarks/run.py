@@ -1,0 +1,55 @@
+"""Benchmark harness entry point. One function per paper figure/table plus
+the TPU-side kernel/dispatch/roofline benches.
+
+Prints ``name,us_per_call,derived`` CSV (spec'd format).
+
+  PYTHONPATH=src python -m benchmarks.run             # everything
+  PYTHONPATH=src python -m benchmarks.run --only fig7,moe
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated substring filters")
+    args = ap.parse_args()
+
+    from benchmarks import figs, kernel_bench, moe_dispatch_bench, roofline_table
+
+    benches = [
+        ("fig1", figs.fig1_warpsize_simd),
+        ("fig2", figs.fig2_coalescing),
+        ("fig3", figs.fig3_idle),
+        ("fig4", figs.fig4_perf),
+        ("fig5", figs.fig5_swlw_coalescing),
+        ("fig6", figs.fig6_swlw_idle),
+        ("fig7", figs.fig7_swlw_perf),
+        ("kernels", kernel_bench.run),
+        ("moe", moe_dispatch_bench.run),
+        ("roofline", roofline_table.run),
+    ]
+    only = args.only.split(",") if args.only else None
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in benches:
+        if only and not any(o in name for o in only):
+            continue
+        try:
+            for row_name, us, derived in fn():
+                print(f"{row_name},{us:.1f},{derived:.6g}")
+        except Exception:   # noqa: BLE001 — report all benches
+            failures += 1
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Full warp-size study: every benchmark x machine, the paper's headline
+claims, and the TPU-side analogy (MoE dispatch strategies).
+
+Run:  PYTHONPATH=src python examples/warpsize_study.py
+"""
+import json
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core.warpsim import machines, runner
+
+
+def main():
+    print("running 15 benchmarks x 6 machines (paper Figs. 2-7)...")
+    res = runner.run_suite(machines.paper_suite())
+    benches = list(next(iter(res.values())))
+    print(f"\n{'':6s}" + " ".join(f"{b:>6s}" for b in benches))
+    for m in res:
+        print(f"{m:6s}" + " ".join(f"{res[m][b].ipc:6.2f}" for b in benches))
+    print("\nheadline comparisons (paper Fig. 7 / Secs. 6.2-6.3):")
+    s = runner.suite_summary(res)
+    paper = {
+        "swplus_over_lwplus": 1.11, "swplus_over_ws8": 1.16,
+        "swplus_over_ws16": 1.12, "swplus_over_ws32": 1.19,
+        "lwplus_over_ws8": 1.05, "lwplus_over_ws16": 1.01,
+        "lwplus_over_ws32": 1.07, "lwplus_over_ws64": 1.15,
+    }
+    for k, v in s.items():
+        ref = paper.get(k)
+        ref_s = f"(paper {ref:.2f})" if ref else ""
+        print(f"  {k:40s} {v:6.3f} {ref_s}")
+    runner.save_results(res, "benchmarks/results/warpsim_suite.json")
+    print("\nsaved benchmarks/results/warpsim_suite.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""Warp-level SIMT timing model — faithful reproduction of
+*Investigating Warp Size Impact in GPUs* (Lashgar, Baniasadi, Khonsari 2012).
+
+Public API:
+    MachineConfig, machines.{baseline,sw_plus,lw_plus,paper_suite}
+    trace.get_workload / trace.BENCHMARKS
+    runner.run_one / run_suite / suite_summary
+"""
+
+from repro.core.warpsim.config import MachineConfig
+from repro.core.warpsim import machines, runner, trace
+from repro.core.warpsim.divergence import expand_workload, simd_efficiency
+from repro.core.warpsim.timing import SimResult, simulate
+
+__all__ = [
+    "MachineConfig", "machines", "runner", "trace",
+    "expand_workload", "simd_efficiency", "SimResult", "simulate",
+]

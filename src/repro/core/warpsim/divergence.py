@@ -1,0 +1,176 @@
+"""Reconvergence-stack divergence model and warp-op expansion.
+
+Walks a kernel program once over the *whole thread pool*, maintaining the
+active-thread mask exactly as an immediate-post-dominator reconvergence
+stack would (then-side executed, else-side executed, reconverge), and emits
+per-warp macro-ops:
+
+* SIMT machines: each side of a branch occupies full warp issue slots
+  (``count × warp_size/simd_width`` cycles) regardless of how few lanes are
+  active — that *is* the branch-divergence cost.
+* MIMD machines (LW+): issue occupancy is proportional to *active* threads
+  (``count × ceil(active/simd_width)``) — divergence costs nothing — but the
+  warp remains a single schedulable unit that synchronizes at every
+  macro-op boundary and waits for its slowest memory transaction, which is
+  exactly the warp-wide synchronization overhead the paper charges LW+ for.
+
+Branch outcomes and memory addresses are drawn once per *thread pool* from
+the workload seed, so every machine model (any warp size, SW+, LW+)
+executes the identical logical workload.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.warpsim import coalesce
+from repro.core.warpsim.config import MachineConfig
+from repro.core.warpsim.trace import (
+    Branch, Compute, Loop, Mem, Stmt, Workload, correlated_outcomes,
+)
+
+
+@dataclasses.dataclass
+class WarpOp:
+    """One schedulable macro-op of a warp."""
+
+    issue_cycles: int              # front-end occupancy
+    thread_insns: int              # executed thread-instructions (IPC)
+    lane_slots: int                # issued SIMD lane-slots (efficiency)
+    mem_blocks: Optional[np.ndarray] = None   # transaction block ids
+    mem_block_bytes: Optional[np.ndarray] = None  # touched bytes per txn
+    mem_thread_accesses: int = 0   # thread-level memory instructions
+    is_load: bool = True
+
+    @property
+    def is_mem(self) -> bool:
+        return self.mem_blocks is not None
+
+
+def expand_workload(
+    workload: Workload, cfg: MachineConfig
+) -> List[List[WarpOp]]:
+    """Expand a workload into per-warp macro-op streams for `cfg`."""
+    n = workload.n_threads
+    ws = cfg.warp_size
+    if n % ws:
+        raise ValueError(f"n_threads {n} not a multiple of warp size {ws}")
+    n_warps = n // ws
+    warp_of_thread = np.arange(n) // ws
+    ops: List[List[WarpOp]] = [[] for _ in range(n_warps)]
+    rng = np.random.default_rng(workload.seed)
+    uid = [0]  # per-statement-instance unique id for address bases
+
+    g_simt = cfg.issue_cycles_per_group
+
+    # LW+ warp fragments: once an MIMD warp splits at a branch, its
+    # fragments never re-converge (paper §4.2/§6.1 — "threads may never
+    # re-converge again"), so later memory accesses coalesce only within a
+    # fragment, not across the whole warp.
+    frag_id = np.zeros(n, dtype=np.int64)
+
+    def active_per_warp(mask: np.ndarray) -> np.ndarray:
+        return np.bincount(warp_of_thread[mask], minlength=n_warps)
+
+    def emit_compute(mask: np.ndarray, count: int) -> None:
+        act = active_per_warp(mask)
+        for w in np.nonzero(act)[0]:
+            a = int(act[w])
+            if cfg.mimd:
+                issue = count * int(np.ceil(a / cfg.simd_width))
+            else:
+                issue = count * g_simt
+            ops[w].append(WarpOp(
+                issue_cycles=issue,
+                thread_insns=count * a,
+                lane_slots=issue * cfg.simd_width,
+            ))
+
+    def emit_mem(mask: np.ndarray, stmt: Mem) -> None:
+        uid[0] += 1
+        addrs = coalesce.generate_addresses(stmt, uid[0], n, rng)
+        act = active_per_warp(mask)
+        for w in np.nonzero(act)[0]:
+            lo, hi = w * ws, (w + 1) * ws
+            m = mask[lo:hi]
+            warp_addrs = addrs[lo:hi][m]
+            if cfg.mimd:
+                # Coalesce per never-reconverging fragment.
+                frags = frag_id[lo:hi][m]
+                blocks_l, bytes_l = [], []
+                for f in np.unique(frags):
+                    b, by = coalesce.warp_transactions_bytes(
+                        warp_addrs[frags == f], cfg.transaction_bytes)
+                    blocks_l.append(b)
+                    bytes_l.append(by)
+                blocks = np.concatenate(blocks_l)
+                nbytes = np.concatenate(bytes_l)
+            else:
+                blocks, nbytes = coalesce.warp_transactions_bytes(
+                    warp_addrs, cfg.transaction_bytes)
+            a = int(act[w])
+            if cfg.mimd:
+                issue = int(np.ceil(a / cfg.simd_width))
+            else:
+                issue = g_simt
+            ops[w].append(WarpOp(
+                issue_cycles=issue,
+                thread_insns=a,
+                lane_slots=issue * cfg.simd_width,
+                mem_blocks=blocks,
+                mem_block_bytes=nbytes,
+                mem_thread_accesses=a,
+                is_load=stmt.is_load,
+            ))
+
+    def walk(stmts: Sequence[Stmt], mask: np.ndarray) -> None:
+        if not mask.any():
+            return
+        for s in stmts:
+            if isinstance(s, Compute):
+                emit_compute(mask, s.n)
+            elif isinstance(s, Mem):
+                emit_mem(mask, s)
+            elif isinstance(s, Loop):
+                for _ in range(s.trips):
+                    walk(s.body, mask)
+                    if cfg.mimd:
+                        # LW+ re-forms warps at loop boundaries (TBC/LWM-
+                        # style compaction); fragments persist only within
+                        # an iteration, which keeps the splitting penalty
+                        # where the paper observes it (in-branch accesses,
+                        # e.g. MP/MU).
+                        frag_id[mask] = 0
+            elif isinstance(s, Branch):
+                # The branch instruction itself.
+                emit_compute(mask, 1)
+                outcome = correlated_outcomes(rng, n, s.p_taken, s.corr)
+                if cfg.mimd:
+                    # Permanent fragment split (no reconvergence in LW+),
+                    # bounded at 4 fragments per warp (DWS-style splitting
+                    # hardware tracks a small number of warp splits).
+                    nf = np.zeros(n_warps, dtype=np.int64)
+                    for w in range(n_warps):
+                        nf[w] = len(np.unique(frag_id[w * ws:(w + 1) * ws]))
+                    can_split = (nf < 4)[warp_of_thread]
+                    upd = mask & can_split
+                    frag_id[upd] = frag_id[upd] * 2 + outcome[upd]
+                # Reconvergence stack: taken side, then not-taken side,
+                # reconverge at the immediate post-dominator (= here).
+                walk(s.then, mask & outcome)
+                walk(s.orelse, mask & ~outcome)
+            else:
+                raise TypeError(f"unknown stmt {type(s)}")
+
+    walk(workload.program, np.ones(n, dtype=bool))
+    return ops
+
+
+def simd_efficiency(ops: List[List[WarpOp]]) -> float:
+    """Useful thread-instructions per issued lane-slot."""
+    useful = sum(op.thread_insns for warp in ops for op in warp)
+    slots = sum(op.lane_slots for warp in ops for op in warp)
+    return useful / max(slots, 1)

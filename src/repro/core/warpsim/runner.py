@@ -1,0 +1,114 @@
+"""Benchmark x machine sweep driver with result caching."""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, Iterable, Mapping, Optional
+
+import numpy as np
+
+from repro.core.warpsim import machines as machines_mod
+from repro.core.warpsim.config import MachineConfig
+from repro.core.warpsim.divergence import expand_workload
+from repro.core.warpsim.timing import SimResult, simulate
+from repro.core.warpsim.trace import BENCHMARKS, get_workload
+
+
+def run_one(bench: str, cfg: MachineConfig, n_threads: Optional[int] = None,
+            seed: int = 0) -> SimResult:
+    wl = get_workload(bench, n_threads=n_threads, seed=seed)
+    ops = expand_workload(wl, cfg)
+    return simulate(wl.name, ops, cfg)
+
+
+def run_suite(
+    machine_set: Optional[Mapping[str, MachineConfig]] = None,
+    benches: Iterable[str] = BENCHMARKS,
+    n_threads: Optional[int] = None,
+    seed: int = 0,
+) -> Dict[str, Dict[str, SimResult]]:
+    """results[machine][bench] -> SimResult."""
+    machine_set = machine_set or machines_mod.paper_suite()
+    out: Dict[str, Dict[str, SimResult]] = {}
+    for mname, cfg in machine_set.items():
+        out[mname] = {}
+        for b in benches:
+            out[mname][b] = run_one(b, cfg, n_threads=n_threads, seed=seed)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Aggregation helpers (paper reports averages over the suite)
+# ---------------------------------------------------------------------------
+
+
+def geomean(xs: Iterable[float]) -> float:
+    xs = np.asarray(list(xs), dtype=np.float64)
+    return float(np.exp(np.mean(np.log(np.maximum(xs, 1e-12)))))
+
+
+def mean_ipc(results: Mapping[str, SimResult]) -> float:
+    return geomean(r.ipc for r in results.values())
+
+
+def mean_speedup(a: Mapping[str, SimResult], b: Mapping[str, SimResult]) -> float:
+    """Geomean over benchmarks of IPC(a)/IPC(b)."""
+    return geomean(a[k].ipc / b[k].ipc for k in a)
+
+
+def mean_coalescing_improvement(a: Mapping[str, SimResult],
+                                b: Mapping[str, SimResult]) -> float:
+    """Reduction of suite-mean requests-per-mem-insn of `a` vs `b`.
+
+    Paper Fig. 5 reports SW+ 'improves coalescing rate by 21%/30%' vs
+    32/64-thread warps — i.e. relative reduction of eq.(1).
+    """
+    ra = float(np.mean([r.coalescing_rate for r in a.values()]))
+    rb = float(np.mean([r.coalescing_rate for r in b.values()]))
+    return 1.0 - ra / max(rb, 1e-12)
+
+
+def mean_idle_reduction(a: Mapping[str, SimResult],
+                        b: Mapping[str, SimResult]) -> float:
+    """Reduction of the suite-mean idle-cycle share of `a` vs `b`."""
+    ia = float(np.mean([r.idle_share for r in a.values()]))
+    ib = float(np.mean([r.idle_share for r in b.values()]))
+    return 1.0 - ia / max(ib, 1e-12)
+
+
+def suite_summary(results: Mapping[str, Mapping[str, SimResult]]) -> dict:
+    """Headline numbers in the shape of the paper's claims."""
+    s = {}
+    if "SW+" in results and "LW+" in results:
+        s["swplus_over_lwplus"] = mean_speedup(results["SW+"], results["LW+"])
+    for w in (8, 16, 32, 64):
+        k = f"ws{w}"
+        if k in results:
+            if "SW+" in results:
+                s[f"swplus_over_{k}"] = mean_speedup(results["SW+"], results[k])
+            if "LW+" in results:
+                s[f"lwplus_over_{k}"] = mean_speedup(results["LW+"], results[k])
+    if "SW+" in results:
+        for w in (8, 16, 32):
+            k = f"ws{w}"
+            if k in results:
+                s[f"swplus_idle_reduction_vs_{k}"] = mean_idle_reduction(
+                    results["SW+"], results[k])
+        for w in (32, 64):
+            k = f"ws{w}"
+            if k in results:
+                s[f"swplus_coalescing_improvement_vs_{k}"] = (
+                    mean_coalescing_improvement(results["SW+"], results[k]))
+    return s
+
+
+def save_results(results: Mapping[str, Mapping[str, SimResult]],
+                 path: str) -> None:
+    blob = {m: {b: r.as_dict() for b, r in rb.items()}
+            for m, rb in results.items()}
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(blob, f, indent=1)
+    os.replace(tmp, path)

@@ -1,0 +1,191 @@
+"""Event-driven SM / DRAM timing model.
+
+Scheduling model (paper §2): each SM has one scheduler issuing ready warps
+back-to-back into a 24-stage, SIMD-wide pipeline. A warp's next macro-op
+becomes ready `pipeline_depth` cycles after its compute op is issued, or
+when its slowest memory transaction completes (memory divergence: all
+threads of the warp wait for the slowest — §1). Idle cycles are issue
+cycles in which no warp is ready (§3).
+
+The DRAM system is a set of memory controllers, each a bandwidth server
+(fixed access latency + per-64 B-transaction bus occupancy). SW+'s ideal
+coalescing merges read requests with in-flight requests to the same block
+across the whole SM via :class:`OutstandingTable`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import List
+
+from repro.core.warpsim.coalesce import L1Cache
+from repro.core.warpsim.config import MachineConfig
+from repro.core.warpsim.divergence import WarpOp, simd_efficiency
+
+
+@dataclasses.dataclass
+class SimResult:
+    name: str
+    machine: str
+    cycles: float
+    thread_insns: int
+    mem_insns: int                # thread-level memory instructions
+    offchip_requests: int         # DRAM transactions after all merging
+    merged_requests: int          # requests absorbed by ideal coalescing
+    l1_hits: int
+    idle_cycles: float
+    busy_cycles: float
+    simd_eff: float
+
+    @property
+    def ipc(self) -> float:
+        return self.thread_insns / max(self.cycles, 1.0)
+
+    @property
+    def coalescing_rate(self) -> float:
+        """Paper eq. (1): off-chip requests per memory instruction (lower
+        is better coalescing)."""
+        return self.offchip_requests / max(self.mem_insns, 1)
+
+    @property
+    def idle_share(self) -> float:
+        return self.idle_cycles / max(self.cycles, 1.0)
+
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d.update(ipc=self.ipc, coalescing_rate=self.coalescing_rate,
+                 idle_share=self.idle_share)
+        return d
+
+
+class DRAM:
+    """num_ctrls bandwidth servers with fixed access latency."""
+
+    def __init__(self, cfg: MachineConfig):
+        self.ctrl_free = [0.0] * cfg.num_mem_ctrls
+        self.latency = float(cfg.dram_latency_cycles)
+        self.svc = cfg.dram_cycles_per_transaction
+        self.n = cfg.num_mem_ctrls
+
+    def request(self, block: int, now: float, nbytes: int = 64) -> float:
+        c = int(block) % self.n
+        # Minimum 32 B burst: a scattered 4 B store still occupies half a
+        # transaction slot (GDDR burst granularity).
+        svc = self.svc * (max(nbytes, 32) / 64.0)
+        start = max(self.ctrl_free[c], now)
+        self.ctrl_free[c] = start + svc
+        return start + self.latency + svc
+
+
+def simulate(
+    name: str,
+    warp_ops: List[List[WarpOp]],
+    cfg: MachineConfig,
+) -> SimResult:
+    """Run the timing model over expanded per-warp op streams."""
+    n_warps = len(warp_ops)
+    n_sms = cfg.num_sms
+    dram = DRAM(cfg)
+    l1 = [L1Cache(cfg.l1_size_bytes, cfg.l1_ways, cfg.transaction_bytes)
+          for _ in range(n_sms)]
+    # SW+ ideal coalescing: unbounded per-SM outstanding-read table
+    # ("keeps track of outstanding memory requests of all threads", §4.1).
+    outstanding: List[dict] = [dict() for _ in range(n_sms)]
+
+    # Per-SM issue engine occupancy.
+    issue_free = [0.0] * n_sms
+    busy = [0.0] * n_sms
+    # Contiguous thread blocks stay on one SM (CTA assignment): warp w runs
+    # on SM w*n_sms//n_warps, so neighbor warps share an L1 like neighbor
+    # warps of a CTA do.
+    sm_of = [min(w * n_sms // max(n_warps, 1), n_sms - 1)
+             for w in range(n_warps)]
+    heap = [(0.0, w) for w in range(n_warps) if warp_ops[w]]
+    heapq.heapify(heap)
+    next_op = [0] * n_warps
+
+    thread_insns = 0
+    mem_insns = 0
+    offchip = 0
+    merged = 0
+    l1_hits = 0
+
+    while heap:
+        ready_t, w = heapq.heappop(heap)
+        sm = sm_of[w]
+        op = warp_ops[w][next_op[w]]
+        next_op[w] += 1
+
+        t_start = max(ready_t, issue_free[sm])
+        issue_free[sm] = t_start + op.issue_cycles
+        busy[sm] += op.issue_cycles
+        thread_insns += op.thread_insns
+
+        if op.is_mem:
+            mem_insns += op.mem_thread_accesses
+            t_acc = t_start + op.issue_cycles
+            done = t_acc + cfg.l1_hit_latency
+            if not op.is_load:
+                # Stores are fire-and-forget: they occupy DRAM bandwidth
+                # (partial-width transactions write only touched bytes) but
+                # the warp does not wait, and the L1 is write-evict (no
+                # allocation) per CC-2.0.
+                for block, nb in zip(op.mem_blocks, op.mem_block_bytes):
+                    dram.request(int(block), t_acc, int(nb))
+                    offchip += 1
+                warp_ready = done
+            else:
+                for block in op.mem_blocks:
+                    block = int(block)
+                    fill = l1[sm].lookup(block)
+                    if fill is not None and fill <= t_acc:
+                        l1_hits += 1                # filled line: plain hit
+                        continue
+                    if cfg.ideal_coalescing:
+                        out = outstanding[sm].get(block)
+                        if out is not None and out > t_acc:
+                            merged += 1             # SW+: merge, no new request
+                            done = max(done, out)
+                            continue
+                    elif fill is not None:
+                        # Line is pending and the baseline has no
+                        # cross-warp merging -> redundant request
+                        # (small-warp coalescing loss, paper §3).
+                        pass
+                    completion = dram.request(block, t_acc)
+                    offchip += 1
+                    l1[sm].fill(block, completion)
+                    if cfg.ideal_coalescing:
+                        outstanding[sm][block] = completion
+                        if len(outstanding[sm]) > 4096:
+                            outstanding[sm] = {
+                                b: t for b, t in outstanding[sm].items()
+                                if t > t_acc}
+                    done = max(done, completion)
+                warp_ready = done
+        else:
+            warp_ready = t_start + op.issue_cycles + cfg.pipeline_depth
+
+        if next_op[w] < len(warp_ops[w]):
+            heapq.heappush(heap, (warp_ready, w))
+
+    cycles = max(max(issue_free), 1.0)
+    total_busy = sum(busy)
+    # Idle share: fraction of scheduler slots with nothing to issue,
+    # averaged over SMs (paper Fig. 3).
+    idle = n_sms * cycles - total_busy
+
+    return SimResult(
+        name=name,
+        machine=cfg.name,
+        cycles=cycles,
+        thread_insns=thread_insns,
+        mem_insns=mem_insns,
+        offchip_requests=offchip,
+        merged_requests=merged,
+        l1_hits=l1_hits,
+        idle_cycles=idle / n_sms,
+        busy_cycles=total_busy / n_sms,
+        simd_eff=simd_efficiency(warp_ops),
+    )

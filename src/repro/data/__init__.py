@@ -1,0 +1,2 @@
+from repro.data.synthetic import DataConfig, SyntheticCorpus
+from repro.data.loader import PrefetchLoader

@@ -1,0 +1,57 @@
+"""Device-feeding data loader with background prefetch.
+
+Wraps a stateless corpus (``batch_at(step)``) with a double-buffered
+prefetch thread so host data generation overlaps device compute. Restart
+semantics stay trivial: the loader's only state is the step counter, which
+the training checkpoint already stores.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Optional
+
+import jax
+
+
+class PrefetchLoader:
+    def __init__(self, batch_fn: Callable[[int], dict], start_step: int = 0,
+                 prefetch: int = 2, sharding=None):
+        self._batch_fn = batch_fn
+        self._sharding = sharding
+        self._q: queue.Queue = queue.Queue(maxsize=prefetch)
+        self._step = start_step
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def _put_device(self, batch: dict):
+        if self._sharding is not None:
+            batch = jax.device_put(batch, self._sharding)
+        return batch
+
+    def _run(self) -> None:
+        step = self._step
+        while not self._stop.is_set():
+            try:
+                self._q.put((step, self._batch_fn(step)), timeout=0.2)
+                step += 1
+            except queue.Full:
+                continue
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        step, batch = self._q.get()
+        return step, self._put_device(batch)
+
+    def close(self) -> None:
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+        self._thread.join(timeout=2.0)

@@ -1,0 +1,62 @@
+"""Row-gather/scatter Pallas kernel — the SW+ "dynamic coalescing" pass.
+
+Reorders token rows into the expert-sorted, block-aligned layout:
+``out[dest[i]] = x[src[i]]``. On TPU the win of sorting first is that each
+destination block is written as one contiguous VMEM->HBM store and the
+source rows of one expert group arrive in ascending order, so the DMA
+engine coalesces them into long strides — the software analogue of the
+paper's ideal coalescing hardware (DESIGN.md §2).
+
+Kernel strategy: grid over destination row-blocks; the per-block source row
+ids are scalar-prefetched; rows are copied with a `fori_loop` of dynamic
+row reads from the (VMEM-resident) source tile. The ops-layer wrapper falls
+back to an XLA gather when `x` exceeds the VMEM budget.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Keep whole-x-in-VMEM only below this size (bytes); above it the ops
+# wrapper uses the XLA gather path.
+VMEM_BYTES_BUDGET = 8 * 1024 * 1024
+
+
+def _gather_kernel(row_src_ref, row_valid_ref, x_ref, o_ref, *, bm: int):
+    blk = pl.program_id(0)
+
+    def body(i, _):
+        src = row_src_ref[blk * bm + i]
+        valid = row_valid_ref[blk * bm + i]
+        row = x_ref[src, :].astype(o_ref.dtype)
+        o_ref[i, :] = jnp.where(valid > 0, row, jnp.zeros_like(row))
+        return 0
+
+    jax.lax.fori_loop(0, bm, body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("t_pad", "bm", "interpret"))
+def gather_rows(x: jax.Array, row_src: jax.Array, row_valid: jax.Array,
+                t_pad: int, bm: int = 128, interpret: bool = True
+                ) -> jax.Array:
+    """out[j] = x[row_src[j]] if row_valid[j] else 0, j in [0, t_pad)."""
+    t, d = x.shape
+    assert t_pad % bm == 0
+    grid = (t_pad // bm,)
+    return pl.pallas_call(
+        functools.partial(_gather_kernel, bm=bm),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[pl.BlockSpec((t, d), lambda i, s, v: (0, 0))],
+            out_specs=pl.BlockSpec((bm, d), lambda i, s, v: (i, 0)),
+            scratch_shapes=[],
+        ),
+        out_shape=jax.ShapeDtypeStruct((t_pad, d), x.dtype),
+        interpret=interpret,
+    )(row_src.astype(jnp.int32), row_valid.astype(jnp.int32), x)

@@ -1,0 +1,97 @@
+"""Flash attention Pallas kernel with configurable (BQ, BKV) tile
+granularity — the TPU warp-size knob for dense attention (DESIGN.md §2).
+
+Layout: q, k, v are (BH, S, hd) with batch*heads flattened (GQA expansion
+happens in the ops wrapper). Grid = (BH, Sq/BQ, Sk/BKV) with the KV axis
+innermost; online-softmax statistics (m, l) and the output accumulator live
+in VMEM scratch and persist across the KV grid steps. Causal masking skips
+fully-masked KV blocks via `pl.when` (no FLOPs spent above the diagonal at
+block granularity).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0e38
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                  *, bq: int, bkv: int, scale: float, causal: bool):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Causal block skip: KV block strictly above the diagonal.
+    run = (not causal) or True
+    should_run = jnp.logical_or(
+        jnp.logical_not(causal), ki * bkv <= qi * bq + (bq - 1))
+
+    @pl.when(should_run)
+    def _step():
+        q = q_ref[0].astype(jnp.float32) * scale           # (BQ, hd)
+        k = k_ref[0].astype(jnp.float32)                   # (BKV, hd)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)
+        if causal:
+            qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+            kpos = ki * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(-1, keepdims=True)
+        v = v_ref[0].astype(jnp.float32)
+        acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == pl.num_programs(2) - 1)
+    def _flush():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "bq", "bkv", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, bq: int = 128, bkv: int = 128,
+                    interpret: bool = True) -> jax.Array:
+    """q, k, v: (BH, S, hd) -> (BH, S, hd)."""
+    bh, sq, hd = q.shape
+    sk = k.shape[1]
+    bq = min(bq, sq)
+    bkv = min(bkv, sk)
+    assert sq % bq == 0 and sk % bkv == 0, (sq, bq, sk, bkv)
+    scale = 1.0 / (hd ** 0.5)
+    grid = (bh, sq // bq, sk // bkv)
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, bq=bq, bkv=bkv, scale=scale,
+                          causal=causal),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bkv, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bkv, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        out_shape=jax.ShapeDtypeStruct((bh, sq, hd), q.dtype),
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+    )(q, k, v)

@@ -1,0 +1,77 @@
+"""Grouped matmul Pallas kernel (megablox-lite) for SW+ sort-compact MoE.
+
+Computes ``out[i] = x[i] @ w[g(i)]`` where rows are laid out in expert-
+sorted, BM-aligned groups: every BM-row block belongs to exactly one expert,
+identified by the scalar-prefetched ``block_expert`` map. The weight
+BlockSpec's index_map reads that map, so each grid step DMAs exactly one
+(BK, BN) tile of the right expert's weights into VMEM — this is the
+"coalesced" small-granularity execution path of DESIGN.md §2.
+
+Grid: (M/BM, N/BN, K/BK), K innermost, fp32 VMEM accumulator.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gmm_kernel(block_expert_ref, x_ref, w_ref, o_ref, acc_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        w_ref[0].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def gmm(x: jax.Array, w: jax.Array, block_expert: jax.Array,
+        bm: int = 128, bn: int = 128, bk: int = 128,
+        interpret: bool = True) -> jax.Array:
+    """x: (M, K); w: (E, K, N); block_expert: (M//bm,) int32 -> (M, N)."""
+    m, k = x.shape
+    e, kw, n = w.shape
+    assert k == kw, (x.shape, w.shape)
+    assert m % bm == 0, f"M={m} must be a multiple of bm={bm}"
+    bn = min(bn, n)
+    bk = min(bk, k)
+    # Pad K / N up to tile multiples (zeros contribute nothing).
+    kp = (k + bk - 1) // bk * bk
+    np_ = (n + bn - 1) // bn * bn
+    if kp != k:
+        x = jnp.pad(x, ((0, 0), (0, kp - k)))
+        w = jnp.pad(w, ((0, 0), (0, kp - k), (0, 0)))
+    if np_ != n:
+        w = jnp.pad(w, ((0, 0), (0, 0), (0, np_ - n)))
+
+    grid = (m // bm, np_ // bn, kp // bk)
+    out = pl.pallas_call(
+        _gmm_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bm, bk), lambda i, j, l, be: (i, l)),
+                pl.BlockSpec((1, bk, bn), lambda i, j, l, be: (be[i], l, j)),
+            ],
+            out_specs=pl.BlockSpec((bm, bn), lambda i, j, l, be: (i, j)),
+            scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((m, np_), x.dtype),
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+    )(block_expert.astype(jnp.int32), x, w)
+    return out[:, :n]

@@ -1,0 +1,69 @@
+"""Jit'd dispatch wrappers for the Pallas kernels.
+
+On CPU (this container) kernels run in ``interpret=True`` mode — the kernel
+body executes in Python for correctness validation. On a real TPU backend
+the same ``pallas_call`` compiles to Mosaic. The wrappers also apply
+alignment padding and fall back to XLA implementations where a kernel has a
+documented applicability bound (``coalesced_gather``'s VMEM budget).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import coalesced_gather as _gather_k
+from repro.kernels import flash_attention as _flash_k
+from repro.kernels import moe_gmm as _gmm_k
+from repro.kernels import ref as _ref
+from repro.kernels import ssd_scan as _ssd_k
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def moe_gmm(x: jax.Array, w: jax.Array, block_expert: jax.Array,
+            block: int = 128) -> jax.Array:
+    """Grouped matmul over BM-aligned expert groups."""
+    return _gmm_k.gmm(x, w, block_expert, bm=block,
+                      interpret=_interpret())
+
+
+def coalesced_gather(x: jax.Array, src: jax.Array, dest: jax.Array,
+                     t_pad: int, block: int = 128) -> jax.Array:
+    """out[dest[i]] = x[src[i]]; rows of `out` not hit by `dest` are zero.
+
+    Uses the Pallas row-gather when x fits the VMEM budget, else an XLA
+    gather+scatter (same semantics).
+    """
+    t, d = x.shape
+    if (t * d * x.dtype.itemsize <= _gather_k.VMEM_BYTES_BUDGET
+            and t_pad % block == 0):
+        # Build per-destination-row source map (valid where a source exists).
+        row_src = jnp.zeros((t_pad,), jnp.int32).at[dest].set(
+            src.astype(jnp.int32))
+        row_valid = jnp.zeros((t_pad,), jnp.int32).at[dest].set(1)
+        return _gather_k.gather_rows(x, row_src, row_valid, t_pad, bm=block,
+                                     interpret=_interpret())
+    out = jnp.zeros((t_pad, d), x.dtype)
+    return out.at[dest].set(x[src])
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, bq: int = 128,
+                    bkv: int = 128) -> jax.Array:
+    """(BH, S, hd) flash attention with (BQ, BKV) tile granularity."""
+    return _flash_k.flash_attention(q, k, v, causal=causal, bq=bq, bkv=bkv,
+                                    interpret=_interpret())
+
+
+def ssd_scan(xdt: jax.Array, da: jax.Array, b: jax.Array, c: jax.Array,
+             chunk: int = 128) -> jax.Array:
+    """Mamba2 SSD chunked scan; state carried in VMEM across grid steps."""
+    return _ssd_k.ssd_scan_kernel(xdt, da, b, c, chunk=chunk,
+                                  interpret=_interpret())
+
+
+# Re-export oracles for convenience in tests/benchmarks.
+ref = _ref

@@ -1,0 +1,66 @@
+"""Pure-jnp oracles for every Pallas kernel (used by the allclose tests)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gmm_ref(x: jax.Array, w: jax.Array, block_expert: jax.Array,
+            bm: int) -> jax.Array:
+    """out[i] = x[i] @ w[block_expert[i // bm]]."""
+    m = x.shape[0]
+    row_expert = jnp.repeat(block_expert, bm, total_repeat_length=m)
+    wg = w[row_expert]                      # (M, K, N) gathered
+    return jnp.einsum("mk,mkn->mn", x.astype(jnp.float32),
+                      wg.astype(jnp.float32)).astype(x.dtype)
+
+
+def gather_rows_ref(x: jax.Array, row_src: jax.Array, row_valid: jax.Array,
+                    t_pad: int) -> jax.Array:
+    out = x[row_src]
+    out = jnp.where(row_valid[:, None] > 0, out, 0).astype(x.dtype)
+    return out
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool = True) -> jax.Array:
+    """q, k, v: (BH, S, hd)."""
+    hd = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / (hd ** 0.5)
+    if causal:
+        sq, sk = s.shape[-2:]
+        mask = jnp.arange(sq)[:, None] >= jnp.arange(sk)[None, :]
+        s = jnp.where(mask[None], s, -2.0e38)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_chunk_ref(x, dt, a_log, b, c, d_skip, chunk):
+    """Sequential (non-chunked) SSD recurrence oracle.
+
+    x: (B,S,nh,P); dt raw (B,S,nh); b,c: (B,S,nh,N). fp32 scan over S.
+    """
+    bsz, s, nh, p = x.shape
+    n = b.shape[-1]
+    dtf = jax.nn.softplus(dt.astype(jnp.float32))
+    decay = jnp.exp(dtf * (-jnp.exp(a_log))[None, None, :])
+
+    def step(h, t):
+        xt, bt, ct, dct, dtt = t
+        h = h * dct[..., None, None] + jnp.einsum(
+            "bhp,bhn->bhpn", xt * dtt[..., None], bt)
+        y = jnp.einsum("bhn,bhpn->bhp", ct, h)
+        return h, y
+
+    xs = (x.astype(jnp.float32).transpose(1, 0, 2, 3),
+          b.astype(jnp.float32).transpose(1, 0, 2, 3),
+          c.astype(jnp.float32).transpose(1, 0, 2, 3),
+          decay.transpose(1, 0, 2),
+          dtf.transpose(1, 0, 2))
+    h0 = jnp.zeros((bsz, nh, p, n), jnp.float32)
+    h_last, ys = jax.lax.scan(step, h0, xs)
+    y = ys.transpose(1, 0, 2, 3) + x.astype(jnp.float32) * d_skip[None, None, :, None]
+    return y.astype(x.dtype), h_last

@@ -1,0 +1,168 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this produces:
+  * proof the sharded program compiles (SPMD partitioning succeeds),
+  * compiled.memory_analysis()  — argument/output/temp bytes,
+  * compiled.cost_analysis()    — XLA's (while-undercounted) flops/bytes,
+  * our while-corrected HLO analysis (flops / bytes / collective bytes),
+  * the three-term roofline row (EXPERIMENTS.md §Roofline).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                  # all cells
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh multi     # 2x16x16 only
+
+Results are appended incrementally to benchmarks/results/dryrun.json so an
+interrupted sweep resumes where it left off (--force recompiles).
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import get_config, list_archs, runnable_shapes
+from repro.launch import steps as steps_lib
+from repro.launch.mesh import make_production_mesh
+from repro.models.config import get_shape
+from repro.roofline import hlo_analysis
+from repro.roofline.report import Roofline, model_flops, structural_memory_bytes
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "benchmarks", "results", "dryrun.json")
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             layout: str = "tp", kv_dtype: str = "model") -> dict:
+    import dataclasses as _dc
+    cfg = get_config(arch)
+    if kv_dtype != "model":
+        cfg = _dc.replace(cfg, kv_cache_dtype=kv_dtype)
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    chips = mesh.devices.size
+
+    t0 = time.time()
+    fn, args, in_sh, out_sh = steps_lib.build_step(cfg, shape, mesh,
+                                                   layout=layout)
+    with mesh:
+        lowered = jax.jit(fn, in_shardings=in_sh,
+                          out_shardings=out_sh).lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    txt = compiled.as_text()
+    stats = hlo_analysis.analyze(txt)
+    mf = model_flops(cfg, shape, shape.kind)
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    mem_model = structural_memory_bytes(cfg, shape, shape.kind, mesh_shape)
+    roof = Roofline(
+        arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
+        flops_per_device=stats.flops,
+        bytes_per_device=stats.bytes_accessed,
+        collective_bytes_per_device=stats.total_collective_bytes,
+        collective_breakdown=dict(stats.collective_bytes),
+        model_flops_total=mf,
+        memory_model_bytes=mem_model,
+    )
+    row = {
+        "status": "ok",
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "temp_bytes_per_device": ma.temp_size_in_bytes / chips,
+        },
+        "xla_cost_analysis": {
+            "flops_uncorrected": ca.get("flops"),
+            "bytes_uncorrected": ca.get("bytes accessed"),
+        },
+        "hlo_dot_count": stats.dot_count,
+        "roofline": roof.row(),
+    }
+    return row
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=list_archs() + [None])
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--layout", default="tp", choices=["tp", "fsdp", "swep"])
+    ap.add_argument("--kv-dtype", default="model", choices=["model", "int8"])
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default=RESULTS)
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list_archs()
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    results = {}
+    if os.path.exists(args.out) and not args.force:
+        with open(args.out) as f:
+            results = json.load(f)
+
+    for arch in archs:
+        shapes = ([args.shape] if args.shape else runnable_shapes(arch))
+        all_shapes = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+        for shape_name in (all_shapes if not args.shape else shapes):
+            for multi in meshes:
+                mesh_name = "pod2x16x16" if multi else "pod16x16"
+                key = f"{arch}|{shape_name}|{mesh_name}"
+                if args.layout != "tp":
+                    key += f"|{args.layout}"
+                if args.kv_dtype != "model":
+                    key += f"|kv-{args.kv_dtype}"
+                if shape_name not in shapes:
+                    results[key] = {"status": "skipped(full-attention)",
+                                    "reason": "no sub-quadratic mode "
+                                              "(DESIGN.md §5)"}
+                    continue
+                if key in results and results[key].get("status") == "ok" \
+                        and not args.force:
+                    print(f"[cached] {key}")
+                    continue
+                print(f"[dryrun] {key} ...", flush=True)
+                try:
+                    row = run_cell(arch, shape_name, multi, args.layout,
+                                   args.kv_dtype)
+                    r = row["roofline"]
+                    print(f"  ok: compile={row['compile_s']}s "
+                          f"compute={r['compute_s']:.4f}s "
+                          f"memory={r['memory_s']:.4f}s "
+                          f"coll={r['collective_s']:.4f}s "
+                          f"dominant={r['dominant']} "
+                          f"useful={r['useful_flops_ratio']:.3f}", flush=True)
+                except Exception as e:  # noqa: BLE001 — record and continue
+                    row = {"status": "error", "error": repr(e),
+                           "trace": traceback.format_exc()[-2000:]}
+                    print(f"  ERROR: {e!r}", flush=True)
+                results[key] = row
+                tmp = args.out + ".tmp"
+                with open(tmp, "w") as f:
+                    json.dump(results, f, indent=1)
+                os.replace(tmp, args.out)
+
+    n_ok = sum(1 for v in results.values() if v.get("status") == "ok")
+    n_skip = sum(1 for v in results.values()
+                 if str(v.get("status", "")).startswith("skipped"))
+    n_err = sum(1 for v in results.values() if v.get("status") == "error")
+    print(f"\ndone: {n_ok} ok, {n_skip} skipped, {n_err} errors "
+          f"-> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this
+module never touches jax device state — the dry-run sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before any jax
+import and only then builds meshes.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    """16x16 single pod (256 chips) or 2x16x16 two-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    ndev = int(np.prod(shape))
+    devices = jax.devices()[:ndev]
+    if len(devices) < ndev:
+        raise RuntimeError(
+            f"need {ndev} devices for mesh {shape}, have {len(jax.devices())} "
+            "(set XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
+            "importing jax for the dry-run)")
+    dev_array = np.asarray(devices).reshape(shape)
+    return jax.sharding.Mesh(dev_array, axes)
+
+
+def make_host_mesh(model_parallel: int = 1) -> jax.sharding.Mesh:
+    """Small mesh over the actually-available devices (tests, examples)."""
+    n = len(jax.devices())
+    dp = n // model_parallel
+    dev = np.asarray(jax.devices()[: dp * model_parallel]).reshape(
+        (dp, model_parallel))
+    return jax.sharding.Mesh(dev, ("data", "model"))

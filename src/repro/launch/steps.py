@@ -1,0 +1,153 @@
+"""Step-function builders shared by dryrun / train / serve.
+
+Builds jit-able closures for the three step kinds with their input
+ShapeDtypeStructs and in/out shardings, per (arch config x shape x mesh).
+No device allocation happens here — state/cache structures come from
+``jax.eval_shape``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro import sharding
+from repro.models import model as model_lib
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.optim import adamw
+
+
+def batch_struct(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Training/prefill input ShapeDtypeStructs for one global batch."""
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.frontend in ("audio", "vlm"):
+        return {
+            "input_embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model),
+                                                 jnp.bfloat16),
+            "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        }
+    return {
+        "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+    }
+
+
+def state_struct(cfg: ModelConfig) -> Dict[str, Any]:
+    params = jax.eval_shape(
+        lambda: model_lib.init_params(jax.random.PRNGKey(0), cfg))
+    opt = jax.eval_shape(lambda: adamw.init(
+        jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), params)))
+    return {"params": params, "opt": opt}
+
+
+def cache_struct(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    return jax.eval_shape(lambda: model_lib.init_decode_cache(
+        cfg, shape.global_batch, shape.seq_len))
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig, sharder):
+    def train_step(state, batch):
+        def loss_fn(params):
+            return model_lib.train_loss(params, cfg, batch, sharder)
+
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state["params"])
+        new_params, new_opt, info = adamw.apply(
+            opt_cfg, grads, state["opt"], state["params"])
+        metrics = dict(metrics, loss=loss, **info)
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, max_len: int, sharder):
+    def prefill_step(params, batch):
+        return model_lib.prefill(params, cfg, batch, max_len, sharder)
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, sharder):
+    def serve_step(params, tokens, cache):
+        return model_lib.decode_step(params, cfg, tokens, cache, sharder)
+    return serve_step
+
+
+def build_step(cfg: ModelConfig, shape: ShapeConfig, mesh,
+               opt_cfg: adamw.AdamWConfig | None = None,
+               layout: str = "tp"):
+    """Returns (fn, example_args, in_shardings, out_shardings).
+
+    layout: "tp" (Megatron TP x FSDP) | "fsdp" (pure ZeRO-3) |
+            "swep" (TP with shard_map expert-parallel SW+ MoE dispatch).
+    """
+    import dataclasses as _dc
+
+    from repro.core import granularity
+
+    opt_cfg = opt_cfg or adamw.AdamWConfig()
+    if layout == "swep":
+        cfg = _dc.replace(cfg, moe_dispatch="sw_plus_ep")
+    if layout == "fsdp":
+        # both axes act as data parallel when the batch divides them
+        dp_all = tuple(a for a in ("pod", "data", "model")
+                       if a in mesh.axis_names)
+        n = 1
+        for a in dp_all:
+            n *= mesh.shape[a]
+        dp = dp_all if shape.global_batch % n == 0 else             sharding.data_axes(mesh, shape.global_batch)
+    else:
+        dp = sharding.data_axes(mesh, shape.global_batch)
+    sharder = sharding.make_sharder(mesh, dp, layout)
+    granularity.set_mesh(mesh, dp)
+
+    if shape.kind == "train":
+        st = state_struct(cfg)
+        bt = batch_struct(cfg, shape)
+        pspec = sharding.param_specs(st["params"], layout)
+        opt_spec = {"m": pspec, "v": pspec, "step": P()}
+        state_spec = {"params": pspec, "opt": opt_spec}
+        in_sh = (sharding.to_named(mesh, state_spec),
+                 sharding.to_named(mesh, sharding.batch_specs(bt, dp)))
+        metric_spec = jax.tree.map(
+            lambda _: jax.sharding.NamedSharding(mesh, P()),
+            {"loss": 0, "ce": 0, "aux": 0, "tokens": 0, "grad_norm": 0,
+             "lr": 0})
+        out_sh = (in_sh[0], metric_spec)
+        fn = make_train_step(cfg, opt_cfg, sharder)
+        return fn, (st, bt), in_sh, out_sh
+
+    params = state_struct(cfg)["params"]
+    pspec = sharding.param_specs(params, layout)
+    p_sh = sharding.to_named(mesh, pspec)
+    logits_sh = jax.sharding.NamedSharding(
+        mesh, P(dp, None) if layout == "fsdp" else P(dp, "model"))
+
+    if shape.kind == "prefill":
+        bt = {k: v for k, v in batch_struct(cfg, shape).items()
+              if k != "labels"}
+        cache = cache_struct(cfg, shape)
+        cache_sh = sharding.to_named(
+            mesh, sharding.cache_specs(cache, dp))
+        in_sh = (p_sh, sharding.to_named(mesh, sharding.batch_specs(bt, dp)))
+        out_sh = (logits_sh, cache_sh)
+        fn = make_prefill_step(cfg, shape.seq_len, sharder)
+        return fn, (params, bt), in_sh, out_sh
+
+    # decode: one new token with a seq_len-deep cache
+    cache = cache_struct(cfg, shape)
+    cache_sh = sharding.to_named(mesh, sharding.cache_specs(cache, dp))
+    if cfg.frontend in ("audio", "vlm"):
+        tok = jax.ShapeDtypeStruct((shape.global_batch, 1, cfg.d_model),
+                                   jnp.bfloat16)
+        tok_sh = jax.sharding.NamedSharding(mesh, P(dp, None, None))
+    else:
+        tok = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+        tok_sh = jax.sharding.NamedSharding(mesh, P(dp, None))
+    in_sh = (p_sh, tok_sh, cache_sh)
+    out_sh = (logits_sh, cache_sh)
+    fn = make_serve_step(cfg, sharder)
+    return fn, (params, tok, cache), in_sh, out_sh

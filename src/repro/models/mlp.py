@@ -1,0 +1,32 @@
+"""Dense MLP: SwiGLU (llama-family) or GELU."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.config import ModelConfig
+
+
+def mlp_init(key: jax.Array, cfg: ModelConfig, dtype,
+             d_ff: int | None = None) -> dict:
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    ks = common.split_keys(key, 3)
+    p = {
+        "w1": common.dense_init(ks[0], (d, ff), d, dtype),
+        "w2": common.dense_init(ks[1], (ff, d), ff, dtype),
+    }
+    if cfg.act == "swiglu":
+        p["w3"] = common.dense_init(ks[2], (d, ff), d, dtype)
+    return p
+
+
+def mlp(params: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """x: (..., D) -> (..., D)."""
+    h = jnp.einsum("...d,df->...f", x, params["w1"])
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(h) * jnp.einsum("...d,df->...f", x, params["w3"])
+    else:
+        h = jax.nn.gelu(h)
+    return jnp.einsum("...f,fd->...d", h, params["w2"])

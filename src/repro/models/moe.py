@@ -1,0 +1,221 @@
+"""Mixture-of-Experts layer with the paper's two dispatch strategies.
+
+This is the TPU integration of the warp-size study (DESIGN.md §2): expert
+routing is the "divergence" of an LM workload, and the dispatch strategy is
+the granularity/coalescing choice:
+
+* ``lw_plus`` — *padded-dense dispatch* (large-warp analogue): tokens are
+  scattered into fixed-capacity per-expert buffers ``(E, C, D)``; every
+  expert tile is dense and perfectly "coalesced", but pad slots and dropped
+  tokens are the masked-lane (divergence) waste, and all tokens synchronize
+  through the capacity barrier. Shards cleanly: experts over the ``model``
+  mesh axis (EP), scatter/gather become all-to-alls under SPMD.
+
+* ``sw_plus`` — *sort–compact dispatch* (small-warp + ideal-coalescing
+  analogue): tokens are sorted by expert (the *dynamic coalescing* pass),
+  each expert reads a contiguous token block (no pad compute beyond tile
+  alignment), and expert matmuls run as a grouped matmul
+  (``repro.kernels.moe_gmm`` Pallas kernel, BM-aligned groups).
+
+Both strategies compute the same function (up to capacity drops); tests
+assert equivalence against the dense oracle.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common, mlp as mlp_mod
+from repro.models.config import ModelConfig
+
+NEG_INF = -1.0e9
+
+
+def moe_init(key: jax.Array, cfg: ModelConfig, dtype) -> dict:
+    d, f = cfg.d_model, cfg.moe_d_ff
+    e = cfg.moe_experts_eff
+    ks = common.split_keys(key, 5)
+    p = {
+        "router": common.dense_init(ks[0], (d, e), d, jnp.float32),
+        "w1": common.dense_init(ks[1], (e, d, f), d, dtype),
+        "w3": common.dense_init(ks[2], (e, d, f), d, dtype),
+        "w2": common.dense_init(ks[3], (e, f, d), f, dtype),
+    }
+    if cfg.moe_shared:
+        p["shared"] = mlp_mod.mlp_init(
+            ks[4], cfg, dtype, d_ff=cfg.moe_shared * f)
+    return p
+
+
+def router_probs(params: dict, x: jax.Array, cfg: ModelConfig):
+    """x: (T, D) -> top-k (weights (T,k), experts (T,k)), aux loss scalar."""
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32), params["router"])
+    # Pad experts never win routing.
+    pad = jnp.arange(cfg.moe_experts_eff) >= cfg.moe_experts
+    logits = jnp.where(pad[None, :], NEG_INF, logits)
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, idx = jax.lax.top_k(probs, cfg.moe_top_k)
+    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)   # renormalize
+    # Load-balance aux loss (Switch-style): E * sum_e f_e * p_e.
+    e = cfg.moe_experts_eff
+    assign = jax.nn.one_hot(idx[:, 0], e, dtype=jnp.float32)
+    frac = assign.mean(0)
+    mean_p = probs.mean(0)
+    aux = e * jnp.sum(frac * mean_p)
+    return w, idx, aux
+
+
+# ---------------------------------------------------------------------------
+# LW+ dispatch: padded-dense, fixed capacity (EP-shardable)
+# ---------------------------------------------------------------------------
+
+
+def capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    c = int(n_tokens * cfg.moe_top_k * cfg.moe_capacity_factor
+            / max(cfg.moe_experts, 1))
+    return max(8, (c + 7) // 8 * 8)
+
+
+def dispatch_lw_plus(params: dict, x: jax.Array, cfg: ModelConfig,
+                     sharder=None) -> Tuple[jax.Array, jax.Array]:
+    """x: (T, D) -> (y (T, D), aux)."""
+    t, d = x.shape
+    e, f = cfg.moe_experts_eff, cfg.moe_d_ff
+    k = cfg.moe_top_k
+    w, idx, aux = router_probs(params, x, cfg)
+
+    cap = capacity(cfg, t)
+    flat_e = idx.reshape(-1)                               # (T*k,)
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)    # (T*k, E)
+    pos = jnp.cumsum(onehot, axis=0) - 1                   # position in expert
+    pos = jnp.sum(pos * onehot, axis=-1)                   # (T*k,)
+    keep = pos < cap                                       # drop overflow
+    pos_c = jnp.where(keep, pos, 0)
+
+    xk = jnp.repeat(x[:, None, :], k, axis=1).reshape(-1, d)
+    contrib = jnp.where(keep[:, None], xk, 0)
+    expert_in = jnp.zeros((e, cap, d), x.dtype)
+    expert_in = expert_in.at[flat_e, pos_c].add(contrib)
+    if sharder is not None:
+        expert_in = sharder("expert_in", expert_in)
+
+    h = jnp.einsum("ecd,edf->ecf", expert_in, params["w1"])
+    h = jax.nn.silu(h) * jnp.einsum("ecd,edf->ecf", expert_in, params["w3"])
+    out = jnp.einsum("ecf,efd->ecd", h, params["w2"])
+    if sharder is not None:
+        out = sharder("expert_in", out)
+
+    gathered = out[flat_e, pos_c]                          # (T*k, D)
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    y = jnp.sum(gathered.reshape(t, k, d)
+                * w[..., None].astype(x.dtype), axis=1)
+    return y, aux
+
+
+# ---------------------------------------------------------------------------
+# SW+ dispatch: sort-compact + grouped matmul (Pallas)
+# ---------------------------------------------------------------------------
+
+
+def sort_by_expert(idx: jax.Array, n_experts: int, block: int):
+    """Token-expert assignments -> BM-aligned compact layout.
+
+    idx: (T, k) expert ids. Returns (all in *sorted assignment* space):
+      order        (T*k,)       assignment index of each sorted slot
+      dest         (T*k,)       padded-layout row of each sorted slot
+      block_expert (T_pad/BM,)  expert owning each row-block
+      t_pad        static padded row count (upper bound)
+
+    Each expert's group is padded to a multiple of `block`, so every
+    row-block belongs to exactly one expert — the grouped-matmul kernel
+    reads `block_expert` via scalar prefetch to pick its weight tile.
+    """
+    tk = idx.size
+    flat_e = idx.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]                               # nondecreasing
+    sizes = jnp.bincount(flat_e, length=n_experts)
+    starts = jnp.concatenate([jnp.zeros((1,), sizes.dtype),
+                              jnp.cumsum(sizes)[:-1]])
+    padded = ((sizes + block - 1) // block) * block
+    grp_start = jnp.concatenate([jnp.zeros((1,), padded.dtype),
+                                 jnp.cumsum(padded)[:-1]])
+    rank = jnp.arange(tk, dtype=jnp.int32) - starts[sorted_e].astype(jnp.int32)
+    dest = grp_start[sorted_e].astype(jnp.int32) + rank
+    t_pad = tk + n_experts * (block - 1)                   # static upper bound
+    t_pad = ((t_pad + block - 1) // block) * block
+    row_block = jnp.arange(t_pad // block, dtype=jnp.int32) * block
+    block_expert = jnp.searchsorted(jnp.cumsum(padded), row_block,
+                                    side="right").astype(jnp.int32)
+    block_expert = jnp.minimum(block_expert, n_experts - 1)
+    return order, dest, block_expert, t_pad
+
+
+def dispatch_sw_plus(params: dict, x: jax.Array, cfg: ModelConfig,
+                     block: int = 128) -> Tuple[jax.Array, jax.Array]:
+    """Sort-compact dispatch. x: (T, D) -> (y (T, D), aux).
+
+    Single-device execution path (the EP-sharded variant is built in
+    repro/core/granularity.py on top of shard_map).
+    """
+    from repro.kernels import ops as kernel_ops   # lazy: avoid import cycle
+
+    t, d = x.shape
+    e = cfg.moe_experts_eff
+    k = cfg.moe_top_k
+    w, idx, aux = router_probs(params, x, cfg)
+
+    order, dest, block_expert, t_pad = sort_by_expert(idx, e, block)
+    token_src = order // k                                 # source token rows
+    # Dynamic coalescing: gather token rows into expert-contiguous layout.
+    x_sorted = kernel_ops.coalesced_gather(x, token_src, dest, t_pad,
+                                           block=block)
+
+    h1 = kernel_ops.moe_gmm(x_sorted, params["w1"], block_expert, block)
+    h3 = kernel_ops.moe_gmm(x_sorted, params["w3"], block_expert, block)
+    h = jax.nn.silu(h1) * h3
+    out = kernel_ops.moe_gmm(h, params["w2"], block_expert, block)  # (T_pad, D)
+
+    flat_w = w.reshape(-1).astype(x.dtype)
+    y = jnp.zeros((t, d), x.dtype).at[token_src].add(
+        out[dest] * flat_w[order][:, None])
+    return y, aux
+
+
+# ---------------------------------------------------------------------------
+# Dense oracle (tests) + layer entry point
+# ---------------------------------------------------------------------------
+
+
+def dispatch_dense_oracle(params: dict, x: jax.Array,
+                          cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    """Every expert on every token, combined by router weights (no drops)."""
+    w, idx, aux = router_probs(params, x, cfg)
+    h = jnp.einsum("td,edf->tef", x, params["w1"])
+    h = jax.nn.silu(h) * jnp.einsum("td,edf->tef", x, params["w3"])
+    all_out = jnp.einsum("tef,efd->ted", h, params["w2"])  # (T, E, D)
+    sel = jnp.take_along_axis(all_out, idx[..., None], axis=1)  # (T, k, D)
+    y = jnp.sum(sel * w[..., None].astype(x.dtype), axis=1)
+    return y, aux
+
+
+def moe_layer(params: dict, x: jax.Array, cfg: ModelConfig,
+              sharder=None, dp=None) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (B, S, D), aux. Routed experts + shared experts."""
+    b, s, d = x.shape
+    flat = x.reshape(-1, d)
+    if cfg.moe_dispatch == "sw_plus_ep":
+        from repro.core import granularity   # lazy: avoid import cycle
+        y, aux = granularity.sw_plus_ep_layer(params, x, cfg, dp)
+        y = y.reshape(-1, d)
+    elif cfg.moe_dispatch == "sw_plus":
+        y, aux = dispatch_sw_plus(params, flat, cfg)
+    else:
+        y, aux = dispatch_lw_plus(params, flat, cfg, sharder)
+    y = y.reshape(b, s, d)
+    if cfg.moe_shared:
+        y = y + mlp_mod.mlp(params["shared"], x, cfg)
+    return y, aux

@@ -1,0 +1,249 @@
+"""Mamba2 (SSD — state-space duality) block: chunked parallel scan for
+training/prefill and a single-step recurrence for decode.
+
+Follows the minimal SSD formulation of arXiv:2405.21060: per head h with
+scalar decay ``a_t = exp(dt_t * A_h)`` and per-group B/C of width N:
+
+    h_t = a_t * h_{t-1} + dt_t * B_t ⊗ x_t          (state: P x N per head)
+    y_t = C_t · h_t + D_h * x_t
+
+The chunked algorithm computes intra-chunk contributions as a masked
+quadratic form (attention-like, chunk x chunk) and carries inter-chunk
+state with a ``lax.scan`` over chunks — O(S·Q) instead of O(S²), which is
+what makes the ``long_500k`` shape feasible (DESIGN.md §5).
+
+Sharding note: projections are stored *separately* (z/x projections and the
+depthwise conv over x shard their channel dim over the TP axis; the small
+B/C/dt projections stay replicated) so every tensor has a single clean
+partition spec — packing them into one in_proj would put shard boundaries
+inside the packed dim.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.config import ModelConfig
+
+
+def ssm_init(key: jax.Array, cfg: ModelConfig, dtype) -> dict:
+    d, di = cfg.d_model, cfg.d_inner
+    nh, n = cfg.ssm_heads, cfg.ssm_state
+    g = cfg.ssm_groups
+    ks = common.split_keys(key, 6)
+    p = {
+        "z_proj": common.dense_init(ks[0], (d, di), d, dtype),
+        "x_proj": common.dense_init(ks[1], (d, di), d, dtype),
+        "bc_proj": common.dense_init(ks[2], (d, 2 * g * n), d, dtype),
+        "dt_proj": common.dense_init(ks[3], (d, nh), d, dtype),
+        "conv_x_w": common.dense_init(ks[4], (cfg.ssm_conv, di),
+                                      cfg.ssm_conv, dtype),
+        "conv_x_b": jnp.zeros((di,), dtype),
+        "conv_bc_w": common.dense_init(ks[5], (cfg.ssm_conv, 2 * g * n),
+                                       cfg.ssm_conv, dtype),
+        "conv_bc_b": jnp.zeros((2 * g * n,), dtype),
+        "A_log": jnp.log(jnp.arange(1, nh + 1, dtype=jnp.float32)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm": jnp.ones((di,), dtype),
+        "out_proj": common.dense_init(ks[0], (di, d), di, dtype),
+    }
+    return p
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: jax.Array | None = None):
+    """Depthwise causal conv. x: (B,S,C); w: (K,C). Returns (y, new_state)
+    where state carries the last K-1 inputs."""
+    k = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+            for i in range(k))
+    y = jax.nn.silu(y + b[None, None, :])
+    new_state = xp[:, -(k - 1):, :] if k > 1 else None
+    return y, new_state
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype) -> dict:
+    """Stacked per-layer SSM decode state (plain dict):
+    conv_x (L,B,K-1,di), conv_bc (L,B,K-1,2gn), h (L,B,nh,P,N) fp32."""
+    di, g, n = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state
+    nh, p = cfg.ssm_heads, cfg.ssm_headdim
+    km1 = cfg.ssm_conv - 1
+    return {
+        "conv_x": jnp.zeros((cfg.n_layers, batch, km1, di), dtype),
+        "conv_bc": jnp.zeros((cfg.n_layers, batch, km1, 2 * g * n), dtype),
+        "h": jnp.zeros((cfg.n_layers, batch, nh, p, n), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Chunked SSD scan (training / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """Lower-triangular cumulative sums: out[..., i, j] = sum_{j<k<=i} a_k.
+
+    a: (..., Q). Returns (..., Q, Q) with -inf above the diagonal.
+    """
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool), k=0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_scan(x: jax.Array, dt: jax.Array, a_log: jax.Array, b: jax.Array,
+             c: jax.Array, d_skip: jax.Array, chunk: int,
+             h0: jax.Array | None = None):
+    """Chunked SSD. x: (B,S,nh,P); dt raw: (B,S,nh); b,c: (B,S,g,N).
+
+    Returns (y (B,S,nh,P), h_final (B,nh,P,N) fp32).
+    """
+    bsz, s_orig, nh, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    rep = nh // g
+    # Expand groups to heads once (all assigned archs use g=1; repeat is a
+    # free broadcast in that case).
+    b = jnp.repeat(b, rep, axis=2).astype(jnp.float32)       # (B,S,nh,N)
+    c = jnp.repeat(c, rep, axis=2).astype(jnp.float32)
+    s = s_orig
+    q = min(chunk, s)
+    if s % q:
+        pad = q - s % q
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        s += pad
+    nc = s // q
+
+    xf = x.astype(jnp.float32)
+    dtf = jax.nn.softplus(dt.astype(jnp.float32))            # (B,S,nh)
+    da = dtf * (-jnp.exp(a_log))[None, None, :]              # decay logs <= 0
+    xdt = xf * dtf[..., None]                                # dt-weighted input
+
+    def rs(t):   # (B,S,rest...) -> (nc, B, q, rest...)
+        r = t.reshape(bsz, nc, q, *t.shape[2:])
+        return jnp.moveaxis(r, 1, 0)
+
+    xc, dac = rs(xdt), rs(da)
+    bc_, cc_ = rs(b), rs(c)                                   # (nc,B,q,nh,N)
+
+    # Intra-chunk (quadratic within chunk, like masked attention):
+    lmat = jnp.exp(_segsum(dac.transpose(0, 1, 3, 2)))        # (nc,B,nh,q,q)
+    cb = jnp.einsum("cbqhn,cbkhn->cbhqk", cc_, bc_)           # (nc,B,nh,q,q)
+    y_intra = jnp.einsum("cbhqk,cbkhp->cbqhp", cb * lmat, xc)
+
+    # Inter-chunk: carried state.
+    dacs = jnp.cumsum(dac, axis=2)                            # (nc,B,q,nh)
+    decay_to_end = jnp.exp(dacs[:, :, -1:, :] - dacs)         # (nc,B,q,nh)
+    chunk_states = jnp.einsum("cbkhn,cbkh,cbkhp->cbhpn",
+                              bc_, decay_to_end, xc)          # (nc,B,nh,P,N)
+    chunk_decay = jnp.exp(dacs[:, :, -1, :])                  # (nc,B,nh)
+
+    def carry_fn(h, blk):
+        st, dec = blk
+        h_new = h * dec[..., None, None] + st
+        return h_new, h
+
+    h_init = (jnp.zeros((bsz, nh, p, n), jnp.float32)
+              if h0 is None else h0.astype(jnp.float32))
+    h_last, h_prevs = jax.lax.scan(carry_fn, h_init,
+                                   (chunk_states, chunk_decay))
+    decay_from_start = jnp.exp(dacs)                          # (nc,B,q,nh)
+    y_inter = jnp.einsum("cbqhn,cbqh,cbhpn->cbqhp",
+                         cc_, decay_from_start, h_prevs)
+
+    y = jnp.moveaxis(y_intra + y_inter, 0, 1).reshape(bsz, s, nh, p)
+    y = y + xf * d_skip[None, None, :, None]
+    return y[:, :s_orig].astype(x.dtype), h_last
+
+
+def _project(params: dict, xin: jax.Array):
+    z = jnp.einsum("bsd,df->bsf", xin, params["z_proj"])
+    xs = jnp.einsum("bsd,df->bsf", xin, params["x_proj"])
+    bc = jnp.einsum("bsd,df->bsf", xin, params["bc_proj"])
+    dt = jnp.einsum("bsd,df->bsf", xin, params["dt_proj"])
+    return z, xs, bc, dt
+
+
+def ssm_layer(params: dict, xin: jax.Array, cfg: ModelConfig,
+              return_cache: bool = False):
+    """Full-sequence Mamba2 block. xin: (B,S,D) -> (B,S,D).
+
+    With ``return_cache=True`` also returns (conv_x, conv_bc, h_final) for
+    switching into decode after prefill.
+    """
+    z, xs, bc, dt = _project(params, xin)
+    xs_c, _ = _causal_conv(xs, params["conv_x_w"], params["conv_x_b"])
+    bc_c, _ = _causal_conv(bc, params["conv_bc_w"], params["conv_bc_b"])
+    di, g, n = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state
+    bsz, s = xs_c.shape[:2]
+    x = xs_c.reshape(bsz, s, cfg.ssm_heads, cfg.ssm_headdim)
+    b, c = jnp.split(bc_c, 2, axis=-1)
+    b = b.reshape(bsz, s, g, n)
+    c = c.reshape(bsz, s, g, n)
+    dt = dt.astype(jnp.float32) + params["dt_bias"][None, None, :]
+    y, h_last = ssd_scan(x, dt, params["A_log"], b, c, params["D"],
+                         cfg.ssm_chunk)
+    y = y.reshape(bsz, s, di)
+    y = common.rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                        params["norm"], cfg.norm_eps)
+    out = jnp.einsum("bsf,fd->bsd", y, params["out_proj"])
+    if return_cache:
+        k = cfg.ssm_conv
+
+        def tail(t):
+            if t.shape[1] >= k - 1:
+                return t[:, -(k - 1):, :]
+            return jnp.pad(t, ((0, 0), (k - 1 - t.shape[1], 0), (0, 0)))
+
+        return out, tail(xs), tail(bc), h_last
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Single-step decode recurrence
+# ---------------------------------------------------------------------------
+
+
+def ssm_decode_step(params: dict, xin: jax.Array, conv_x: jax.Array,
+                    conv_bc: jax.Array, h: jax.Array, cfg: ModelConfig):
+    """One token. xin: (B,1,D); conv_x: (B,K-1,di); conv_bc: (B,K-1,2gn);
+    h: (B,nh,P,N) fp32. Returns (y (B,1,D), conv_x', conv_bc', h')."""
+    z, xs, bc, dt = _project(params, xin)
+    xs_c, new_conv_x = _causal_conv(xs, params["conv_x_w"],
+                                    params["conv_x_b"], state=conv_x)
+    bc_c, new_conv_bc = _causal_conv(bc, params["conv_bc_w"],
+                                     params["conv_bc_b"], state=conv_bc)
+    di, g, n = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state
+    bsz = xs_c.shape[0]
+    nh, p = cfg.ssm_heads, cfg.ssm_headdim
+    x = xs_c[:, 0].reshape(bsz, nh, p).astype(jnp.float32)
+    b, c = jnp.split(bc_c[:, 0], 2, axis=-1)
+    b = b.reshape(bsz, g, n).astype(jnp.float32)
+    c = c.reshape(bsz, g, n).astype(jnp.float32)
+    rep = nh // g
+    br = jnp.repeat(b, rep, axis=1)                         # (B,nh,N)
+    cr = jnp.repeat(c, rep, axis=1)
+
+    dtf = jax.nn.softplus(dt[:, 0].astype(jnp.float32)
+                          + params["dt_bias"][None, :])     # (B,nh)
+    decay = jnp.exp(dtf * (-jnp.exp(params["A_log"]))[None, :])
+    h_new = (h * decay[..., None, None]
+             + jnp.einsum("bhp,bhn->bhpn", x * dtf[..., None], br))
+    y = jnp.einsum("bhn,bhpn->bhp", cr, h_new) + x * params["D"][None, :, None]
+    y = y.reshape(bsz, 1, di).astype(xin.dtype)
+    y = common.rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                        params["norm"], cfg.norm_eps)
+    return (jnp.einsum("bsf,fd->bsd", y, params["out_proj"]),
+            new_conv_x, new_conv_bc, h_new)

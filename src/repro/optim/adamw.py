@@ -1,0 +1,94 @@
+"""Native AdamW with global-norm clipping and warmup-cosine schedule.
+
+Moments are fp32 regardless of parameter dtype; parameter updates are
+computed in fp32 and cast back. Optimizer state shards exactly like the
+parameters (the pytrees are congruent), so FSDP covers moments too.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_ratio: float = 0.1
+
+
+def schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = (step - cfg.warmup_steps) / jnp.maximum(
+        cfg.total_steps - cfg.warmup_steps, 1)
+    prog = jnp.clip(prog, 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+        1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init(params) -> dict:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def _decay_mask(path) -> bool:
+    """Apply weight decay only to matrices (not norms/biases/scalars)."""
+    leaf = getattr(path[-1], "key", getattr(path[-1], "name", ""))
+    return leaf not in ("attn_norm", "mlp_norm", "ssm_norm", "final_norm",
+                        "norm", "q_norm", "k_norm", "A_log", "D", "dt_bias",
+                        "conv_x_b", "conv_bc_b")
+
+
+def apply(cfg: AdamWConfig, grads, opt: dict, params) -> Tuple[dict, dict, dict]:
+    """Returns (new_params, new_opt, info)."""
+    step = opt["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    lr = schedule(cfg, step)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    decay = jax.tree_util.tree_map_with_path(
+        lambda path, p: cfg.weight_decay if _decay_mask(path) else 0.0, params)
+
+    def upd(g, m, v, p, wd):
+        g = g.astype(jnp.float32) * scale
+        m_new = cfg.b1 * m + (1 - cfg.b1) * g
+        v_new = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mhat = m_new / b1c
+        vhat = v_new / b2c
+        step_val = mhat / (jnp.sqrt(vhat) + cfg.eps) + wd * p.astype(jnp.float32)
+        p_new = (p.astype(jnp.float32) - lr * step_val).astype(p.dtype)
+        return p_new, m_new, v_new
+
+    flat = jax.tree.map(upd, grads, opt["m"], opt["v"], params, decay)
+    new_params = jax.tree.map(lambda t: t[0], flat,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[2], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    info = {"grad_norm": gnorm, "lr": lr}
+    return new_params, {"m": new_m, "v": new_v, "step": step}, info

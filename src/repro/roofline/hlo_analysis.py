@@ -1,0 +1,289 @@
+"""Post-SPMD HLO text analyzer: while-corrected FLOPs, HBM bytes, and
+collective bytes.
+
+Why not ``compiled.cost_analysis()``: XLA counts a ``while`` body ONCE, not
+multiplied by its trip count — with scan-over-layers that undercounts an
+88-layer model by 88x. This analyzer parses the optimized (post-SPMD,
+per-device) HLO text, builds a per-computation symbol table (operands are
+printed by id, not with inline types), builds the call graph (fusions,
+to_apply, while bodies, conditionals), extracts while trip counts from the
+loop-condition compare-with-constant pattern, and multiplies callee costs
+accordingly.
+
+Cost model (per device — the module is already partitioned):
+  flops   — dot ops: 2 * prod(out) * prod(contracted dims), counted
+            wherever they appear (inside fusions too).
+  bytes   — HBM-traffic proxy: operand + output bytes of ops at executed
+            scope; fusion internals are VMEM-local and excluded (the fusion
+            op itself counts once); zero-cost ops (parameter, tuple, gte,
+            bitcast, constant) excluded.
+  collective_bytes — per kind: operand bytes (per-device shard volume),
+            x loop multiplier.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+# Ops whose operand/output traffic is counted toward the HBM-bytes proxy.
+# Bare elementwise ops are excluded: the CPU backend leaves many unfused
+# that the TPU backend fuses into neighbors; counting them would make the
+# memory term reflect CPU fusion quality instead of TPU traffic.
+_BYTE_OPS = frozenset((
+    "dot", "fusion", "copy", "copy-start", "dynamic-slice",
+    "dynamic-update-slice", "reduce", "reduce-window", "sort", "transpose",
+    "concatenate", "pad", "slice", "gather", "scatter",
+    "select-and-scatter", "custom-call", "convolution", "cholesky",
+    "triangular-solve", "rng", "fft",
+))
+
+
+def _type_bytes(type_str: str) -> int:
+    """Total bytes of a (possibly tuple) type string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        n = _DTYPE_BYTES.get(m.group(1), 4)
+        dims = m.group(2)
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n
+    return total
+
+
+def _type_elems(type_str: str) -> int:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return 0
+    n = 1
+    if m.group(2):
+        for d in m.group(2).split(","):
+            n *= int(d)
+    return n
+
+
+@dataclasses.dataclass
+class OpStats:
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    collective_bytes: Dict[str, float] = dataclasses.field(default_factory=dict)
+    dot_count: int = 0
+
+    def add(self, other: "OpStats", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.bytes_accessed += other.bytes_accessed * mult
+        self.dot_count += int(other.dot_count * mult)
+        for k, v in other.collective_bytes.items():
+            self.collective_bytes[k] = self.collective_bytes.get(k, 0.0) + v * mult
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    out_type: str
+    opname: str
+    operands: List[str]
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    is_fusion_body: bool = False
+    ops: List[_Op] = dataclasses.field(default_factory=list)
+    symbols: Dict[str, str] = dataclasses.field(default_factory=dict)
+    local: OpStats = dataclasses.field(default_factory=OpStats)
+    calls: List[Tuple[str, str]] = dataclasses.field(default_factory=list)
+    whiles: List[Tuple[str, str]] = dataclasses.field(default_factory=list)
+    const_ints: Dict[str, int] = dataclasses.field(default_factory=dict)
+    compare_consts: List[int] = dataclasses.field(default_factory=list)
+
+
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(")
+# Tuple types may contain /*index=N*/ comments (with '=') and one level of
+# nesting; scalar/array types are dtype[dims]{layout}.
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*"
+    r"(\((?:[^()]|\([^()]*\))*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s*"
+    r"([\w\-]+)\((.*)$")
+_CONST_INT_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*[su](?:8|16|32|64)\[\]\s*"
+    r"constant\((\d+)\)")
+_ID_RE = re.compile(r"%([\w\.\-]+)")
+
+
+def parse_hlo(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            if line.endswith("{"):
+                m = _COMP_HDR.match(line.strip())
+                if m and "=" not in line.split("(")[0]:
+                    cur = Computation(name=m.group(2))
+                    cur.is_fusion_body = cur.name.startswith(
+                        ("fused_", "wrapped_"))
+                    comps[cur.name] = cur
+                    if m.group(1):
+                        entry = cur.name
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        _parse_op_line(line, cur)
+    for comp in comps.values():
+        _accumulate(comp)
+    return comps, entry
+
+
+def _parse_op_line(line: str, comp: Computation) -> None:
+    mc = _CONST_INT_RE.match(line)
+    if mc:
+        comp.const_ints[mc.group(1)] = int(mc.group(2))
+    m = _OP_RE.match(line)
+    if not m:
+        return
+    name, out_type, opname, rest = m.groups()
+    # operand segment: up to the matching close paren at depth 0
+    depth = 0
+    cut = len(rest)
+    for i, ch in enumerate(rest):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            if depth == 0:
+                cut = i
+                break
+            depth -= 1
+    operands = _ID_RE.findall(rest[:cut])
+    comp.symbols[name] = out_type
+    comp.ops.append(_Op(name, out_type, opname, operands, line))
+
+
+def _accumulate(comp: Computation) -> None:
+    st = comp.local
+    for op in comp.ops:
+        out_bytes = _type_bytes(op.out_type)
+        in_bytes = sum(_type_bytes(comp.symbols.get(o, "")) for o in op.operands)
+
+        if op.opname == "while":
+            body = _attr(op.line, "body")
+            cond = _attr(op.line, "condition")
+            if body and cond:
+                comp.whiles.append((body, cond))
+            continue
+        if op.opname == "fusion":
+            callee = _attr(op.line, "calls")
+            if callee:
+                comp.calls.append((callee, "fusion"))
+            st.bytes_accessed += in_bytes + out_bytes
+            continue
+        if op.opname == "conditional":
+            for callee in _attr_list(op.line, "branch_computations"):
+                comp.calls.append((callee, "call"))
+            st.bytes_accessed += in_bytes + out_bytes
+            continue
+        if op.opname in ("call", "custom-call", "async-start"):
+            callee = _attr(op.line, "to_apply") or _attr(op.line, "calls")
+            if callee:
+                comp.calls.append((callee, "call"))
+
+        if op.opname == "compare":
+            for o in op.operands:
+                if o in comp.const_ints:
+                    comp.compare_consts.append(comp.const_ints[o])
+
+        if op.opname == "dot":
+            contracted = 1
+            mdim = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.line)
+            lhs_type = comp.symbols.get(op.operands[0], "") if op.operands else ""
+            ms = _SHAPE_RE.search(lhs_type)
+            if mdim and ms and ms.group(2):
+                dims = [int(d) for d in ms.group(2).split(",")]
+                for d in mdim.group(1).split(","):
+                    if d:
+                        contracted *= dims[int(d)]
+            st.flops += 2.0 * _type_elems(op.out_type) * contracted
+            st.dot_count += 1
+
+        for kind in _COLLECTIVES:
+            if op.opname == kind or op.opname == kind + "-start":
+                st.collective_bytes[kind] = (
+                    st.collective_bytes.get(kind, 0.0) + in_bytes)
+                break
+
+        if not comp.is_fusion_body and op.opname in _BYTE_OPS:
+            st.bytes_accessed += in_bytes + out_bytes
+
+
+def _attr(line: str, name: str) -> Optional[str]:
+    m = re.search(name + r"=%?([\w\.\-]+)", line)
+    return m.group(1) if m else None
+
+
+def _attr_list(line: str, name: str) -> List[str]:
+    m = re.search(name + r"=\{([^}]*)\}", line)
+    if not m:
+        return []
+    return [x.strip().lstrip("%") for x in m.group(1).split(",") if x.strip()]
+
+
+def analyze(text: str) -> OpStats:
+    """Whole-module while-corrected stats for the entry computation."""
+    comps, entry = parse_hlo(text)
+    if entry is None:
+        entry = next(iter(comps))
+    memo: Dict[str, OpStats] = {}
+
+    def total(name: str, depth: int = 0) -> OpStats:
+        if name in memo:
+            return memo[name]
+        out = OpStats()
+        comp = comps.get(name)
+        if comp is None or depth > 64:
+            return out
+        memo[name] = out           # break cycles conservatively
+        out.add(comp.local)
+        for callee, kind in comp.calls:
+            sub = total(callee, depth + 1)
+            if kind == "fusion":
+                out.add(OpStats(flops=sub.flops, dot_count=sub.dot_count,
+                                collective_bytes=dict(sub.collective_bytes)))
+            else:
+                out.add(sub)
+        for body, cond in comp.whiles:
+            trips = _trip_count(comps.get(cond))
+            out.add(total(body, depth + 1), mult=trips)
+            out.add(total(cond, depth + 1), mult=trips)
+        return out
+
+    return total(entry)
+
+
+def _trip_count(cond: Optional[Computation]) -> int:
+    if cond is None:
+        return 1
+    if cond.compare_consts:
+        return max(max(cond.compare_consts), 1)
+    if cond.const_ints:
+        return max(max(cond.const_ints.values()), 1)
+    return 1

@@ -1,0 +1,70 @@
+"""Elastic re-meshing: rebuild the mesh from the live device set and
+reshard a checkpointed state onto it.
+
+Scale-out design (DESIGN.md §4): when a host is evicted (failure or
+straggler policy), the controller picks the largest supported mesh that
+fits the surviving devices, rebuilds shardings from the same logical
+rules, and restores the latest checkpoint onto the new mesh. Because all
+sharding is derived from *logical* axis rules (repro/sharding.py), no
+model code changes across mesh sizes — this function is the whole story.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro import sharding
+from repro.checkpoint import ckpt
+
+
+def viable_mesh_shapes(n_devices: int,
+                       model_parallel: int) -> List[Tuple[int, int]]:
+    """(data, model) shapes usable with `n_devices`, largest first."""
+    out = []
+    for data in range(n_devices // model_parallel, 0, -1):
+        if data * model_parallel <= n_devices:
+            out.append((data, model_parallel))
+    return out
+
+
+def rebuild_mesh(devices: Optional[Sequence] = None,
+                 model_parallel: int = 1) -> jax.sharding.Mesh:
+    """Largest (data, model) mesh over the surviving devices."""
+    devices = list(devices if devices is not None else jax.devices())
+    shapes = viable_mesh_shapes(len(devices), model_parallel)
+    if not shapes:
+        raise RuntimeError(
+            f"cannot build a mesh with model_parallel={model_parallel} "
+            f"from {len(devices)} devices")
+    data, model = shapes[0]
+    dev = np.asarray(devices[: data * model]).reshape(data, model)
+    return jax.sharding.Mesh(dev, ("data", "model"))
+
+
+def reshard_state(state, mesh: jax.sharding.Mesh):
+    """Reshard a (possibly host-resident) train state onto a new mesh."""
+    pspec = sharding.param_specs(state["params"])
+    spec = {"params": pspec,
+            "opt": {"m": pspec, "v": pspec,
+                    "step": jax.sharding.PartitionSpec()}}
+    return jax.device_put(state, sharding.to_named(mesh, spec))
+
+
+def recover(ckpt_dir: str, init_fn, model_parallel: int = 1,
+            devices: Optional[Sequence] = None):
+    """Full elastic recovery: new mesh + checkpoint restore + reshard.
+
+    Returns (state, start_step, mesh)."""
+    mesh = rebuild_mesh(devices, model_parallel)
+    target = jax.eval_shape(init_fn)
+    step = ckpt.latest_step(ckpt_dir)
+    if step is None:
+        state = init_fn()
+        state = reshard_state(state, mesh)
+        return state, 0, mesh
+    state = ckpt.restore(ckpt_dir, target, step=step)
+    state = reshard_state(state, mesh)
+    return state, step, mesh

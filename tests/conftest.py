@@ -1,0 +1,7 @@
+# Give tests a small multi-device CPU topology (sharding / collective tests
+# need >1 device). Must run before any jax import. The dry-run sets its own
+# 512-device count in a separate process; benches see the default.
+import os
+
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=4")

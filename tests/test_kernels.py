@@ -1,0 +1,157 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+    return x.astype(dtype)
+
+
+_TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+# -------------------------------------------------------------------- gmm
+
+@pytest.mark.parametrize("m,k,n,e,bm", [
+    (128, 64, 64, 2, 64),
+    (256, 96, 80, 4, 64),       # non-multiple N/K -> internal padding
+    (512, 128, 256, 8, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gmm_matches_ref(m, k, n, e, bm, dtype):
+    x = _rand(0, (m, k), dtype)
+    w = _rand(1, (e, k, n), dtype) * 0.1
+    be = jax.random.randint(jax.random.PRNGKey(2), (m // bm,), 0, e)
+    out = ops.moe_gmm(x, w, be, block=bm)
+    exp = ref.gmm_ref(x, w, be, bm)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(exp, np.float32),
+        rtol=_TOL[dtype], atol=_TOL[dtype] * 8)
+
+
+def test_gmm_block_expert_selects_weights():
+    """Each row-block must use exactly its expert's weights."""
+    m, k, n, e, bm = 128, 32, 32, 4, 64
+    x = jnp.ones((m, k), jnp.float32)
+    w = jnp.stack([jnp.full((k, n), i + 1.0) for i in range(e)])
+    be = jnp.asarray([2, 0], jnp.int32)
+    out = ops.moe_gmm(x, w, be, block=bm)
+    assert float(out[0, 0]) == pytest.approx(3.0 * k)
+    assert float(out[bm, 0]) == pytest.approx(1.0 * k)
+
+
+# ----------------------------------------------------------------- gather
+
+@pytest.mark.parametrize("t,d,tp", [(64, 32, 128), (200, 48, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gather_matches_ref(t, d, tp, dtype):
+    x = _rand(3, (t, d), dtype)
+    n = t // 2
+    src = jax.random.randint(jax.random.PRNGKey(4), (n,), 0, t)
+    dest = jax.random.permutation(jax.random.PRNGKey(5), tp)[:n]
+    out = ops.coalesced_gather(x, src, dest, tp, block=64)
+    row_src = jnp.zeros((tp,), jnp.int32).at[dest].set(src.astype(jnp.int32))
+    row_valid = jnp.zeros((tp,), jnp.int32).at[dest].set(1)
+    exp = ref.gather_rows_ref(x, row_src, row_valid, tp)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
+
+
+def test_gather_unfilled_rows_zero():
+    x = jnp.ones((8, 16), jnp.float32)
+    out = ops.coalesced_gather(x, jnp.asarray([0]), jnp.asarray([3]), 64,
+                               block=64)
+    assert float(out[3].sum()) == 16.0
+    assert float(out.sum()) == 16.0
+
+
+# ------------------------------------------------------------------ flash
+
+@pytest.mark.parametrize("bh,s,hd,bq,bkv", [
+    (2, 128, 64, 64, 64),
+    (4, 256, 32, 128, 64),
+    (1, 512, 128, 128, 128),
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_matches_ref(bh, s, hd, bq, bkv, causal):
+    q = _rand(6, (bh, s, hd), jnp.float32)
+    k = _rand(7, (bh, s, hd), jnp.float32)
+    v = _rand(8, (bh, s, hd), jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=causal, bq=bq, bkv=bkv)
+    exp = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_tile_granularity_invariance():
+    """The paper's warp-size knob: results must not depend on tile size."""
+    q = _rand(9, (2, 256, 64), jnp.float32)
+    k = _rand(10, (2, 256, 64), jnp.float32)
+    v = _rand(11, (2, 256, 64), jnp.float32)
+    outs = [ops.flash_attention(q, k, v, bq=bq, bkv=bkv)
+            for bq, bkv in [(64, 64), (128, 64), (64, 128), (256, 256)]]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_flash_bf16():
+    q = _rand(12, (2, 128, 64), jnp.bfloat16)
+    k = _rand(13, (2, 128, 64), jnp.bfloat16)
+    v = _rand(14, (2, 128, 64), jnp.bfloat16)
+    out = ops.flash_attention(q, k, v)
+    exp = ref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32),
+                               rtol=3e-2, atol=3e-2)
+
+
+# -------------------------------------------------------------------- ssd
+
+def _ssd_seq_ref(x, da, b, c):
+    bh, s, p = x.shape
+    n = b.shape[-1]
+
+    def step(h, t):
+        xt, dat, bt, ct = t
+        h = h * jnp.exp(dat)[:, None, None] + xt[:, :, None] * bt[:, None, :]
+        return h, jnp.einsum("bn,bpn->bp", ct, h)
+
+    h0 = jnp.zeros((bh, p, n))
+    _, ys = jax.lax.scan(step, h0, (x.transpose(1, 0, 2), da.T,
+                                    b.transpose(1, 0, 2),
+                                    c.transpose(1, 0, 2)))
+    return ys.transpose(1, 0, 2)
+
+
+@pytest.mark.parametrize("bh,s,p,n,q", [
+    (2, 64, 16, 8, 16),
+    (3, 128, 32, 16, 32),
+    (1, 256, 64, 32, 64),
+])
+def test_ssd_kernel_matches_sequential(bh, s, p, n, q):
+    x = _rand(20, (bh, s, p), jnp.float32) * 0.5
+    da = -jax.nn.softplus(_rand(21, (bh, s), jnp.float32))
+    b = _rand(22, (bh, s, n), jnp.float32) * 0.3
+    c = _rand(23, (bh, s, n), jnp.float32) * 0.3
+    out = ops.ssd_scan(x, da, b, c, chunk=q)
+    exp = _ssd_seq_ref(x, da, b, c)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_ssd_kernel_chunk_invariance():
+    """State carried in VMEM scratch must make chunking invisible."""
+    x = _rand(24, (2, 128, 16), jnp.float32) * 0.5
+    da = -jax.nn.softplus(_rand(25, (2, 128), jnp.float32))
+    b = _rand(26, (2, 128, 8), jnp.float32) * 0.3
+    c = _rand(27, (2, 128, 8), jnp.float32) * 0.3
+    outs = [ops.ssd_scan(x, da, b, c, chunk=q) for q in (16, 32, 64, 128)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o),
+                                   rtol=2e-4, atol=2e-5)

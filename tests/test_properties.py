@@ -1,0 +1,132 @@
+"""Hypothesis property tests on system invariants."""
+
+import hypothesis
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.warpsim import machines
+from repro.core.warpsim.coalesce import warp_transactions, warp_transactions_bytes
+from repro.core.warpsim.divergence import expand_workload
+from repro.core.warpsim.trace import Branch, Compute, Mem, Workload, correlated_outcomes
+from repro.models import moe as moe_mod
+from repro.optim import adamw, compression
+
+settings = hypothesis.settings(max_examples=25, deadline=None)
+
+
+# ------------------------------------------------------------- coalescing
+
+@settings
+@hypothesis.given(hnp.arrays(np.int64, st.integers(1, 64),
+                             elements=st.integers(0, 1 << 20)))
+def test_transactions_bounded(addrs):
+    """1 <= #transactions <= #active threads; partial bytes <= 64."""
+    t = warp_transactions(addrs)
+    assert 1 <= len(t) <= len(addrs)
+    blocks, nbytes = warp_transactions_bytes(addrs)
+    assert (nbytes <= 64).all() and (nbytes > 0).all()
+    assert len(blocks) == len(t)
+
+
+@settings
+@hypothesis.given(hnp.arrays(np.int64, st.integers(2, 64),
+                             elements=st.integers(0, 1 << 16)))
+def test_transactions_monotone_under_subset(addrs):
+    """A subset of accesses can never need more transactions."""
+    t_full = len(warp_transactions(addrs))
+    t_half = len(warp_transactions(addrs[: len(addrs) // 2]))
+    assert t_half <= t_full
+
+
+@settings
+@hypothesis.given(st.integers(0, 2 ** 31 - 1), st.floats(0.05, 0.95),
+                  st.floats(0.0, 0.99))
+def test_correlated_outcomes_marginal(seed, p, corr):
+    rng = np.random.default_rng(seed)
+    out = correlated_outcomes(rng, 4096, p, corr)
+    assert out.dtype == bool and out.shape == (4096,)
+    # marginal stays near p (runs widen the CI; generous band)
+    assert abs(out.mean() - p) < 0.35 + 0.3 * corr
+
+
+@settings
+@hypothesis.given(st.integers(0, 1000), st.floats(0.1, 0.9))
+def test_divergence_issue_bounds(seed, p):
+    """SIMT issue slots are between the uniform case and full 2-side
+    serialization."""
+    wl = Workload("w", [Branch(p_taken=p, corr=0.5,
+                               then=[Compute(3)], orelse=[Compute(3)])],
+                  n_threads=128, seed=seed)
+    cfg = machines.baseline(32)
+    ops = expand_workload(wl, cfg)
+    g = cfg.issue_cycles_per_group
+    for w in ops:
+        issue = sum(op.issue_cycles for op in w)
+        assert g * (1 + 3) <= issue <= g * (1 + 3 + 3)
+
+
+# ------------------------------------------------------------------- MoE
+
+@settings
+@hypothesis.given(st.integers(0, 10_000), st.integers(1, 4),
+                  st.sampled_from([4, 8, 16]))
+def test_sort_by_expert_is_injective_layout(seed, k, e):
+    rng = np.random.default_rng(seed)
+    t = 32
+    idx = jnp.asarray(rng.integers(0, e, size=(t, k)))
+    order, dest, block_expert, t_pad = moe_mod.sort_by_expert(idx, e, block=8)
+    d = np.asarray(dest)
+    assert len(np.unique(d)) == t * k          # injective placement
+    assert d.max() < t_pad
+    be = np.asarray(block_expert)
+    flat = np.asarray(idx).reshape(-1)
+    sorted_e = flat[np.asarray(order)]
+    for j in range(t * k):                     # row lands in own expert block
+        assert be[d[j] // 8] == sorted_e[j]
+
+
+# ------------------------------------------------------- optim invariants
+
+@settings
+@hypothesis.given(hnp.arrays(np.float32, st.integers(1, 64),
+                             elements=st.floats(-1e3, 1e3, width=32)))
+def test_quantize_error_bound(g):
+    q, s = compression.quantize(jnp.asarray(g))
+    back = np.asarray(compression.dequantize(q, s, jnp.float32))
+    assert np.all(np.abs(back - g) <= float(s) * 0.5 + 1e-6)
+
+
+@settings
+@hypothesis.given(st.integers(0, 1000))
+def test_adamw_step_finite_and_bounded(seed):
+    rng = np.random.default_rng(seed)
+    params = {"w": jnp.asarray(rng.standard_normal(8), jnp.float32)}
+    grads = {"w": jnp.asarray(rng.standard_normal(8) * 100, jnp.float32)}
+    cfg = adamw.AdamWConfig(lr=0.01, clip_norm=1.0, warmup_steps=0,
+                            total_steps=10, min_lr_ratio=1.0)
+    opt = adamw.init(params)
+    new_params, new_opt, info = adamw.apply(cfg, grads, opt, params)
+    delta = np.abs(np.asarray(new_params["w"] - params["w"]))
+    assert np.isfinite(delta).all()
+    # per-coordinate step is bounded by ~lr * (1 + wd*|w|)
+    bound = 0.01 * (1.0 + 0.1 * np.abs(np.asarray(params["w"]))) + 1e-5
+    assert (delta <= bound * 1.5).all()
+
+
+# ------------------------------------------------- model-level invariants
+
+@settings
+@hypothesis.given(st.integers(0, 100))
+def test_flash_attention_rowsum_one(seed):
+    """softmax rows integrate to 1: attention output of constant V is V."""
+    from repro.models import attention
+    b, s, h, hd = 1, 16, 2, 8
+    q = jax.random.normal(jax.random.PRNGKey(seed), (b, s, h, hd))
+    k = jax.random.normal(jax.random.PRNGKey(seed + 1), (b, s, h, hd))
+    v = jnp.ones((b, s, h, hd)) * 3.0
+    pos = jnp.arange(s)
+    out = attention.flash_attention(q, k, v, pos, pos, None, kv_chunk=8)
+    np.testing.assert_allclose(np.asarray(out), 3.0, rtol=1e-4)

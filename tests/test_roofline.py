@@ -1,0 +1,134 @@
+"""HLO analyzer: exact FLOPs on known programs, while-trip correction,
+collective accounting; roofline report math."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models.config import get_shape
+from repro.roofline import hlo_analysis as H
+from repro.roofline.report import (
+    Roofline, count_params, model_flops, structural_memory_bytes,
+)
+
+
+def _compile_text(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_single_matmul_flops_exact():
+    a = jnp.zeros((64, 32))
+    b = jnp.zeros((32, 48))
+    txt = _compile_text(lambda a, b: a @ b, a, b)
+    stats = H.analyze(txt)
+    assert stats.flops == 2 * 64 * 32 * 48
+    assert stats.dot_count == 1
+
+
+def test_scan_matmul_while_corrected():
+    L, M, K, N = 5, 16, 32, 16
+
+    def f(ws, x):
+        def body(x, w):
+            return jnp.tanh(x @ w), None
+        out, _ = jax.lax.scan(body, x, ws)
+        return out
+
+    ws = jnp.zeros((L, K, K))
+    x = jnp.zeros((M, K))
+    stats = H.analyze(_compile_text(f, ws, x))
+    assert stats.flops == L * 2 * M * K * K    # x L, not x 1
+
+
+def test_nested_scan_flops():
+    L1, L2, M, K = 3, 4, 8, 16
+
+    def f(ws, x):
+        def outer(x, w):
+            def inner(x, _):
+                return jnp.tanh(x @ w), None
+            x, _ = jax.lax.scan(inner, x, jnp.arange(L2))
+            return x, None
+        out, _ = jax.lax.scan(outer, x, ws)
+        return out
+
+    stats = H.analyze(_compile_text(f, jnp.zeros((L1, K, K)),
+                                    jnp.zeros((M, K))))
+    assert stats.flops == L1 * L2 * 2 * M * K * K
+
+
+def test_type_bytes_parse():
+    assert H._type_bytes("bf16[8,4]") == 64
+    assert H._type_bytes("f32[2,2]{1,0}") == 16
+    assert H._type_bytes("(f32[2], s32[3])") == 8 + 12
+    assert H._type_bytes("pred[]") == 1
+
+
+def test_collective_bytes_on_sharded_program():
+    n = len(jax.devices())
+    if n < 2:
+        pytest.skip("needs >1 device")
+    mesh = jax.sharding.Mesh(np.array(jax.devices()), ("d",))
+    x = jnp.zeros((n * 4, 8))
+    sh = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec("d"))
+    with mesh:
+        txt = (jax.jit(lambda x: x.sum(), in_shardings=sh)
+               .lower(x).compile().as_text())
+    stats = H.analyze(txt)
+    assert stats.total_collective_bytes > 0
+
+
+# --------------------------------------------------------------- report
+
+def test_count_params_tinyllama_close_to_published():
+    cfg = get_config("tinyllama-1.1b")
+    n = count_params(cfg)
+    assert 1.0e9 < n < 1.25e9         # 1.1B + TP padding overhead
+
+
+def test_count_params_mistral_large():
+    cfg = get_config("mistral-large-123b")
+    n = count_params(cfg)
+    assert 1.15e11 < n < 1.35e11
+
+
+def test_moe_active_params_much_smaller():
+    cfg = get_config("deepseek-moe-16b")
+    assert count_params(cfg, active_only=True) < 0.35 * count_params(cfg)
+
+
+def test_roofline_terms_and_dominant():
+    r = Roofline(arch="a", shape="s", mesh="m", chips=2,
+                 flops_per_device=197e12,          # exactly 1s compute
+                 bytes_per_device=819e9 / 2,       # 0.5s memory (hlo)
+                 collective_bytes_per_device=50e9 / 4,
+                 collective_breakdown={}, model_flops_total=2 * 197e12,
+                 memory_model_bytes=819e9 / 2)
+    assert r.compute_s == pytest.approx(1.0)
+    assert r.memory_s == pytest.approx(0.5)
+    assert r.collective_s == pytest.approx(0.25)
+    assert r.dominant == "compute"
+    assert r.useful_flops_ratio == pytest.approx(1.0)
+    assert r.roofline_fraction == pytest.approx(1.0)
+
+
+def test_structural_memory_decode_dominated_by_cache_and_params():
+    cfg = get_config("mistral-large-123b")
+    shape = get_shape("decode_32k")
+    b = structural_memory_bytes(cfg, shape, "decode",
+                                {"data": 16, "model": 16})
+    p_loc = count_params(cfg) / 256 * 2
+    assert b > p_loc                  # params + cache
+    assert b < 100e9                  # sane bound per device
+
+
+def test_model_flops_kinds():
+    cfg = get_config("tinyllama-1.1b")
+    tr = model_flops(cfg, get_shape("train_4k"), "train")
+    pf = model_flops(cfg, get_shape("prefill_32k"), "prefill")
+    dc = model_flops(cfg, get_shape("decode_32k"), "decode")
+    assert tr == pytest.approx(3 * model_flops(cfg, get_shape("train_4k"),
+                                               "prefill"))
+    assert dc < pf < tr

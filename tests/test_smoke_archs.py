@@ -1,0 +1,102 @@
+"""Per-arch smoke tests: reduced config, one forward/train step on CPU,
+output shapes + no NaNs (deliverable f)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, list_archs, runnable_shapes
+from repro.models import model as M
+
+ARCHS = list_archs()
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step(arch):
+    cfg = get_config(arch, smoke=True)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    B, S = 2, 32
+    key = jax.random.PRNGKey(1)
+    if cfg.frontend in ("audio", "vlm"):
+        batch = {"input_embeds": jax.random.normal(
+                     key, (B, S, cfg.d_model), jnp.float32),
+                 "labels": jax.random.randint(key, (B, S), 0, cfg.vocab_size)}
+    else:
+        toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+        batch = {"tokens": toks, "labels": toks}
+
+    @jax.jit
+    def loss_and_grad(p):
+        return jax.value_and_grad(
+            lambda q: M.train_loss(q, cfg, batch)[0])(p)
+
+    loss, grads = loss_and_grad(params)
+    assert jnp.isfinite(loss), (arch, loss)
+    gnorm = sum(float(jnp.sum(jnp.abs(g.astype(jnp.float32))))
+                for g in jax.tree.leaves(grads))
+    assert jnp.isfinite(gnorm) and gnorm > 0, arch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_shapes(arch):
+    cfg = get_config(arch, smoke=True)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    B, S = 2, 16
+    if cfg.frontend in ("audio", "vlm"):
+        batch = {"input_embeds": jnp.zeros((B, S, cfg.d_model))}
+    else:
+        batch = {"tokens": jnp.zeros((B, S), jnp.int32)}
+    x = M.embed_inputs(params, cfg, batch)
+    assert x.shape == (B, S, cfg.d_model)
+    hid, aux = M.forward_hidden(params, cfg, x, jnp.arange(S))
+    assert hid.shape == (B, S, cfg.d_model)
+    logits = M.logits_fn(params, cfg, hid)
+    assert logits.shape == (B, S, cfg.vocab_padded)
+    assert bool(jnp.isfinite(logits).all()), arch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_decode_step(arch):
+    cfg = get_config(arch, smoke=True)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    B = 2
+    if cfg.frontend in ("audio", "vlm"):
+        batch = {"input_embeds": jnp.zeros((B, 4, cfg.d_model))}
+    else:
+        batch = {"tokens": jnp.zeros((B, 4), jnp.int32)}
+    logits, cache = M.prefill(params, cfg, batch, max_len=16)
+    assert logits.shape == (B, cfg.vocab_padded)
+    tok = jnp.zeros((B, 1), jnp.int32)
+    logits2, cache = M.decode_step(params, cfg, tok, cache)
+    assert logits2.shape == (B, cfg.vocab_padded)
+    assert bool(jnp.isfinite(logits2).all()), arch
+
+
+def test_all_archs_and_cells_accounted():
+    """40 cells total: 10 archs x 4 shapes, with long_500k runnable only
+    for the sub-quadratic archs (DESIGN.md §5)."""
+    assert len(ARCHS) == 10
+    cells = {(a, s) for a in ARCHS for s in runnable_shapes(a)}
+    assert len(cells) == 10 * 3 + 2
+    full = {(a, s) for a in ARCHS
+            for s in ("train_4k", "prefill_32k", "decode_32k", "long_500k")}
+    assert len(full) == 40
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_tp_divisibility(arch):
+    """Every full config must shard on the 16-way model axis."""
+    cfg = get_config(arch)
+    tp = cfg.tp_divisor
+    assert tp == 16
+    assert cfg.d_model % tp == 0
+    assert cfg.n_q_eff % tp == 0
+    assert cfg.n_q_eff % cfg.n_kv_eff == 0
+    assert cfg.vocab_padded % tp == 0
+    if cfg.d_ff:
+        assert cfg.d_ff % tp == 0
+    if cfg.family == "moe":
+        assert cfg.moe_experts_eff % tp == 0
+    if cfg.family in ("ssm", "hybrid"):
+        assert cfg.ssm_heads % tp == 0
+        assert cfg.d_inner % tp == 0

@@ -1,0 +1,192 @@
+"""Data pipeline, optimizer, checkpoint, runtime substrates."""
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import ckpt
+from repro.data import DataConfig, SyntheticCorpus
+from repro.optim import adamw, compression
+from repro.runtime import elastic, straggler
+from repro.runtime.fault import FailureInjector, SimulatedFailure, resume_or_init
+
+
+# -------------------------------------------------------------------- data
+
+def test_data_deterministic():
+    c = SyntheticCorpus(DataConfig(seed=7))
+    b1, b2 = c.batch_at(3), c.batch_at(3)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+
+
+def test_data_steps_differ():
+    c = SyntheticCorpus(DataConfig(seed=7))
+    assert not np.array_equal(c.batch_at(0)["tokens"],
+                              c.batch_at(1)["tokens"])
+
+
+def test_data_host_sharding_disjoint():
+    a = SyntheticCorpus(DataConfig(n_hosts=2, host_index=0)).batch_at(0)
+    b = SyntheticCorpus(DataConfig(n_hosts=2, host_index=1)).batch_at(0)
+    assert a["tokens"].shape[0] == 4
+    assert not np.array_equal(a["tokens"], b["tokens"])
+
+
+def test_data_labels_are_shifted_tokens():
+    c = SyntheticCorpus(DataConfig())
+    b = c.batch_at(0)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+# ------------------------------------------------------------------- optim
+
+def test_adamw_minimizes_quadratic():
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    cfg = adamw.AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=0,
+                            total_steps=200, min_lr_ratio=1.0)
+    opt = adamw.init(params)
+    for _ in range(150):
+        grads = {"w": 2 * params["w"]}
+        params, opt, _ = adamw.apply(cfg, grads, opt, params)
+    assert float(jnp.abs(params["w"]).max()) < 0.05
+
+
+def test_adamw_clips_gradients():
+    params = {"w": jnp.ones(4)}
+    cfg = adamw.AdamWConfig(clip_norm=1.0)
+    opt = adamw.init(params)
+    _, _, info = adamw.apply(cfg, {"w": jnp.full(4, 1e6)}, opt, params)
+    assert float(info["grad_norm"]) > 1e5   # measured pre-clip
+
+
+def test_schedule_warmup_and_decay():
+    cfg = adamw.AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                            min_lr_ratio=0.1)
+    assert float(adamw.schedule(cfg, jnp.asarray(5))) == pytest.approx(0.5)
+    assert float(adamw.schedule(cfg, jnp.asarray(100))) == pytest.approx(0.1)
+
+
+def test_quantize_roundtrip_error_bound():
+    g = jax.random.normal(jax.random.PRNGKey(0), (256,))
+    q, s = compression.quantize(g)
+    back = compression.dequantize(q, s, jnp.float32)
+    assert float(jnp.abs(back - g).max()) <= float(s) * 0.5 + 1e-6
+
+
+def test_compressed_psum_matches_mean():
+    if len(jax.devices()) < 2:
+        pytest.skip("needs >=2 devices")
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:2]), ("data",))
+    g = jax.random.normal(jax.random.PRNGKey(1), (2, 64))
+    sharded = jax.device_put(g, jax.sharding.NamedSharding(
+        mesh, jax.sharding.PartitionSpec("data")))
+    # compressed reduce must approximate the exact replica mean
+    out = compression.compressed_psum_grads(
+        {"g": sharded}, mesh, axis="data")["g"]
+    expected = g.mean(0)
+    assert out.shape == expected.shape
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expected),
+                               atol=0.05)
+
+
+# -------------------------------------------------------------- checkpoint
+
+def _tree():
+    return {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "nested": {"b": jnp.ones((4,), jnp.bfloat16) * 1.5,
+                       "step": jnp.asarray(7, jnp.int32)}}
+
+
+def test_ckpt_roundtrip_bitwise():
+    with tempfile.TemporaryDirectory() as d:
+        tree = _tree()
+        ckpt.save(d, 3, tree)
+        out = ckpt.restore(d, jax.eval_shape(lambda: tree))
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+            assert a.dtype == b.dtype
+
+
+def test_ckpt_retention():
+    with tempfile.TemporaryDirectory() as d:
+        for s in range(6):
+            ckpt.save(d, s, {"x": jnp.asarray(s)}, keep=2)
+        assert ckpt.all_steps(d) == [4, 5]
+
+
+def test_ckpt_restore_latest_and_specific():
+    with tempfile.TemporaryDirectory() as d:
+        for s in (1, 5, 9):
+            ckpt.save(d, s, {"x": jnp.asarray(float(s))}, keep=10)
+        assert ckpt.latest_step(d) == 9
+        out = ckpt.restore(d, {"x": jnp.asarray(0.0)}, step=5)
+        assert float(out["x"]) == 5.0
+
+
+def test_ckpt_atomicity_tmp_never_visible():
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save(d, 1, _tree())
+        assert not any(n.endswith(".tmp") for n in os.listdir(d))
+
+
+def test_async_checkpointer():
+    with tempfile.TemporaryDirectory() as d:
+        ac = ckpt.AsyncCheckpointer(d, keep=2)
+        for s in range(3):
+            ac.save(s, {"x": jnp.asarray(s)})
+        ac.wait()
+        assert ckpt.latest_step(d) == 2
+
+
+# ----------------------------------------------------------------- runtime
+
+def test_failure_injector_fires_once():
+    with tempfile.TemporaryDirectory() as d:
+        marker = os.path.join(d, "m")
+        inj = FailureInjector(fail_at_step=3, marker_path=marker)
+        inj.check(2)
+        with pytest.raises(SimulatedFailure):
+            inj.check(3)
+        inj.check(3)    # second run: marker exists, no raise
+
+
+def test_resume_or_init_fresh_and_restore():
+    with tempfile.TemporaryDirectory() as d:
+        init = lambda: {"w": jnp.zeros(3), "step": jnp.asarray(0)}
+        state, start = resume_or_init(d, init)
+        assert start == 0
+        ckpt.save(d, 12, {"w": jnp.ones(3), "step": jnp.asarray(12)})
+        state, start = resume_or_init(d, init)
+        assert start == 12
+        assert float(state["w"].sum()) == 3.0
+
+
+def test_straggler_monitor_flags_outlier():
+    mon = straggler.StragglerMonitor(window=20, k=4.0, min_samples=5)
+    for i in range(10):
+        mon.observe(i, 0.1 + 0.001 * (i % 3))
+    ev = mon.observe(10, 1.0)
+    assert ev is not None and ev.step == 10
+    assert mon.observe(11, 0.1) is None
+
+
+def test_elastic_rebuild_and_reshard():
+    # lose half the devices (4 -> 2): rebuild the largest viable mesh
+    n = len(jax.devices())
+    keep = max(1, n // 2)
+    mesh = elastic.rebuild_mesh(jax.devices()[:keep], model_parallel=1)
+    assert mesh.devices.size == keep
+    params = {"layers": {"w1": jnp.ones((2, 4, 8))}}   # (L, D, FF) stacked
+    state = {"params": params,
+             "opt": {"m": params, "v": params, "step": jnp.asarray(0)}}
+    out = elastic.reshard_state(state, mesh)
+    assert out["params"]["layers"]["w1"].shape == (2, 4, 8)
+
+
+def test_elastic_viable_shapes():
+    shapes = elastic.viable_mesh_shapes(7, model_parallel=2)
+    assert shapes[0] == (3, 2)

@@ -1,0 +1,198 @@
+"""Warp-size simulator: unit behavior + the paper's headline claims."""
+
+import numpy as np
+import pytest
+
+from repro.core.warpsim import machines, runner
+from repro.core.warpsim.coalesce import L1Cache, warp_transactions
+from repro.core.warpsim.config import MachineConfig
+from repro.core.warpsim.divergence import expand_workload
+from repro.core.warpsim.timing import simulate
+from repro.core.warpsim.trace import (
+    BENCHMARKS, Branch, Compute, Loop, Mem, Workload, get_workload,
+)
+
+
+# ---------------------------------------------------------------- coalescing
+
+def test_coalesced_pattern_one_transaction_per_block():
+    # 16 threads x 4B = 64B = exactly one 64B transaction
+    addrs = np.arange(16, dtype=np.int64) * 4
+    assert len(warp_transactions(addrs)) == 1
+
+
+def test_strided_pattern_transaction_count():
+    # stride 64B: every thread its own block
+    addrs = np.arange(8, dtype=np.int64) * 64
+    assert len(warp_transactions(addrs)) == 8
+
+
+def test_broadcast_single_transaction():
+    addrs = np.zeros(32, dtype=np.int64)
+    assert len(warp_transactions(addrs)) == 1
+
+
+def test_l1_pending_fill_semantics():
+    c = L1Cache(1024, 2)
+    assert c.lookup(5) is None
+    c.fill(5, fill_time=100.0)
+    assert c.lookup(5) == 100.0           # pending line visible with fill time
+    c.fill(5, fill_time=50.0)
+    assert c.lookup(5) == 50.0            # earlier completion wins
+
+
+def test_l1_lru_eviction():
+    c = L1Cache(2 * 64 * 2, 2)            # 2 sets x 2 ways
+    sets = c.n_sets
+    a, b, d = 0, sets, 2 * sets           # all map to set 0
+    c.fill(a, 0.0)
+    c.fill(b, 0.0)
+    c.lookup(a)                           # touch a -> b becomes LRU
+    c.fill(d, 0.0)                        # evicts b
+    assert c.lookup(b) is None
+    assert c.lookup(a) is not None
+
+
+# ---------------------------------------------------------------- divergence
+
+def _simple_branch_workload(corr):
+    prog = [Branch(p_taken=0.5, corr=corr,
+                   then=[Compute(4)], orelse=[Compute(4)])]
+    return Workload("t", prog, n_threads=256)
+
+
+def test_divergence_costs_issue_slots():
+    wl = _simple_branch_workload(corr=0.0)      # i.i.d. -> always diverges
+    cfg = machines.baseline(32)
+    ops = expand_workload(wl, cfg)
+    # each warp: 1 branch insn + both sides execute 4 insns at full width
+    issue = sum(op.issue_cycles for op in ops[0])
+    g = cfg.issue_cycles_per_group
+    assert issue == g * (1 + 4 + 4)
+
+
+def test_uniform_branch_no_divergence():
+    wl = _simple_branch_workload(corr=0.995)    # long runs -> warps uniform
+    cfg = machines.baseline(8)
+    ops = expand_workload(wl, cfg)
+    diverged = sum(1 for w in ops if len(w) > 2)
+    assert diverged < len(ops) * 0.5
+
+
+def test_mimd_issue_proportional_to_active():
+    wl = _simple_branch_workload(corr=0.0)
+    cfg = machines.lw_plus()
+    ops = expand_workload(wl, cfg)
+    for w in ops[:8]:
+        for op in w:
+            assert op.issue_cycles <= 4 * np.ceil(64 / 8)
+
+
+def test_same_workload_across_machines():
+    """All machines must execute the same logical thread-instructions."""
+    insns = {}
+    for name, cfg in machines.paper_suite().items():
+        ops = expand_workload(get_workload("NQU", n_threads=512), cfg)
+        insns[name] = sum(op.thread_insns for w in ops for op in w)
+    assert len(set(insns.values())) == 1, insns
+
+
+# ------------------------------------------------------------------- timing
+
+def test_memory_bound_workload_has_idle_cycles():
+    wl = Workload("mem", [Loop(4, [Mem("random", working_set=1 << 22)])],
+                  n_threads=512)
+    cfg = machines.baseline(32)
+    r = simulate("mem", expand_workload(wl, cfg), cfg)
+    assert r.idle_share > 0.5
+
+
+def test_compute_bound_workload_low_idle():
+    wl = Workload("comp", [Compute(200)], n_threads=1024)
+    cfg = machines.baseline(32)
+    r = simulate("comp", expand_workload(wl, cfg), cfg)
+    assert r.idle_share < 0.1
+    assert r.ipc > 0.9 * cfg.simd_width * 0.5
+
+
+def test_ideal_coalescing_reduces_requests():
+    wl = Workload("c", [Loop(4, [Mem("coalesced"), Compute(4)])],
+                  n_threads=1024)
+    base = machines.baseline(8)
+    sw = machines.sw_plus()
+    r_base = simulate("c", expand_workload(wl, base), base)
+    r_sw = simulate("c", expand_workload(wl, sw), sw)
+    assert r_sw.offchip_requests < r_base.offchip_requests
+    assert r_sw.merged_requests > 0
+
+
+# ------------------------------------------------- paper headline validation
+
+@pytest.fixture(scope="module")
+def suite_results():
+    return runner.run_suite(machines.paper_suite())
+
+
+def test_paper_swplus_beats_lwplus(suite_results):
+    s = runner.suite_summary(suite_results)
+    # Paper: SW+ outperforms LW+ by 11% on average. Band: [1.0, 1.35].
+    assert 1.0 < s["swplus_over_lwplus"] < 1.35
+
+
+def test_paper_swplus_beats_all_baselines(suite_results):
+    s = runner.suite_summary(suite_results)
+    for w in (8, 16, 32, 64):
+        assert s[f"swplus_over_ws{w}"] > 1.0, (w, s)
+
+
+def test_paper_best_baseline_is_1_2x_simd(suite_results):
+    """Fig. 1: best plain warp size is 1-2x SIMD width (8 or 16)."""
+    means = {w: runner.mean_ipc(suite_results[f"ws{w}"])
+             for w in (8, 16, 32, 64)}
+    best = max(means, key=means.get)
+    assert best in (8, 16)
+    assert means[16] > means[64]          # beyond 2x degrades
+
+
+def test_paper_coalescing_improves_with_warp_size(suite_results):
+    """Fig. 2: requests-per-insn falls (or saturates) as warps grow."""
+    rates = {w: np.mean([r.coalescing_rate
+                         for r in suite_results[f"ws{w}"].values()])
+             for w in (8, 16, 32, 64)}
+    assert rates[8] > rates[16] >= rates[32] * 0.98
+    assert rates[32] >= rates[64] * 0.98
+
+
+def test_paper_swplus_best_coalescer(suite_results):
+    s = runner.suite_summary(suite_results)
+    assert s["swplus_coalescing_improvement_vs_ws32"] > 0
+    assert s["swplus_coalescing_improvement_vs_ws64"] > 0
+
+
+def test_paper_swplus_reduces_idle_vs_ws8(suite_results):
+    s = runner.suite_summary(suite_results)
+    assert s["swplus_idle_reduction_vs_ws8"] > 0.05
+
+
+def test_paper_nqu_lwplus_return(suite_results):
+    """Sec 7: control-flow solution on 64-wide warps returns up to ~73%
+    for NQU."""
+    gain = suite_results["LW+"]["NQU"].ipc / suite_results["ws64"]["NQU"].ipc
+    assert 1.2 < gain < 1.9
+
+
+def test_paper_insensitive_benchmarks(suite_results):
+    """Sec 7: FWAL and DYN are insensitive to warp size."""
+    for b in ("FWAL", "DYN"):
+        ipcs = [suite_results[f"ws{w}"][b].ipc for w in (16, 32, 64)]
+        assert max(ipcs) / min(ipcs) < 1.15, (b, ipcs)
+
+
+def test_paper_mtm_writes_hurt_swplus(suite_results):
+    """Sec 7: SW+'s read-only coalescing cannot fix MTM's writes."""
+    gain = suite_results["SW+"]["MTM"].ipc / suite_results["ws64"]["MTM"].ipc
+    assert gain < 1.15
+
+
+def test_all_benchmarks_run():
+    assert len(BENCHMARKS) == 15
