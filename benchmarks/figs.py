@@ -16,9 +16,10 @@ from typing import Dict, List, Tuple
 
 import numpy as np
 
-from repro.core.warpsim import machines, runner
+from repro.core.warpsim import machines, runner, sweep
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+SWEEP_CACHE_DIR = os.path.join(RESULTS_DIR, "sweep_cache")
 Row = Tuple[str, float, float]
 
 
@@ -28,17 +29,23 @@ def _save(name: str, obj) -> None:
         json.dump(obj, f, indent=1)
 
 
+def _cache() -> sweep.ResultCache:
+    """Shared on-disk cell cache: repeated figure runs are near-free."""
+    return sweep.ResultCache(SWEEP_CACHE_DIR)
+
+
 @functools.lru_cache(maxsize=None)
 def _suite():
     t0 = time.time()
-    res = runner.run_suite(machines.paper_suite())
+    res = runner.run_suite(machines.paper_suite(), cache=_cache())
     return res, (time.time() - t0) * 1e6
 
 
 @functools.lru_cache(maxsize=None)
 def _simd_sweep(simd_width: int):
     t0 = time.time()
-    res = runner.run_suite(machines.warp_size_sweep(simd_width))
+    res = runner.run_suite(machines.warp_size_sweep(simd_width),
+                           cache=_cache())
     return res, (time.time() - t0) * 1e6
 
 

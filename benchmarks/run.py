@@ -20,9 +20,11 @@ def main() -> None:
                     help="comma-separated substring filters")
     args = ap.parse_args()
 
-    from benchmarks import figs, kernel_bench, moe_dispatch_bench, roofline_table
+    from benchmarks import (figs, kernel_bench, moe_dispatch_bench,
+                            roofline_table, sweep_bench)
 
     benches = [
+        ("sweep", sweep_bench.run),
         ("fig1", figs.fig1_warpsize_simd),
         ("fig2", figs.fig2_coalescing),
         ("fig3", figs.fig3_idle),

@@ -1,0 +1,67 @@
+"""Sweep-engine benchmark: cold/warm cache and serial-vs-parallel timing.
+
+Measures ``run_suite`` over the paper machine set × all 15 benchmarks three
+ways and reports the speedups the sweep subsystem exists to deliver:
+
+* ``serial_event`` — event-loop engine, no cache, no parallelism. Note this
+  baseline already uses the vectorized workload expansion, which on its own
+  is ~2x faster than the seed's per-warp Python expansion — so the derived
+  speedups below are *lower bounds* on the speedup vs the original seed
+  serial path.
+* ``cold`` — fast engine + process-parallel grid, fresh (empty) cache.
+* ``warm`` — same sweep again over the now-populated cache.
+
+Rows follow the harness CSV convention ``(name, us_per_call, derived)``
+where `derived` carries the speedup vs the serial event path.
+"""
+
+from __future__ import annotations
+
+import shutil
+import tempfile
+import time
+from typing import List, Tuple
+
+from repro.core.warpsim import machines, runner, sweep
+
+Row = Tuple[str, float, float]
+
+
+def run() -> List[Row]:
+    suite = machines.paper_suite()
+
+    t0 = time.time()
+    ref = runner.run_suite(suite, engine="event", parallel=False)
+    t_serial = time.time() - t0
+
+    cache_dir = tempfile.mkdtemp(prefix="warpsim-sweep-bench-")
+    try:
+        cold_cache = sweep.ResultCache(cache_dir)
+        t0 = time.time()
+        cold = runner.run_suite(suite, cache=cold_cache)
+        t_cold = time.time() - t0
+
+        warm_cache = sweep.ResultCache(cache_dir)
+        t0 = time.time()
+        warm = runner.run_suite(suite, cache=warm_cache)
+        t_warm = time.time() - t0
+    finally:
+        shutil.rmtree(cache_dir, ignore_errors=True)
+
+    # The cache and fast engine must be invisible in the numbers.
+    for m in ref:
+        for b in ref[m]:
+            assert cold[m][b].as_dict() == ref[m][b].as_dict(), (m, b)
+            assert warm[m][b].as_dict() == ref[m][b].as_dict(), (m, b)
+    assert warm_cache.hits == len(ref) * len(next(iter(ref.values())))
+
+    return [
+        ("sweep/serial_event", t_serial * 1e6, 1.0),
+        ("sweep/cold", t_cold * 1e6, t_serial / max(t_cold, 1e-9)),
+        ("sweep/warm", t_warm * 1e6, t_serial / max(t_warm, 1e-9)),
+    ]
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived:.6g}")

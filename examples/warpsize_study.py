@@ -1,23 +1,38 @@
 """Full warp-size study: every benchmark x machine, the paper's headline
-claims, and the TPU-side analogy (MoE dispatch strategies).
+claims, and a dense 4..128 warp-size scaling sweep — all driven through the
+cached, process-parallel sweep engine (``repro.core.warpsim.sweep``).
 
 Run:  PYTHONPATH=src python examples/warpsize_study.py
+
+Re-running is near-instant: every grid cell is served from the
+content-addressed cache under benchmarks/results/sweep_cache.
 """
-import json
 import sys
+import time
 
 sys.path.insert(0, "src")
 
 from repro.core.warpsim import machines, runner
+from repro.core.warpsim.sweep import ResultCache, SweepSpec, run_sweep
+
+CACHE_DIR = "benchmarks/results/sweep_cache"
 
 
 def main():
+    cache = ResultCache(CACHE_DIR)
+
     print("running 15 benchmarks x 6 machines (paper Figs. 2-7)...")
-    res = runner.run_suite(machines.paper_suite())
+    spec = SweepSpec(machines=machines.paper_suite())
+    t0 = time.time()
+    res = run_sweep(spec, cache=cache)
+    print(f"  {len(spec.cells())} cells in {time.time() - t0:.2f}s "
+          f"({cache.hits} cached, {cache.misses} simulated)")
+
     benches = list(next(iter(res.values())))
     print(f"\n{'':6s}" + " ".join(f"{b:>6s}" for b in benches))
     for m in res:
         print(f"{m:6s}" + " ".join(f"{res[m][b].ipc:6.2f}" for b in benches))
+
     print("\nheadline comparisons (paper Fig. 7 / Secs. 6.2-6.3):")
     s = runner.suite_summary(res)
     paper = {
@@ -30,6 +45,15 @@ def main():
         ref = paper.get(k)
         ref_s = f"(paper {ref:.2f})" if ref else ""
         print(f"  {k:40s} {v:6.3f} {ref_s}")
+
+    print("\ndense warp-size scaling sweep, 4..128 threads/warp:")
+    dense = SweepSpec.warp_size_range(4, 128)
+    t0 = time.time()
+    dres = run_sweep(dense, cache=cache)
+    print(f"  {len(dense.cells())} cells in {time.time() - t0:.2f}s")
+    for m, per_bench in dres.items():
+        print(f"  {m:6s} geomean IPC {runner.mean_ipc(per_bench):6.3f}")
+
     runner.save_results(res, "benchmarks/results/warpsim_suite.json")
     print("\nsaved benchmarks/results/warpsim_suite.json")
 

@@ -1,0 +1,31 @@
+"""Version-compat shims for jax API drift.
+
+The codebase targets the current jax surface (``jax.shard_map``,
+``pallas.tpu.CompilerParams``); older installed versions ship the same
+functionality under the pre-promotion names (``jax.experimental.shard_map``
+with ``check_rep``, ``TPUCompilerParams``). These wrappers resolve whichever
+spelling exists at import time so kernels and collectives run on both.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, mesh, in_specs, out_specs, **kw):
+    """``jax.shard_map`` with fallback to ``jax.experimental.shard_map``."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is None:
+        from jax.experimental.shard_map import shard_map as sm
+        if "check_vma" in kw:  # kwarg renamed from check_rep at promotion
+            kw["check_rep"] = kw.pop("check_vma")
+    return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+
+
+def tpu_compiler_params(**kw):
+    """``pltpu.CompilerParams`` / legacy ``pltpu.TPUCompilerParams``."""
+    from jax.experimental.pallas import tpu as pltpu
+    cls = getattr(pltpu, "CompilerParams", None)
+    if cls is None:
+        cls = pltpu.TPUCompilerParams
+    return cls(**kw)

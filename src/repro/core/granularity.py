@@ -34,6 +34,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro import compat
 from repro.models import moe as moe_mod
 from repro.models.config import ModelConfig
 
@@ -134,7 +135,7 @@ def sw_plus_ep_layer(params: dict, x: jax.Array, cfg: ModelConfig,
         return y, aux
 
     dp_spec = dp if dp else None
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         local_fn, mesh=mesh,
         in_specs=(P(None, None, None),          # router (lead dim 1)
                   P("model", None, None),       # w1 (E, D, F) EP
@@ -194,7 +195,7 @@ def seq_sharded_decode_attention(q: jax.Array, cache_k: jax.Array,
         acc = jax.lax.psum(acc_i * corr[..., None], "model")
         return (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q_loc.dtype)
 
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         local_fn, mesh=mesh,
         in_specs=(P(None, None, None),              # q replicated
                   P(None, "model", None, None),     # k: seq sharded

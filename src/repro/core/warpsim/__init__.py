@@ -5,14 +5,20 @@ Public API:
     MachineConfig, machines.{baseline,sw_plus,lw_plus,paper_suite}
     trace.get_workload / trace.BENCHMARKS
     runner.run_one / run_suite / suite_summary
+    sweep.SweepSpec / sweep.ResultCache / sweep.run_sweep
 """
 
 from repro.core.warpsim.config import MachineConfig
-from repro.core.warpsim import machines, runner, trace
-from repro.core.warpsim.divergence import expand_workload, simd_efficiency
+from repro.core.warpsim import machines, runner, sweep, trace
+from repro.core.warpsim.divergence import (
+    WarpStream, expand_stream, expand_workload, simd_efficiency,
+)
+from repro.core.warpsim.sweep import ResultCache, SweepSpec, run_sweep
 from repro.core.warpsim.timing import SimResult, simulate
 
 __all__ = [
-    "MachineConfig", "machines", "runner", "trace",
-    "expand_workload", "simd_efficiency", "SimResult", "simulate",
+    "MachineConfig", "machines", "runner", "sweep", "trace",
+    "WarpStream", "expand_stream", "expand_workload", "simd_efficiency",
+    "SimResult", "simulate",
+    "ResultCache", "SweepSpec", "run_sweep",
 ]

@@ -14,6 +14,7 @@ write accesses never merge (paper §7).
 
 from __future__ import annotations
 
+import zlib
 from typing import Dict
 
 import numpy as np
@@ -37,7 +38,10 @@ def generate_addresses(
     statements get a fresh region per instance.
     """
     if stmt.region is not None:
-        region_id = abs(hash(("region", stmt.region))) % (1 << 20)
+        # Stable across processes (unlike built-in str hashing, which is
+        # salted per interpreter) — required for cross-process result
+        # caching and parallel sweep workers to agree bit-for-bit.
+        region_id = zlib.crc32(stmt.region.encode()) % (1 << 20)
     else:
         region_id = (1 << 20) + uid
     base = np.int64(region_id) << _REGION_BITS

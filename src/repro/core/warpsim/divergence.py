@@ -17,12 +17,19 @@ per-warp macro-ops:
 Branch outcomes and memory addresses are drawn once per *thread pool* from
 the workload seed, so every machine model (any warp size, SW+, LW+)
 executes the identical logical workload.
+
+The expansion emits a :class:`WarpStream` — a struct-of-arrays encoding of
+all per-warp macro-op streams, built with vectorized per-statement passes
+(one ``lexsort``/dedup over the whole thread pool instead of one
+``np.unique`` per warp). :func:`expand_workload` materializes the stream
+into the legacy ``List[List[WarpOp]]`` shape for the reference event-loop
+engine and for tests; both views describe byte-identical op streams.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence
+from typing import List, Optional, Sequence, Union
 
 import numpy as np
 
@@ -31,6 +38,11 @@ from repro.core.warpsim.config import MachineConfig
 from repro.core.warpsim.trace import (
     Branch, Compute, Loop, Mem, Stmt, Workload, correlated_outcomes,
 )
+
+# WarpStream op kinds.
+KIND_COMPUTE = 0
+KIND_LOAD = 1
+KIND_STORE = 2
 
 
 @dataclasses.dataclass
@@ -50,21 +62,111 @@ class WarpOp:
         return self.mem_blocks is not None
 
 
-def expand_workload(
-    workload: Workload, cfg: MachineConfig
-) -> List[List[WarpOp]]:
-    """Expand a workload into per-warp macro-op streams for `cfg`."""
+@dataclasses.dataclass
+class WarpStream:
+    """Struct-of-arrays macro-op streams for all warps of one workload.
+
+    Ops are stored grouped by warp (CSR layout: ops of warp ``w`` are rows
+    ``op_start[w]:op_start[w+1]``) in program order within each warp. Memory
+    ops reference contiguous slices ``blk_off[i]:blk_off[i]+blk_len[i]`` of
+    the shared ``blocks`` / ``nbytes`` pools.
+    """
+
+    n_warps: int
+    warp: np.ndarray       # int64[n_ops] owning warp
+    issue: np.ndarray      # int64[n_ops] front-end occupancy
+    tins: np.ndarray       # int64[n_ops] thread-instructions
+    lanes: np.ndarray      # int64[n_ops] issued lane-slots
+    kind: np.ndarray       # int8[n_ops]  KIND_COMPUTE / KIND_LOAD / KIND_STORE
+    maccs: np.ndarray      # int64[n_ops] thread-level memory accesses
+    blk_off: np.ndarray    # int64[n_ops] offset into blocks / nbytes
+    blk_len: np.ndarray    # int64[n_ops] transactions of this op
+    blocks: np.ndarray     # int64[n_blocks] 64 B block ids
+    nbytes: np.ndarray     # int64[n_blocks] touched bytes per transaction
+    op_start: np.ndarray   # int64[n_warps+1] CSR row offsets
+
+    @property
+    def n_ops(self) -> int:
+        return len(self.warp)
+
+    def to_warp_ops(self) -> List[List[WarpOp]]:
+        """Materialize the legacy per-warp ``WarpOp`` lists."""
+        ops: List[List[WarpOp]] = [[] for _ in range(self.n_warps)]
+        warp = self.warp.tolist()
+        issue = self.issue.tolist()
+        tins = self.tins.tolist()
+        lanes = self.lanes.tolist()
+        kind = self.kind.tolist()
+        maccs = self.maccs.tolist()
+        off = self.blk_off.tolist()
+        ln = self.blk_len.tolist()
+        for i in range(self.n_ops):
+            k = kind[i]
+            if k == KIND_COMPUTE:
+                op = WarpOp(issue_cycles=issue[i], thread_insns=tins[i],
+                            lane_slots=lanes[i])
+            else:
+                o, l = off[i], ln[i]
+                op = WarpOp(issue_cycles=issue[i], thread_insns=tins[i],
+                            lane_slots=lanes[i],
+                            mem_blocks=self.blocks[o:o + l],
+                            mem_block_bytes=self.nbytes[o:o + l],
+                            mem_thread_accesses=maccs[i],
+                            is_load=(k == KIND_LOAD))
+            ops[warp[i]].append(op)
+        return ops
+
+
+def _grouped_transactions(keys, blocks: np.ndarray, block_bytes: int):
+    """Per-group intra-warp coalescing, vectorized over the thread pool.
+
+    `keys` are major-to-minor group key arrays — ``(warp,)`` for SIMT, or
+    ``(warp, fragment)`` for MIMD where transactions never merge across
+    never-reconverging fragments. Returns the major key per group (groups
+    sorted ascending by the full key) with, per group, the sorted unique
+    blocks and the bytes touched in each (the CC-2.0 semantics of
+    :func:`coalesce.warp_transactions_bytes`, applied to every group in one
+    lexsort + run-length dedup).
+    """
+    order = np.lexsort((blocks,) + tuple(reversed(keys)))
+    sk = [k[order] for k in keys]
+    sb = blocks[order]
+    new = np.empty(len(sb), dtype=bool)
+    new[0] = True
+    changed = sb[1:] != sb[:-1]
+    for k in sk:
+        changed = changed | (k[1:] != k[:-1])
+    new[1:] = changed
+    idx = np.nonzero(new)[0]
+    counts = np.diff(np.append(idx, len(sb)))
+    nbytes = np.minimum(counts * coalesce._WORD, block_bytes)
+    return sk[0][idx], sb[idx], nbytes
+
+
+def expand_stream(workload: Workload, cfg: MachineConfig) -> WarpStream:
+    """Expand a workload into the struct-of-arrays op streams for `cfg`."""
     n = workload.n_threads
     ws = cfg.warp_size
     if n % ws:
         raise ValueError(f"n_threads {n} not a multiple of warp size {ws}")
     n_warps = n // ws
     warp_of_thread = np.arange(n) // ws
-    ops: List[List[WarpOp]] = [[] for _ in range(n_warps)]
     rng = np.random.default_rng(workload.seed)
     uid = [0]  # per-statement-instance unique id for address bases
 
     g_simt = cfg.issue_cycles_per_group
+    simd = cfg.simd_width
+    tb = cfg.transaction_bytes
+
+    # Emission-order op columns (one chunk appended per statement pass).
+    c_warp: List[np.ndarray] = []
+    c_issue: List[np.ndarray] = []
+    c_tins: List[np.ndarray] = []
+    c_kind: List[np.ndarray] = []
+    c_maccs: List[np.ndarray] = []
+    c_blen: List[np.ndarray] = []
+    c_blocks: List[np.ndarray] = []
+    c_nbytes: List[np.ndarray] = []
 
     # LW+ warp fragments: once an MIMD warp splits at a branch, its
     # fragments never re-converge (paper §4.2/§6.1 — "threads may never
@@ -72,59 +174,55 @@ def expand_workload(
     # fragment, not across the whole warp.
     frag_id = np.zeros(n, dtype=np.int64)
 
-    def active_per_warp(mask: np.ndarray) -> np.ndarray:
-        return np.bincount(warp_of_thread[mask], minlength=n_warps)
+    def append(warps, issue, tins, kind, maccs, blen, blocks=None,
+               nbytes=None):
+        m = len(warps)
+        c_warp.append(np.asarray(warps, dtype=np.int64))
+        c_issue.append(np.asarray(issue, dtype=np.int64))
+        c_tins.append(np.asarray(tins, dtype=np.int64))
+        c_kind.append(np.full(m, kind, dtype=np.int8))
+        c_maccs.append(np.asarray(maccs, dtype=np.int64))
+        c_blen.append(np.asarray(blen, dtype=np.int64))
+        if blocks is not None:
+            c_blocks.append(np.asarray(blocks, dtype=np.int64))
+            c_nbytes.append(np.asarray(nbytes, dtype=np.int64))
 
     def emit_compute(mask: np.ndarray, count: int) -> None:
-        act = active_per_warp(mask)
-        for w in np.nonzero(act)[0]:
-            a = int(act[w])
-            if cfg.mimd:
-                issue = count * int(np.ceil(a / cfg.simd_width))
-            else:
-                issue = count * g_simt
-            ops[w].append(WarpOp(
-                issue_cycles=issue,
-                thread_insns=count * a,
-                lane_slots=issue * cfg.simd_width,
-            ))
+        act = np.bincount(warp_of_thread[mask], minlength=n_warps)
+        w_idx = np.nonzero(act)[0]
+        a = act[w_idx]
+        if cfg.mimd:
+            issue = count * -(-a // simd)
+        else:
+            issue = np.full(len(w_idx), count * g_simt, dtype=np.int64)
+        append(w_idx, issue, count * a, KIND_COMPUTE,
+               np.zeros(len(w_idx), dtype=np.int64),
+               np.zeros(len(w_idx), dtype=np.int64))
 
     def emit_mem(mask: np.ndarray, stmt: Mem) -> None:
         uid[0] += 1
         addrs = coalesce.generate_addresses(stmt, uid[0], n, rng)
-        act = active_per_warp(mask)
-        for w in np.nonzero(act)[0]:
-            lo, hi = w * ws, (w + 1) * ws
-            m = mask[lo:hi]
-            warp_addrs = addrs[lo:hi][m]
-            if cfg.mimd:
-                # Coalesce per never-reconverging fragment.
-                frags = frag_id[lo:hi][m]
-                blocks_l, bytes_l = [], []
-                for f in np.unique(frags):
-                    b, by = coalesce.warp_transactions_bytes(
-                        warp_addrs[frags == f], cfg.transaction_bytes)
-                    blocks_l.append(b)
-                    bytes_l.append(by)
-                blocks = np.concatenate(blocks_l)
-                nbytes = np.concatenate(bytes_l)
-            else:
-                blocks, nbytes = coalesce.warp_transactions_bytes(
-                    warp_addrs, cfg.transaction_bytes)
-            a = int(act[w])
-            if cfg.mimd:
-                issue = int(np.ceil(a / cfg.simd_width))
-            else:
-                issue = g_simt
-            ops[w].append(WarpOp(
-                issue_cycles=issue,
-                thread_insns=a,
-                lane_slots=issue * cfg.simd_width,
-                mem_blocks=blocks,
-                mem_block_bytes=nbytes,
-                mem_thread_accesses=a,
-                is_load=stmt.is_load,
-            ))
+        tid = np.nonzero(mask)[0]
+        blocks_all = addrs[tid] // tb
+        warp_all = warp_of_thread[tid]
+        if cfg.mimd:
+            # Coalesce per never-reconverging fragment; fragment groups of
+            # one warp are emitted in ascending fragment-id order.
+            keys = (warp_all, frag_id[tid])
+        else:
+            keys = (warp_all,)
+        uwarp, ublocks, unbytes = _grouped_transactions(keys, blocks_all, tb)
+        act = np.bincount(warp_all, minlength=n_warps)
+        w_idx = np.nonzero(act)[0]
+        a = act[w_idx]
+        starts = np.searchsorted(uwarp, w_idx, side="left")
+        ends = np.searchsorted(uwarp, w_idx, side="right")
+        if cfg.mimd:
+            issue = -(-a // simd)
+        else:
+            issue = np.full(len(w_idx), g_simt, dtype=np.int64)
+        append(w_idx, issue, a, KIND_LOAD if stmt.is_load else KIND_STORE,
+               a, ends - starts, ublocks, unbytes)
 
     def walk(stmts: Sequence[Stmt], mask: np.ndarray) -> None:
         if not mask.any():
@@ -152,9 +250,8 @@ def expand_workload(
                     # Permanent fragment split (no reconvergence in LW+),
                     # bounded at 4 fragments per warp (DWS-style splitting
                     # hardware tracks a small number of warp splits).
-                    nf = np.zeros(n_warps, dtype=np.int64)
-                    for w in range(n_warps):
-                        nf[w] = len(np.unique(frag_id[w * ws:(w + 1) * ws]))
+                    sorted_f = np.sort(frag_id.reshape(n_warps, ws), axis=1)
+                    nf = 1 + (sorted_f[:, 1:] != sorted_f[:, :-1]).sum(axis=1)
                     can_split = (nf < 4)[warp_of_thread]
                     upd = mask & can_split
                     frag_id[upd] = frag_id[upd] * 2 + outcome[upd]
@@ -166,11 +263,51 @@ def expand_workload(
                 raise TypeError(f"unknown stmt {type(s)}")
 
     walk(workload.program, np.ones(n, dtype=bool))
-    return ops
+
+    if c_warp:
+        warp = np.concatenate(c_warp)
+        issue = np.concatenate(c_issue)
+        tins = np.concatenate(c_tins)
+        kind = np.concatenate(c_kind)
+        maccs = np.concatenate(c_maccs)
+        blen = np.concatenate(c_blen)
+    else:
+        warp = issue = tins = maccs = blen = np.zeros(0, dtype=np.int64)
+        kind = np.zeros(0, dtype=np.int8)
+    blocks = (np.concatenate(c_blocks) if c_blocks
+              else np.zeros(0, dtype=np.int64))
+    nbytes = (np.concatenate(c_nbytes) if c_nbytes
+              else np.zeros(0, dtype=np.int64))
+    blk_off = np.zeros(len(blen), dtype=np.int64)
+    if len(blen):
+        np.cumsum(blen[:-1], out=blk_off[1:])
+
+    # Group ops by warp, preserving program order within each warp; block
+    # pools stay in emission order (ops carry offsets into them).
+    perm = np.argsort(warp, kind="stable")
+    warp = warp[perm]
+    op_start = np.searchsorted(warp, np.arange(n_warps + 1))
+    return WarpStream(
+        n_warps=n_warps, warp=warp, issue=issue[perm], tins=tins[perm],
+        lanes=issue[perm] * simd, kind=kind[perm], maccs=maccs[perm],
+        blk_off=blk_off[perm], blk_len=blen[perm], blocks=blocks,
+        nbytes=nbytes, op_start=op_start,
+    )
 
 
-def simd_efficiency(ops: List[List[WarpOp]]) -> float:
+def expand_workload(
+    workload: Workload, cfg: MachineConfig
+) -> List[List[WarpOp]]:
+    """Expand a workload into per-warp macro-op lists for `cfg`."""
+    return expand_stream(workload, cfg).to_warp_ops()
+
+
+def simd_efficiency(ops) -> float:
     """Useful thread-instructions per issued lane-slot."""
-    useful = sum(op.thread_insns for warp in ops for op in warp)
-    slots = sum(op.lane_slots for warp in ops for op in warp)
+    if isinstance(ops, WarpStream):
+        useful = int(ops.tins.sum())
+        slots = int(ops.lanes.sum())
+    else:
+        useful = sum(op.thread_insns for warp in ops for op in warp)
+        slots = sum(op.lane_slots for warp in ops for op in warp)
     return useful / max(slots, 1)

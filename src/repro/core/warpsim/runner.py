@@ -1,4 +1,4 @@
-"""Benchmark x machine sweep driver with result caching."""
+"""Benchmark x machine suite driver (thin veneer over the sweep engine)."""
 
 from __future__ import annotations
 
@@ -8,18 +8,18 @@ from typing import Dict, Iterable, Mapping, Optional
 
 import numpy as np
 
-from repro.core.warpsim import machines as machines_mod
+from repro.core.warpsim import sweep as sweep_mod
 from repro.core.warpsim.config import MachineConfig
-from repro.core.warpsim.divergence import expand_workload
+from repro.core.warpsim.divergence import expand_stream
 from repro.core.warpsim.timing import SimResult, simulate
 from repro.core.warpsim.trace import BENCHMARKS, get_workload
 
 
 def run_one(bench: str, cfg: MachineConfig, n_threads: Optional[int] = None,
-            seed: int = 0) -> SimResult:
+            seed: int = 0, engine: str = "auto") -> SimResult:
     wl = get_workload(bench, n_threads=n_threads, seed=seed)
-    ops = expand_workload(wl, cfg)
-    return simulate(wl.name, ops, cfg)
+    stream = expand_stream(wl, cfg)
+    return simulate(wl.name, stream, cfg, engine=engine)
 
 
 def run_suite(
@@ -27,15 +27,21 @@ def run_suite(
     benches: Iterable[str] = BENCHMARKS,
     n_threads: Optional[int] = None,
     seed: int = 0,
+    cache: Optional[sweep_mod.ResultCache] = None,
+    parallel: Optional[bool] = None,
+    engine: str = "auto",
 ) -> Dict[str, Dict[str, SimResult]]:
-    """results[machine][bench] -> SimResult."""
-    machine_set = machine_set or machines_mod.paper_suite()
-    out: Dict[str, Dict[str, SimResult]] = {}
-    for mname, cfg in machine_set.items():
-        out[mname] = {}
-        for b in benches:
-            out[mname][b] = run_one(b, cfg, n_threads=n_threads, seed=seed)
-    return out
+    """results[machine][bench] -> SimResult.
+
+    Delegates to :func:`repro.core.warpsim.sweep.run_sweep`: pass `cache`
+    for on-disk result reuse across runs and `parallel` to force or forbid
+    process-parallel grid execution (default auto).
+    """
+    spec = sweep_mod.SweepSpec(
+        benches=tuple(benches), machines=machine_set,
+        n_threads=n_threads, seeds=(seed,))
+    return sweep_mod.run_sweep(spec, cache=cache, parallel=parallel,
+                               engine=engine)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,279 @@
+"""Parallel warp-size sweep engine with content-addressed result caching.
+
+The paper's argument rests on dense sweeps of warp size × machine variant ×
+benchmark grids (Figs. 1–7). This module turns those grids into first-class
+objects:
+
+* :class:`SweepSpec` — a declarative grid (benches × machines × seeds,
+  optional warp-size range 4–128) that enumerates its cells in a fixed,
+  deterministic order.
+* :class:`ResultCache` — a content-addressed on-disk cache. Keys are SHA-256
+  digests over ``(model version, bench, canonical MachineConfig dict,
+  n_threads, seed)``, so *any* change to any machine parameter — or to the
+  simulation model itself via :data:`MODEL_VERSION` — produces a different
+  key. Corrupt or stale cache files are treated as misses and removed.
+* :func:`run_sweep` — executes the uncached cells, process-parallel via
+  ``concurrent.futures.ProcessPoolExecutor``, and returns results in the
+  spec's deterministic order regardless of completion order.
+
+Usage (see ``examples/warpsize_study.py``)::
+
+    from repro.core.warpsim import sweep, machines
+
+    spec = sweep.SweepSpec(machines=machines.paper_suite())
+    grid = sweep.run_sweep(spec, cache=sweep.ResultCache("/tmp/warpsim"))
+    grid["SW+"]["BFS"].ipc          # results[machine][bench] -> SimResult
+
+    # Dense warp-size scaling study, 4..128 threads/warp:
+    spec = sweep.SweepSpec.warp_size_range()
+    grid = sweep.run_sweep(spec)
+
+Simulation results are bit-deterministic across processes (workload
+expansion draws everything from the workload seed and stable hashes), so a
+cache entry computed by any worker — or any earlier run — is exact.
+"""
+
+from __future__ import annotations
+
+import concurrent.futures
+import dataclasses
+import functools
+import hashlib
+import json
+import os
+from typing import Dict, List, Mapping, Optional, Tuple
+
+from repro.core.warpsim import machines as machines_mod
+from repro.core.warpsim.config import MachineConfig
+from repro.core.warpsim.divergence import expand_stream
+from repro.core.warpsim.timing import SimResult, simulate
+from repro.core.warpsim.trace import BENCHMARKS, get_workload
+
+# Bump whenever the simulation model changes observable numbers: it is part
+# of every cache key, so stale entries from older models can never be
+# returned as current results.
+MODEL_VERSION = "warpsim-2"
+
+# SimResult fields persisted in cache entries (derived properties such as
+# ipc / coalescing_rate are recomputed, never stored).
+_RESULT_FIELDS = tuple(f.name for f in dataclasses.fields(SimResult))
+
+
+# ---------------------------------------------------------------------------
+# Cache keys
+# ---------------------------------------------------------------------------
+
+
+def machine_key(cfg: MachineConfig) -> str:
+    """Stable content hash of a machine configuration.
+
+    Every field participates, so changing any parameter (warp size, DRAM
+    latency, L1 geometry, idealization flags, even the display name) yields
+    a different key.
+    """
+    blob = json.dumps(dataclasses.asdict(cfg), sort_keys=True)
+    return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+
+@functools.lru_cache(maxsize=None)
+def _default_n_threads(bench: str) -> int:
+    return get_workload(bench).n_threads
+
+
+def cell_key(bench: str, cfg: MachineConfig, n_threads: Optional[int],
+             seed: int) -> str:
+    """Content-addressed key for one (bench, machine, n_threads, seed) cell."""
+    if n_threads is None:
+        # Canonicalize: a cell run with the bench's default thread count is
+        # the same cell as one requesting that count explicitly.
+        n_threads = _default_n_threads(bench.upper())
+    blob = json.dumps({
+        "model": MODEL_VERSION,
+        "bench": bench.upper(),
+        "machine": dataclasses.asdict(cfg),
+        "n_threads": n_threads,
+        "seed": seed,
+    }, sort_keys=True)
+    return hashlib.sha256(blob.encode()).hexdigest()
+
+
+class ResultCache:
+    """Content-addressed on-disk store of :class:`SimResult` cells.
+
+    One JSON file per key under `root`. Reads that fail for any reason
+    (truncated write, garbage contents, missing or extra fields, schema
+    drift) count as misses and the offending file is deleted, so a corrupt
+    cache degrades to a cold one instead of poisoning sweeps.
+    """
+
+    def __init__(self, root: str):
+        self.root = root
+        self.hits = 0
+        self.misses = 0
+
+    def _path(self, key: str) -> str:
+        return os.path.join(self.root, key[:2], key + ".json")
+
+    def get(self, key: str) -> Optional[SimResult]:
+        path = self._path(key)
+        try:
+            with open(path) as f:
+                blob = json.load(f)
+            fields = blob["result"]
+            if set(fields) != set(_RESULT_FIELDS):
+                raise ValueError("schema mismatch")
+            res = SimResult(**fields)
+        except FileNotFoundError:
+            self.misses += 1
+            return None
+        except Exception:
+            # Corrupt entry: drop it and treat as a miss.
+            try:
+                os.remove(path)
+            except OSError:
+                pass
+            self.misses += 1
+            return None
+        self.hits += 1
+        return res
+
+    def put(self, key: str, result: SimResult) -> None:
+        path = self._path(key)
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        # Per-process tmp name: concurrent writers of the same cell must not
+        # clobber each other's tmp file (results are deterministic, so
+        # whichever os.replace lands last is equally correct).
+        tmp = f"{path}.{os.getpid()}.tmp"
+        with open(tmp, "w") as f:
+            json.dump({"key": key, "model": MODEL_VERSION,
+                       "result": dataclasses.asdict(result)}, f)
+        os.replace(tmp, path)
+
+
+# ---------------------------------------------------------------------------
+# Sweep specification
+# ---------------------------------------------------------------------------
+
+
+# One grid cell: (machine name, machine config, bench, n_threads, seed).
+Cell = Tuple[str, MachineConfig, str, Optional[int], int]
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepSpec:
+    """A declarative bench × machine × seed grid.
+
+    `machines` maps display name -> :class:`MachineConfig`; when omitted,
+    `warp_sizes` builds plain SIMT baselines (``ws4`` … ``ws128``), and when
+    both are omitted the paper's seven-machine suite is used. Cells are
+    enumerated machines-major, benches-minor, seeds-innermost — a fixed
+    total order that parallel execution must (and does) preserve.
+    """
+
+    benches: Tuple[str, ...] = tuple(BENCHMARKS)
+    machines: Optional[Mapping[str, MachineConfig]] = None
+    warp_sizes: Tuple[int, ...] = ()
+    simd_width: int = 8
+    n_threads: Optional[int] = None
+    seeds: Tuple[int, ...] = (0,)
+
+    @classmethod
+    def warp_size_range(cls, lo: int = 4, hi: int = 128,
+                        simd_width: int = 8, **kw) -> "SweepSpec":
+        """Dense power-of-two warp-size sweep, `lo`..`hi` threads/warp."""
+        sizes = []
+        w = lo
+        while w <= hi:
+            sizes.append(w)
+            w *= 2
+        return cls(warp_sizes=tuple(sizes), simd_width=simd_width, **kw)
+
+    def machine_set(self) -> Dict[str, MachineConfig]:
+        if self.machines is not None:
+            return dict(self.machines)
+        if self.warp_sizes:
+            return {f"ws{w}": machines_mod.baseline(w, self.simd_width)
+                    for w in self.warp_sizes}
+        return machines_mod.paper_suite(self.simd_width)
+
+    def cells(self) -> List[Cell]:
+        out: List[Cell] = []
+        for mname, cfg in self.machine_set().items():
+            for b in self.benches:
+                for seed in self.seeds:
+                    out.append((mname, cfg, b, self.n_threads, seed))
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Execution
+# ---------------------------------------------------------------------------
+
+
+def _run_cell(args: Tuple[str, MachineConfig, Optional[int], int, str]
+              ) -> SimResult:
+    """Worker: simulate one grid cell (top-level for pickling)."""
+    bench, cfg, n_threads, seed, engine = args
+    wl = get_workload(bench, n_threads=n_threads, seed=seed)
+    stream = expand_stream(wl, cfg)
+    return simulate(wl.name, stream, cfg, engine=engine)
+
+
+def run_sweep(
+    spec: SweepSpec,
+    cache: Optional[ResultCache] = None,
+    parallel: Optional[bool] = None,
+    max_workers: Optional[int] = None,
+    engine: str = "auto",
+) -> Dict[int, Dict[str, Dict[str, SimResult]]] | Dict[str, Dict[str, SimResult]]:
+    """Run a sweep grid; returns ``results[machine][bench] -> SimResult``.
+
+    With multiple seeds the result is keyed ``results[seed][machine][bench]``.
+    Cached cells are served from `cache`; uncached cells run process-parallel
+    (`parallel=None` auto-enables parallelism when the grid is big enough and
+    more than one CPU is available). Result ordering is deterministic — the
+    spec's cell order — independent of worker completion order.
+    """
+    cells = spec.cells()
+    results: Dict[int, Dict[str, Dict[str, SimResult]]] = {
+        seed: {} for seed in spec.seeds}
+
+    todo: List[Tuple[Cell, Optional[str]]] = []
+    for mname, cfg, bench, n_threads, seed in cells:
+        key = (cell_key(bench, cfg, n_threads, seed)
+               if cache is not None else None)
+        cached = cache.get(key) if cache is not None else None
+        if cached is not None:
+            results[seed].setdefault(mname, {})[bench] = cached
+        else:
+            todo.append(((mname, cfg, bench, n_threads, seed), key))
+
+    if todo:
+        payloads = [(bench, cfg, n_threads, seed, engine)
+                    for (mname, cfg, bench, n_threads, seed), _ in todo]
+        ncpu = os.cpu_count() or 1
+        if parallel is None:
+            parallel = len(todo) >= 4 and ncpu > 1
+        if parallel:
+            workers = max_workers or min(ncpu, len(todo))
+            chunk = max(1, len(todo) // (4 * workers))
+            with concurrent.futures.ProcessPoolExecutor(workers) as ex:
+                sims = list(ex.map(_run_cell, payloads, chunksize=chunk))
+        else:
+            sims = [_run_cell(p) for p in payloads]
+        for ((mname, cfg, bench, n_threads, seed), key), res in zip(todo, sims):
+            results[seed].setdefault(mname, {})[bench] = res
+            if cache is not None:
+                cache.put(key, res)
+
+    # Re-impose the spec's machine/bench ordering (cache hits and parallel
+    # completion both fill dicts out of order).
+    ordered: Dict[int, Dict[str, Dict[str, SimResult]]] = {}
+    for seed in spec.seeds:
+        ordered[seed] = {
+            mname: {b: results[seed][mname][b] for b in spec.benches}
+            for mname in spec.machine_set()
+        }
+    if len(spec.seeds) == 1:
+        return ordered[spec.seeds[0]]
+    return ordered

@@ -11,17 +11,35 @@ The DRAM system is a set of memory controllers, each a bandwidth server
 (fixed access latency + per-64 B-transaction bus occupancy). SW+'s ideal
 coalescing merges read requests with in-flight requests to the same block
 across the whole SM via :class:`OutstandingTable`.
+
+Two engines implement the model:
+
+* ``engine="event"`` — the reference discrete-event loop over
+  ``List[List[WarpOp]]`` streams (one Python object per macro-op).
+* ``engine="fast"`` — the batched fast path. It consumes the
+  struct-of-arrays :class:`~repro.core.warpsim.divergence.WarpStream`
+  produced by ``expand_stream``: per-warp issue/compute phases are
+  precomputed as arrays, all order-independent aggregates (instruction
+  counts, front-end busy cycles, SIMD efficiency) are reduced vectorized
+  up front, and the event heap only has to carry scheduling decisions.
+  The fast engine replays the exact decision sequence of the reference
+  loop, so every :class:`SimResult` field is bit-identical (locked by the
+  golden tests in ``tests/test_golden.py``).
+
+``engine="auto"`` (default) picks the fast path.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import List
+from typing import List, Union
 
 from repro.core.warpsim.coalesce import L1Cache
 from repro.core.warpsim.config import MachineConfig
-from repro.core.warpsim.divergence import WarpOp, simd_efficiency
+from repro.core.warpsim.divergence import (
+    KIND_COMPUTE, KIND_LOAD, KIND_STORE, WarpOp, WarpStream, simd_efficiency,
+)
 
 
 @dataclasses.dataclass
@@ -78,12 +96,43 @@ class DRAM:
         return start + self.latency + svc
 
 
+Ops = Union[WarpStream, List[List[WarpOp]]]
+
+
 def simulate(
+    name: str,
+    warp_ops: Ops,
+    cfg: MachineConfig,
+    engine: str = "auto",
+) -> SimResult:
+    """Run the timing model over expanded per-warp op streams.
+
+    `warp_ops` may be a :class:`WarpStream` (preferred; what
+    ``expand_stream`` emits) or the legacy ``List[List[WarpOp]]``. `engine`
+    selects ``"fast"`` (batched arrays), ``"event"`` (reference loop) or
+    ``"auto"`` (fast). Both engines return bit-identical results.
+    """
+    if engine == "auto":
+        engine = "fast"
+    if engine == "fast":
+        return _simulate_fast(name, warp_ops, cfg)
+    if engine == "event":
+        if isinstance(warp_ops, WarpStream):
+            warp_ops = warp_ops.to_warp_ops()
+        return _simulate_event(name, warp_ops, cfg)
+    raise ValueError(f"unknown engine {engine!r}; use fast|event|auto")
+
+
+# ---------------------------------------------------------------------------
+# Reference event-loop engine
+# ---------------------------------------------------------------------------
+
+
+def _simulate_event(
     name: str,
     warp_ops: List[List[WarpOp]],
     cfg: MachineConfig,
 ) -> SimResult:
-    """Run the timing model over expanded per-warp op streams."""
     n_warps = len(warp_ops)
     n_sms = cfg.num_sms
     dram = DRAM(cfg)
@@ -188,4 +237,208 @@ def simulate(
         idle_cycles=idle / n_sms,
         busy_cycles=total_busy / n_sms,
         simd_eff=simd_efficiency(warp_ops),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Batched fast-path engine
+# ---------------------------------------------------------------------------
+
+
+def _normalize(warp_ops: Ops):
+    """Per-warp plain-list op phases + order-independent totals.
+
+    Returns ``(issues, kinds, blockss, nbytess, thread_insns, mem_insns,
+    total_busy, simd_eff)`` where ``issues[w][i]`` etc. are Python scalars
+    (C-speed indexing in the scheduling loop below).
+    """
+    if isinstance(warp_ops, WarpStream):
+        st = warp_ops
+        issue_l = st.issue.tolist()
+        kind_l = st.kind.tolist()
+        off_l = st.blk_off.tolist()
+        len_l = st.blk_len.tolist()
+        blocks_pool = st.blocks.tolist()
+        nbytes_pool = st.nbytes.tolist()
+        starts = st.op_start.tolist()
+        issues, kinds, blockss, nbytess = [], [], [], []
+        for w in range(st.n_warps):
+            lo, hi = starts[w], starts[w + 1]
+            issues.append(issue_l[lo:hi])
+            kinds.append(kind_l[lo:hi])
+            blockss.append([blocks_pool[off_l[i]:off_l[i] + len_l[i]]
+                            for i in range(lo, hi)])
+            nbytess.append([nbytes_pool[off_l[i]:off_l[i] + len_l[i]]
+                            for i in range(lo, hi)])
+        thread_insns = int(st.tins.sum())
+        mem_insns = int(st.maccs.sum())
+        total_busy = float(st.issue.sum())
+        eff = simd_efficiency(st)
+        return (issues, kinds, blockss, nbytess,
+                thread_insns, mem_insns, total_busy, eff)
+
+    issues, kinds, blockss, nbytess = [], [], [], []
+    thread_insns = mem_insns = 0
+    total_busy = 0
+    for warp in warp_ops:
+        wi, wk, wb, wn = [], [], [], []
+        for op in warp:
+            wi.append(op.issue_cycles)
+            total_busy += op.issue_cycles
+            thread_insns += op.thread_insns
+            if op.is_mem:
+                wk.append(KIND_LOAD if op.is_load else KIND_STORE)
+                wb.append([int(b) for b in op.mem_blocks])
+                wn.append([int(b) for b in op.mem_block_bytes])
+                mem_insns += op.mem_thread_accesses
+            else:
+                wk.append(KIND_COMPUTE)
+                wb.append(None)
+                wn.append(None)
+        issues.append(wi)
+        kinds.append(wk)
+        blockss.append(wb)
+        nbytess.append(wn)
+    return (issues, kinds, blockss, nbytess,
+            thread_insns, mem_insns, float(total_busy),
+            simd_efficiency(warp_ops))
+
+
+def _simulate_fast(name: str, warp_ops: Ops, cfg: MachineConfig) -> SimResult:
+    (issues, kinds, blockss, nbytess,
+     thread_insns, mem_insns, total_busy, eff) = _normalize(warp_ops)
+    n_warps = len(issues)
+    n_sms = cfg.num_sms
+
+    # DRAM (inlined bandwidth servers).
+    nctrl = cfg.num_mem_ctrls
+    ctrl_free = [0.0] * nctrl
+    dram_lat = float(cfg.dram_latency_cycles)
+    svc_unit = cfg.dram_cycles_per_transaction
+
+    # L1 (inlined set-associative LRU with pending-fill lines, identical
+    # decision sequence to coalesce.L1Cache) + SW+ outstanding tables.
+    n_sets = cfg.l1_size_bytes // (cfg.transaction_bytes * cfg.l1_ways)
+    ways = cfg.l1_ways
+    l1_sets: List[dict] = [dict() for _ in range(n_sms)]
+    l1_tick = [0] * n_sms
+    outstanding: List[dict] = [dict() for _ in range(n_sms)]
+    ideal = cfg.ideal_coalescing
+    hit_lat = cfg.l1_hit_latency
+    depth = cfg.pipeline_depth
+
+    issue_free = [0.0] * n_sms
+    sm_of = [min(w * n_sms // max(n_warps, 1), n_sms - 1)
+             for w in range(n_warps)]
+    heap = [(0.0, w) for w in range(n_warps) if issues[w]]
+    heapq.heapify(heap)
+    next_op = [0] * n_warps
+    n_ops_of = [len(x) for x in issues]
+
+    offchip = 0
+    merged = 0
+    l1_hits = 0
+
+    heappop = heapq.heappop
+    heappush = heapq.heappush
+
+    while heap:
+        ready_t, w = heappop(heap)
+        sm = sm_of[w]
+        i = next_op[w]
+        next_op[w] = i + 1
+
+        free = issue_free[sm]
+        t_start = ready_t if ready_t > free else free
+        t_acc = t_start + issues[w][i]
+        issue_free[sm] = t_acc
+
+        k = kinds[w][i]
+        if k == 0:                                   # compute phase
+            warp_ready = t_acc + depth
+        elif k == 2:                                 # store: fire-and-forget
+            for block, nb in zip(blockss[w][i], nbytess[w][i]):
+                c = block % nctrl
+                svc = svc_unit * ((nb if nb > 32 else 32) / 64.0)
+                cf = ctrl_free[c]
+                start = cf if cf > t_acc else t_acc
+                ctrl_free[c] = start + svc
+                offchip += 1
+            warp_ready = t_acc + hit_lat
+        else:                                        # load
+            done = t_acc + hit_lat
+            sets = l1_sets[sm]
+            tick = l1_tick[sm]
+            outst = outstanding[sm]
+            for block in blockss[w][i]:
+                # L1 lookup (pending lines visible with their fill time).
+                tick += 1
+                si = block % n_sets
+                s = sets.get(si)
+                if s is None:
+                    s = sets[si] = {}
+                ent = s.get(block)
+                if ent is not None:
+                    ent[0] = tick
+                    fill = ent[1]
+                    if fill <= t_acc:
+                        l1_hits += 1
+                        continue
+                else:
+                    fill = None
+                if ideal:
+                    out = outst.get(block)
+                    if out is not None and out > t_acc:
+                        merged += 1
+                        if out > done:
+                            done = out
+                        continue
+                # DRAM request (full 64 B read transaction).
+                c = block % nctrl
+                cf = ctrl_free[c]
+                start = cf if cf > t_acc else t_acc
+                ctrl_free[c] = start + svc_unit
+                completion = start + dram_lat + svc_unit
+                offchip += 1
+                # L1 fill / pending-line allocation.
+                tick += 1
+                if ent is not None:
+                    ent[0] = tick
+                    if completion < ent[1]:
+                        ent[1] = completion
+                else:
+                    if len(s) >= ways:
+                        victim = min(s, key=lambda b: s[b][0])  # LRU
+                        del s[victim]
+                    s[block] = [tick, completion]
+                if ideal:
+                    outst[block] = completion
+                    if len(outst) > 4096:
+                        outst = {b: t for b, t in outst.items() if t > t_acc}
+                        outstanding[sm] = outst
+                if completion > done:
+                    done = completion
+            l1_tick[sm] = tick
+            warp_ready = done
+
+        if next_op[w] < n_ops_of[w]:
+            heappush(heap, (warp_ready, w))
+
+    cycles = max(max(issue_free), 1.0)
+    # Idle share: fraction of scheduler slots with nothing to issue,
+    # averaged over SMs (paper Fig. 3).
+    idle = n_sms * cycles - total_busy
+
+    return SimResult(
+        name=name,
+        machine=cfg.name,
+        cycles=cycles,
+        thread_insns=thread_insns,
+        mem_insns=mem_insns,
+        offchip_requests=offchip,
+        merged_requests=merged,
+        l1_hits=l1_hits,
+        idle_cycles=idle / n_sms,
+        busy_cycles=total_busy / n_sms,
+        simd_eff=eff,
     )

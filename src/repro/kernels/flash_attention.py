@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+from repro import compat
 
 NEG_INF = -2.0e38
 
@@ -92,6 +93,6 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
         ],
         out_shape=jax.ShapeDtypeStruct((bh, sq, hd), q.dtype),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
     )(q, k, v)

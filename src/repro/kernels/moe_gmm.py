@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+from repro import compat
 
 
 def _gmm_kernel(block_expert_ref, x_ref, w_ref, o_ref, acc_ref):
@@ -71,7 +72,7 @@ def gmm(x: jax.Array, w: jax.Array, block_expert: jax.Array,
         ),
         out_shape=jax.ShapeDtypeStruct((m, np_), x.dtype),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
     )(block_expert.astype(jnp.int32), x, w)
     return out[:, :n]

@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+from repro import compat
 
 
 def _ssd_kernel(xdt_ref, da_ref, b_ref, c_ref, o_ref, h_ref, *, q: int,
@@ -88,6 +89,6 @@ def ssd_scan_kernel(xdt: jax.Array, da: jax.Array, b: jax.Array,
         scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
         out_shape=jax.ShapeDtypeStruct((bh, s, p), xdt.dtype),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
     )(xdt, da2, b, c)

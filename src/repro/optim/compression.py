@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+
 
 def quantize(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
     """Per-tensor symmetric int8: returns (q int8, scale f32)."""
@@ -58,8 +60,8 @@ def compressed_psum_grads(grads_stacked, mesh, axis: str = "data"):
 
         in_spec = P(axis, *[None] * (g.ndim - 1))
         out_spec = P(*[None] * (g.ndim - 1))
-        return jax.shard_map(body, mesh=mesh, in_specs=(in_spec,),
-                             out_specs=out_spec)(g)
+        return compat.shard_map(body, mesh=mesh, in_specs=(in_spec,),
+                                out_specs=out_spec)(g)
 
     return jax.tree.map(reduce_leaf, grads_stacked)
 

@@ -1,0 +1,126 @@
+"""Golden regression locks for the warp-size simulator.
+
+Two layers of protection:
+
+* The batched fast engine must be *bit-compatible* with the reference
+  event-loop engine: every ``SimResult`` field identical, over every paper
+  machine and a divergence/coalescing/store-heavy bench mix.
+* The paper-claim headline numbers (``suite_summary``) and a set of raw
+  per-cell counters are locked to golden constants on a small fixed-seed
+  workload, so any unintended model change — in expansion, coalescing,
+  timing, or the sweep plumbing — fails loudly here rather than shifting
+  figures silently.
+
+Golden constants were produced by ``runner.run_suite(paper_suite(),
+n_threads=512, seed=0)`` at the model version that introduced the sweep
+subsystem (coalesce.generate_addresses uses stable region hashing, so the
+numbers are reproducible across processes and machines).
+"""
+
+import dataclasses
+
+import pytest
+
+from repro.core.warpsim import machines, runner
+from repro.core.warpsim.divergence import expand_stream
+from repro.core.warpsim.timing import simulate
+from repro.core.warpsim.trace import get_workload
+
+# Benches exercising every op path: divergence (BFS), dense strided loads
+# (BKP), uncoalesced stores (MTM), shared-region reuse + broadcast (DYN),
+# stencil regions (SR2).
+GOLDEN_BENCHES = ("BFS", "BKP", "MTM", "DYN", "SR2")
+N_THREADS = 512
+
+
+@pytest.fixture(scope="module")
+def small_suite():
+    return runner.run_suite(machines.paper_suite(),
+                            benches=GOLDEN_BENCHES,
+                            n_threads=N_THREADS, parallel=False)
+
+
+# ------------------------------------------------ engine bit-compatibility
+
+@pytest.mark.parametrize("mname", list(machines.paper_suite()))
+@pytest.mark.parametrize("bench", GOLDEN_BENCHES)
+def test_fast_engine_matches_event_loop(mname, bench):
+    cfg = machines.paper_suite()[mname]
+    wl = get_workload(bench, n_threads=N_THREADS)
+    stream = expand_stream(wl, cfg)
+    fast = simulate(wl.name, stream, cfg, engine="fast")
+    event = simulate(wl.name, stream, cfg, engine="event")
+    assert dataclasses.asdict(fast) == dataclasses.asdict(event)
+
+
+def test_fast_engine_accepts_legacy_warp_ops():
+    """The fast path gives identical results fed WarpOp lists or streams."""
+    cfg = machines.sw_plus()
+    wl = get_workload("BFS", n_threads=N_THREADS)
+    stream = expand_stream(wl, cfg)
+    from_stream = simulate(wl.name, stream, cfg, engine="fast")
+    from_ops = simulate(wl.name, stream.to_warp_ops(), cfg, engine="fast")
+    assert dataclasses.asdict(from_stream) == dataclasses.asdict(from_ops)
+
+
+# ------------------------------------------------------- golden constants
+
+# Raw integer-exact counters for representative cells (no float tolerance:
+# cycles and idle_cycles are integral in this model).
+GOLDEN_CELLS = {
+    # (machine, bench): (cycles, offchip_requests, idle_cycles)
+    ("ws32", "BFS"): (7561.0, 793, 6685.0),
+    ("ws8", "BKP"): (12289.0, 1536, 9601.0),
+    ("SW+", "DYN"): (14357.0, 48, 3605.0),
+    ("LW+", "MTM"): (33759.0, 4288, 31775.0),
+    ("ws64", "SR2"): (4249.0, 292, 2585.0),
+}
+
+# suite_summary headline numbers (geomeans -> tight relative tolerance).
+# NOTE: this 5-bench, 512-thread grid is a *regression lock*, not the paper
+# reproduction — the full-suite paper claims are validated in
+# tests/test_warpsim.py.
+GOLDEN_SUMMARY = {
+    "swplus_over_lwplus": 1.0559580942993256,
+    "swplus_over_ws8": 1.0878303621199206,
+    "lwplus_over_ws8": 1.030183269575431,
+    "swplus_over_ws16": 1.0025453313346577,
+    "lwplus_over_ws16": 0.949417724762923,
+    "swplus_over_ws32": 1.0239482974193057,
+    "lwplus_over_ws32": 0.9696864894044306,
+    "swplus_over_ws64": 1.0588952416674289,
+    "lwplus_over_ws64": 1.0027814999325821,
+    "swplus_idle_reduction_vs_ws8": 0.017985380908448367,
+    "swplus_idle_reduction_vs_ws16": -0.02636868003910675,
+    "swplus_idle_reduction_vs_ws32": -0.03558266462257942,
+    "swplus_coalescing_improvement_vs_ws32": -0.011141603825815416,
+    "swplus_coalescing_improvement_vs_ws64": -0.013752561426224164,
+}
+
+
+def test_golden_cells(small_suite):
+    for (m, b), want in GOLDEN_CELLS.items():
+        r = small_suite[m][b]
+        got = (r.cycles, r.offchip_requests, r.idle_cycles)
+        assert got == want, (m, b, got, want)
+
+
+def test_golden_suite_summary(small_suite):
+    s = runner.suite_summary(small_suite)
+    assert set(s) == set(GOLDEN_SUMMARY)
+    for k, want in GOLDEN_SUMMARY.items():
+        assert s[k] == pytest.approx(want, rel=1e-9), (k, s[k], want)
+
+
+def test_suite_ignores_cache_and_parallel_mode(small_suite, tmp_path):
+    """Cached + parallel execution must be invisible in the numbers."""
+    from repro.core.warpsim.sweep import ResultCache
+    cache = ResultCache(str(tmp_path / "c"))
+    res = runner.run_suite(machines.paper_suite(), benches=GOLDEN_BENCHES,
+                           n_threads=N_THREADS, cache=cache, parallel=True)
+    again = runner.run_suite(machines.paper_suite(), benches=GOLDEN_BENCHES,
+                             n_threads=N_THREADS, cache=cache)
+    for m, per_bench in small_suite.items():
+        for b, r in per_bench.items():
+            assert dataclasses.asdict(res[m][b]) == dataclasses.asdict(r)
+            assert dataclasses.asdict(again[m][b]) == dataclasses.asdict(r)

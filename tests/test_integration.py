@@ -10,6 +10,8 @@ import tempfile
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # long integration sims: opt in with --runslow
+
 from repro.launch import serve as serve_lib
 from repro.launch import train as train_lib
 from repro.runtime.fault import SimulatedFailure

@@ -1,0 +1,176 @@
+"""Sweep engine unit tests: cache keys, hit/miss, corruption recovery,
+spec enumeration, and serial/parallel equivalence."""
+
+import dataclasses
+import json
+import os
+
+import pytest
+
+from repro.core.warpsim import machines
+from repro.core.warpsim.config import MachineConfig
+from repro.core.warpsim.sweep import (
+    ResultCache, SweepSpec, cell_key, machine_key, run_sweep,
+)
+
+SMALL = dict(benches=("BFS", "BKP", "DYN"), n_threads=256)
+
+
+def _spec(**kw):
+    base = dict(machines={"ws8": machines.baseline(8),
+                          "SW+": machines.sw_plus()}, **SMALL)
+    base.update(kw)
+    return SweepSpec(**base)
+
+
+# ------------------------------------------------------------------- cache
+
+def test_cache_miss_then_hit(tmp_path):
+    cache = ResultCache(str(tmp_path))
+    spec = _spec()
+    first = run_sweep(spec, cache=cache, parallel=False)
+    assert cache.hits == 0 and cache.misses == len(spec.cells())
+
+    warm = ResultCache(str(tmp_path))
+    second = run_sweep(spec, cache=warm, parallel=False)
+    assert warm.hits == len(spec.cells()) and warm.misses == 0
+    for m in first:
+        for b in first[m]:
+            assert (dataclasses.asdict(second[m][b])
+                    == dataclasses.asdict(first[m][b]))
+
+
+def test_warm_cache_never_simulates(tmp_path, monkeypatch):
+    cache = ResultCache(str(tmp_path))
+    spec = _spec()
+    run_sweep(spec, cache=cache, parallel=False)
+
+    from repro.core.warpsim import sweep as sweep_mod
+
+    def boom(args):
+        raise AssertionError("warm sweep must not simulate")
+
+    monkeypatch.setattr(sweep_mod, "_run_cell", boom)
+    res = run_sweep(spec, cache=ResultCache(str(tmp_path)), parallel=False)
+    assert res["SW+"]["BFS"].cycles > 0
+
+
+def test_cache_key_depends_on_every_machine_field(tmp_path):
+    """Changing ANY MachineConfig field must change the cell key.
+
+    The alternates map must cover every dataclass field — adding a field to
+    MachineConfig without extending it fails here, which is the reminder to
+    keep the cache key exhaustive.
+    """
+    base = MachineConfig()
+    alternates = {
+        "name": "other",
+        "warp_size": 64,
+        "simd_width": 4,
+        "ideal_coalescing": True,
+        "mimd": True,
+        "num_sms": 4,
+        "threads_per_sm": 2048,
+        "pipeline_depth": 12,
+        "core_clock_ghz": 2.0,
+        "num_mem_ctrls": 8,
+        "dram_bw_gbps": 100.0,
+        "dram_latency_cycles": 100,
+        "transaction_bytes": 128,
+        "l1_size_bytes": 96 * 1024,
+        "l1_ways": 4,
+        "l1_hit_latency": 2,
+    }
+    fields = {f.name for f in dataclasses.fields(MachineConfig)}
+    assert fields == set(alternates), "extend alternates for new fields"
+    k0 = cell_key("BFS", base, 256, 0)
+    for fname, alt in alternates.items():
+        assert getattr(base, fname) != alt, fname
+        cfg = dataclasses.replace(base, **{fname: alt})
+        assert cell_key("BFS", cfg, 256, 0) != k0, fname
+        assert machine_key(cfg) != machine_key(base), fname
+
+
+def test_cache_key_depends_on_bench_threads_seed():
+    cfg = MachineConfig()
+    k = cell_key("BFS", cfg, 256, 0)
+    assert cell_key("BKP", cfg, 256, 0) != k
+    assert cell_key("BFS", cfg, 512, 0) != k
+    assert cell_key("BFS", cfg, 256, 1) != k
+    # None canonicalizes to the bench's default thread count.
+    from repro.core.warpsim.trace import get_workload
+    default = get_workload("BFS").n_threads
+    assert cell_key("BFS", cfg, None, 0) == cell_key("BFS", cfg, default, 0)
+
+
+def test_cache_corrupt_file_recovers(tmp_path):
+    cache = ResultCache(str(tmp_path))
+    spec = _spec(benches=("DYN",))
+    ref = run_sweep(spec, cache=cache, parallel=False)
+
+    # Corrupt every stored entry three different ways.
+    paths = [os.path.join(root, f)
+             for root, _, files in os.walk(str(tmp_path))
+             for f in files if f.endswith(".json")]
+    assert paths
+    breakers = [
+        lambda p: open(p, "w").write("{ not json"),
+        lambda p: open(p, "w").write(json.dumps({"result": {"cycles": 1}})),
+        lambda p: open(p, "w").write(""),
+    ]
+    for i, p in enumerate(paths):
+        breakers[i % len(breakers)](p)
+
+    recovered = ResultCache(str(tmp_path))
+    res = run_sweep(spec, cache=recovered, parallel=False)
+    assert recovered.hits == 0          # all corrupt entries -> misses
+    for m in ref:
+        for b in ref[m]:
+            assert (dataclasses.asdict(res[m][b])
+                    == dataclasses.asdict(ref[m][b]))
+    # ... and the rewritten entries serve the next run.
+    again = ResultCache(str(tmp_path))
+    run_sweep(spec, cache=again, parallel=False)
+    assert again.misses == 0
+
+
+# -------------------------------------------------------------------- spec
+
+def test_spec_deterministic_cell_order():
+    spec = _spec()
+    cells = spec.cells()
+    assert cells == spec.cells()
+    assert [(m, b) for m, _, b, _, _ in cells] == [
+        ("ws8", "BFS"), ("ws8", "BKP"), ("ws8", "DYN"),
+        ("SW+", "BFS"), ("SW+", "BKP"), ("SW+", "DYN"),
+    ]
+
+
+def test_warp_size_range_spec():
+    spec = SweepSpec.warp_size_range(4, 128, benches=("DYN",))
+    names = list(spec.machine_set())
+    assert names == ["ws4", "ws8", "ws16", "ws32", "ws64", "ws128"]
+    sizes = [cfg.warp_size for cfg in spec.machine_set().values()]
+    assert sizes == [4, 8, 16, 32, 64, 128]
+
+
+def test_multi_seed_sweep_shape():
+    # BFS is seed-sensitive (branch outcomes + random neighbor loads).
+    spec = _spec(benches=("BFS",), seeds=(0, 1))
+    res = run_sweep(spec, parallel=False)
+    assert set(res) == {0, 1}
+    assert res[0]["ws8"]["BFS"].cycles != res[1]["ws8"]["BFS"].cycles
+
+
+# ---------------------------------------------------------- parallel exec
+
+def test_parallel_matches_serial():
+    spec = _spec()
+    serial = run_sweep(spec, parallel=False)
+    par = run_sweep(spec, parallel=True, max_workers=2)
+    assert list(par) == list(serial)            # deterministic ordering
+    for m in serial:
+        assert list(par[m]) == list(serial[m])
+        for b in serial[m]:
+            assert (dataclasses.asdict(par[m][b])
+                    == dataclasses.asdict(serial[m][b]))
