@@ -41,6 +41,19 @@ def _suite():
     return res, (time.time() - t0) * 1e6
 
 
+# Workload seeds for the variance bands of Figs. 4/7 (multi-seed averaging
+# over the same grid; cells are cached per seed so re-runs are free).
+BAND_SEEDS = (0, 1, 2)
+
+
+@functools.lru_cache(maxsize=None)
+def _suite_seeds():
+    t0 = time.time()
+    res = runner.run_suite(machines.paper_suite(), cache=_cache(),
+                           seeds=BAND_SEEDS)
+    return res, (time.time() - t0) * 1e6
+
+
 @functools.lru_cache(maxsize=None)
 def _simd_sweep(simd_width: int):
     t0 = time.time()
@@ -101,9 +114,18 @@ def fig3_idle() -> List[Row]:
 
 
 def fig4_perf() -> List[Row]:
-    """Fig. 4: performance (IPC) per warp size."""
+    """Fig. 4: performance (IPC) per warp size, plus workload-seed
+    variance bands (mean and min/max of suite-geomean IPC over seeds)."""
     rows, dump = _per_bench_metric("ipc", ("ws8", "ws16", "ws32", "ws64"))
     rows = [(f"fig4/{n}", u, v) for n, u, v in rows]
+    seeded, us = _suite_seeds()
+    for m in ("ws8", "ws16", "ws32", "ws64"):
+        vals = [runner.mean_ipc(seeded[s][m]) for s in BAND_SEEDS]
+        band = {"mean": float(np.mean(vals)),
+                "min": float(min(vals)), "max": float(max(vals))}
+        for stat, v in band.items():
+            rows.append((f"fig4/band/{m}/{stat}", us / len(BAND_SEEDS), v))
+        dump[f"band/{m}"] = band
     _save("fig4_perf.json", dump)
     return rows
 
@@ -136,5 +158,13 @@ def fig7_swlw_perf() -> List[Row]:
     for k, v in summary.items():
         rows.append((f"fig7/summary/{k}", us, v))
     dump["summary"] = summary
+    # Multi-seed variance bands: suite_summary over the seed-keyed grid
+    # returns mean + min/max per headline metric.
+    seeded, us_b = _suite_seeds()
+    bands = runner.suite_summary(seeded)
+    for k, band in bands.items():
+        for stat in ("mean", "min", "max"):
+            rows.append((f"fig7/band/{k}/{stat}", us_b, band[stat]))
+    dump["summary_bands"] = bands
     _save("fig7_swlw_perf.json", dump)
     return rows

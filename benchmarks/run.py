@@ -5,6 +5,12 @@ Prints ``name,us_per_call,derived`` CSV (spec'd format).
 
   PYTHONPATH=src python -m benchmarks.run             # everything
   PYTHONPATH=src python -m benchmarks.run --only fig7,moe
+
+``--only sweep`` runs the sweep-engine benchmark, whose rows include the
+ResultCache hit/miss counters and the shared-expansion grouping counters
+(``sweep/cold_expansion_groups`` / ``sweep/cold_expansions_saved``) of the
+cold and warm runs, and which asserts the cold-sweep speedup floors
+(see ``benchmarks/sweep_bench.py``).
 """
 
 from __future__ import annotations

@@ -1,67 +1,183 @@
-"""Sweep-engine benchmark: cold/warm cache and serial-vs-parallel timing.
+"""Sweep-engine benchmark: cold/warm cache and engine-generation timing.
 
-Measures ``run_suite`` over the paper machine set × all 15 benchmarks three
-ways and reports the speedups the sweep subsystem exists to deliver:
+Measures ``run_suite`` over the paper machine set × benchmarks and reports
+the speedups the sweep subsystem exists to deliver:
 
-* ``serial_event`` — event-loop engine, no cache, no parallelism. Note this
-  baseline already uses the vectorized workload expansion, which on its own
-  is ~2x faster than the seed's per-warp Python expansion — so the derived
-  speedups below are *lower bounds* on the speedup vs the original seed
-  serial path.
-* ``cold`` — fast engine + process-parallel grid, fresh (empty) cache.
+* ``serial_event`` — event-loop engine, no cache, no parallelism, no
+  expansion sharing. Note this baseline already uses the vectorized
+  workload expansion, which on its own is ~2x faster than the seed's
+  per-warp Python expansion — so the derived speedups below are *lower
+  bounds* on the speedup vs the original seed serial path.
+* ``cold_pr1`` — the PR 1 cold path, re-measured live: process-parallel
+  grid over a fresh cache with one expansion per cell (no grouping) and
+  the previous-generation ``fast_nested`` engine (nested per-warp op
+  lists).
+* ``cold`` — the current cold path: shared-expansion grouping + the
+  flat-CSR engine (compiled core when available), fresh (empty) cache.
 * ``warm`` — same sweep again over the now-populated cache.
 
+The in-process expansion LRU is cleared between phases so every cold
+number is an honest from-scratch measurement. Extra rows surface the
+ResultCache hit/miss counters and the expansion-grouping counters of the
+cold and warm runs, so cache efficacy is visible in the BENCH trajectory.
+
+Speedup floors are asserted (tunable via CLI): ``cold`` must beat
+``cold_pr1`` by ``--min-speedup-pr1`` (default 2.5) and ``serial_event``
+by ``--min-speedup-event`` (default 8). ``--quick`` shrinks the grid for
+CI smoke runs (floors scale down: parallel/pool overhead dominates tiny
+grids) and ``--json PATH`` dumps the rows for artifact upload.
+
 Rows follow the harness CSV convention ``(name, us_per_call, derived)``
-where `derived` carries the speedup vs the serial event path.
+where `derived` carries the speedup vs the serial event path (timing
+rows) or the raw counter value (counter rows, ``us_per_call`` = 0).
 """
 
 from __future__ import annotations
 
+import argparse
+import json
 import shutil
 import tempfile
 import time
-from typing import List, Tuple
+from typing import List, Optional, Tuple
 
-from repro.core.warpsim import machines, runner, sweep
+from repro.core.warpsim import _native, machines, runner, sweep
 
 Row = Tuple[str, float, float]
 
+QUICK_BENCHES = ("BFS", "BKP", "MTM", "DYN")
+QUICK_N_THREADS = 512
 
-def run() -> List[Row]:
+
+def run(quick: bool = False,
+        min_speedup_pr1: Optional[float] = None,
+        min_speedup_event: Optional[float] = None) -> List[Row]:
+    if min_speedup_pr1 is None:
+        min_speedup_pr1 = 1.5 if quick else 2.5
+    if min_speedup_event is None:
+        min_speedup_event = 3.0 if quick else 8.0
     suite = machines.paper_suite()
+    kw = (dict(benches=QUICK_BENCHES, n_threads=QUICK_N_THREADS)
+          if quick else {})
 
-    t0 = time.time()
-    ref = runner.run_suite(suite, engine="event", parallel=False)
-    t_serial = time.time() - t0
+    # Compile the native core (if possible) outside the timed regions: it
+    # is a once-per-machine cost, not a per-sweep cost.
+    native = _native.available()
 
-    cache_dir = tempfile.mkdtemp(prefix="warpsim-sweep-bench-")
-    try:
-        cold_cache = sweep.ResultCache(cache_dir)
+    # Each phase is min-of-N with from-scratch state per repeat (fresh
+    # cache dir, cleared expansion LRU): min is the noise-robust wall-time
+    # estimator, and the asserted ratios must not flap with box jitter.
+    reps = 2
+
+    # The two baseline phases replicate PR 1 semantics exactly: one
+    # expansion per cell, no in-process expansion reuse (the LRU postdates
+    # them). reuse_expansion=False rides in the worker payload, so it
+    # holds under any multiprocessing start method.
+    baseline_kw = dict(group_expansion=False, reuse_expansion=False, **kw)
+    t_serial = float("inf")
+    for _ in range(reps):
         t0 = time.time()
-        cold = runner.run_suite(suite, cache=cold_cache)
-        t_cold = time.time() - t0
+        ref = runner.run_suite(suite, engine="event", parallel=False,
+                               **baseline_kw)
+        t_serial = min(t_serial, time.time() - t0)
 
+    t_pr1 = float("inf")
+    for _ in range(reps):
+        pr1_dir = tempfile.mkdtemp(prefix="warpsim-sweep-bench-pr1-")
+        try:
+            t0 = time.time()
+            pr1 = runner.run_suite(
+                suite, cache=sweep.ResultCache(pr1_dir),
+                engine="fast_nested", **baseline_kw)
+            t_pr1 = min(t_pr1, time.time() - t0)
+        finally:
+            shutil.rmtree(pr1_dir, ignore_errors=True)
+
+    t_cold = float("inf")
+    cache_dir = None
+    try:
+        for _ in range(reps):
+            if cache_dir is not None:
+                shutil.rmtree(cache_dir, ignore_errors=True)
+            cache_dir = tempfile.mkdtemp(prefix="warpsim-sweep-bench-")
+            sweep.EXPANSION_CACHE.clear()
+            cold_cache = sweep.ResultCache(cache_dir)
+            t0 = time.time()
+            cold = runner.run_suite(suite, cache=cold_cache, **kw)
+            t_cold = min(t_cold, time.time() - t0)
+            cold_stats = dict(sweep.LAST_SWEEP_STATS)
+
+        # Warm sweep over the surviving (fully populated) cold cache.
         warm_cache = sweep.ResultCache(cache_dir)
         t0 = time.time()
-        warm = runner.run_suite(suite, cache=warm_cache)
+        warm = runner.run_suite(suite, cache=warm_cache, **kw)
         t_warm = time.time() - t0
+        warm_stats = dict(sweep.LAST_SWEEP_STATS)
     finally:
-        shutil.rmtree(cache_dir, ignore_errors=True)
+        if cache_dir is not None:
+            shutil.rmtree(cache_dir, ignore_errors=True)
 
-    # The cache and fast engine must be invisible in the numbers.
+    # The cache, grouping and every engine generation must be invisible in
+    # the numbers: bit-identical to the reference event loop.
     for m in ref:
         for b in ref[m]:
+            assert pr1[m][b].as_dict() == ref[m][b].as_dict(), (m, b)
             assert cold[m][b].as_dict() == ref[m][b].as_dict(), (m, b)
             assert warm[m][b].as_dict() == ref[m][b].as_dict(), (m, b)
-    assert warm_cache.hits == len(ref) * len(next(iter(ref.values())))
+    n_cells = len(ref) * len(next(iter(ref.values())))
+    assert warm_cache.hits == n_cells
+    assert warm_stats["cache_hits"] == n_cells
+    assert cold_stats["cache_misses"] == n_cells
+
+    speedup_pr1 = t_pr1 / max(t_cold, 1e-9)
+    speedup_event = t_serial / max(t_cold, 1e-9)
+    assert speedup_pr1 >= min_speedup_pr1, (
+        f"cold sweep only {speedup_pr1:.2f}x faster than the PR 1 cold "
+        f"path (floor {min_speedup_pr1}x): {t_cold:.3f}s vs {t_pr1:.3f}s")
+    assert speedup_event >= min_speedup_event, (
+        f"cold sweep only {speedup_event:.2f}x faster than serial_event "
+        f"(floor {min_speedup_event}x): {t_cold:.3f}s vs {t_serial:.3f}s")
 
     return [
         ("sweep/serial_event", t_serial * 1e6, 1.0),
-        ("sweep/cold", t_cold * 1e6, t_serial / max(t_cold, 1e-9)),
+        ("sweep/cold_pr1", t_pr1 * 1e6, t_serial / max(t_pr1, 1e-9)),
+        ("sweep/cold", t_cold * 1e6, speedup_event),
         ("sweep/warm", t_warm * 1e6, t_serial / max(t_warm, 1e-9)),
+        ("sweep/cold_speedup_vs_pr1", 0.0, speedup_pr1),
+        ("sweep/native_engine", 0.0, 1.0 if native else 0.0),
+        ("sweep/cold_cells", 0.0, float(cold_stats["cells"])),
+        ("sweep/cold_cache_misses", 0.0, float(cold_stats["cache_misses"])),
+        ("sweep/cold_expansion_groups", 0.0,
+         float(cold_stats["expansion_groups"])),
+        ("sweep/cold_expansions_saved", 0.0,
+         float(cold_stats["expansions_saved"])),
+        ("sweep/warm_cache_hits", 0.0, float(warm_stats["cache_hits"])),
+        ("sweep/warm_cache_misses", 0.0, float(warm_stats["cache_misses"])),
     ]
 
 
-if __name__ == "__main__":
-    for name, us, derived in run():
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced grid (CI smoke): 4 benches, 512 threads")
+    ap.add_argument("--min-speedup-pr1", type=float, default=None,
+                    help="assertion floor for cold vs the PR 1 cold path")
+    ap.add_argument("--min-speedup-event", type=float, default=None,
+                    help="assertion floor for cold vs serial_event")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also dump rows as JSON (CI artifact)")
+    args = ap.parse_args()
+
+    rows = run(quick=args.quick,
+               min_speedup_pr1=args.min_speedup_pr1,
+               min_speedup_event=args.min_speedup_event)
+    for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived:.6g}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump([{"name": n, "us_per_call": us, "derived": d}
+                       for n, us, d in rows], f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -13,7 +13,9 @@ import time
 sys.path.insert(0, "src")
 
 from repro.core.warpsim import machines, runner
-from repro.core.warpsim.sweep import ResultCache, SweepSpec, run_sweep
+from repro.core.warpsim.sweep import (
+    LAST_SWEEP_STATS, ResultCache, SweepSpec, run_sweep,
+)
 
 CACHE_DIR = "benchmarks/results/sweep_cache"
 
@@ -22,11 +24,17 @@ def main():
     cache = ResultCache(CACHE_DIR)
 
     print("running 15 benchmarks x 6 machines (paper Figs. 2-7)...")
+    for ekey, names in machines.expansion_groups(machines.paper_suite()).items():
+        if len(names) > 1:
+            print(f"  {'+'.join(names)} share one expansion "
+                  f"(warp={ekey[0]}, simd={ekey[1]})")
     spec = SweepSpec(machines=machines.paper_suite())
     t0 = time.time()
     res = run_sweep(spec, cache=cache)
     print(f"  {len(spec.cells())} cells in {time.time() - t0:.2f}s "
-          f"({cache.hits} cached, {cache.misses} simulated)")
+          f"({cache.hits} cached, {cache.misses} simulated, "
+          f"{LAST_SWEEP_STATS['expansion_groups']} expansions for "
+          f"{LAST_SWEEP_STATS['simulated']} uncached cells)")
 
     benches = list(next(iter(res.values())))
     print(f"\n{'':6s}" + " ".join(f"{b:>6s}" for b in benches))

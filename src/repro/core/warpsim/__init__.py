@@ -13,12 +13,14 @@ from repro.core.warpsim import machines, runner, sweep, trace
 from repro.core.warpsim.divergence import (
     WarpStream, expand_stream, expand_workload, simd_efficiency,
 )
-from repro.core.warpsim.sweep import ResultCache, SweepSpec, run_sweep
+from repro.core.warpsim.sweep import (
+    ResultCache, SweepSpec, expansion_key, run_sweep,
+)
 from repro.core.warpsim.timing import SimResult, simulate
 
 __all__ = [
     "MachineConfig", "machines", "runner", "sweep", "trace",
     "WarpStream", "expand_stream", "expand_workload", "simd_efficiency",
     "SimResult", "simulate",
-    "ResultCache", "SweepSpec", "run_sweep",
+    "ResultCache", "SweepSpec", "expansion_key", "run_sweep",
 ]

@@ -14,6 +14,7 @@ write accesses never merge (paper §7).
 
 from __future__ import annotations
 
+import functools
 import zlib
 from typing import Dict
 
@@ -25,6 +26,18 @@ from repro.core.warpsim.trace import Mem
 # derived from its uid so different arrays never false-share blocks.
 _REGION_BITS = 28          # 256 MB per statement region
 _WORD = 4                  # 32-bit words (paper: 16-word coalescing width)
+
+
+@functools.lru_cache(maxsize=8)
+def _tid_range(n: int) -> np.ndarray:
+    """Shared thread-id ramp (callers never mutate it)."""
+    return np.arange(n, dtype=np.int64)
+
+
+@functools.lru_cache(maxsize=8)
+def _zero_offsets(n: int) -> np.ndarray:
+    """Shared all-zero offset vector (callers never mutate it)."""
+    return np.zeros(n, dtype=np.int64)
 
 
 def generate_addresses(
@@ -45,7 +58,7 @@ def generate_addresses(
     else:
         region_id = (1 << 20) + uid
     base = np.int64(region_id) << _REGION_BITS
-    tid = np.arange(n_threads, dtype=np.int64)
+    tid = _tid_range(n_threads)
     ws = max(int(stmt.working_set), _WORD * n_threads)
 
     if stmt.pattern == "coalesced":
@@ -55,7 +68,7 @@ def generate_addresses(
     elif stmt.pattern == "random":
         off = rng.integers(0, ws, n_threads, dtype=np.int64)
     elif stmt.pattern == "broadcast":
-        off = np.zeros(n_threads, dtype=np.int64)
+        off = _zero_offsets(n_threads)
     else:
         raise ValueError(f"unknown pattern {stmt.pattern!r}")
 

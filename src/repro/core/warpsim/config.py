@@ -62,6 +62,19 @@ class MachineConfig:
     def warps_per_sm(self) -> int:
         return self.threads_per_sm // self.warp_size
 
+    def expansion_key(self) -> tuple:
+        """The machine parameters that determine ``expand_stream`` output.
+
+        Workload expansion (divergence model, intra-warp coalescing, issue
+        occupancy) reads exactly these four fields; every other field only
+        affects the *timing* of the expanded stream. Machines that share an
+        expansion key therefore share one :class:`WarpStream` per workload
+        — the sweep engine groups grid cells by this key and expands once
+        per group (``tests/test_golden.py`` locks the equivalence).
+        """
+        return (self.warp_size, self.simd_width, self.mimd,
+                self.transaction_bytes)
+
     @property
     def issue_cycles_per_group(self) -> int:
         """Cycles to push one active path of a warp through the front-end."""

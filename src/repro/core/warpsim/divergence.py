@@ -89,6 +89,25 @@ class WarpStream:
     def n_ops(self) -> int:
         return len(self.warp)
 
+    def flat_csr(self):
+        """Flat per-op CSR columns as plain Python lists (+ block pools).
+
+        Returns ``(op_start, issue, kind, blk_off, blk_len, blocks,
+        nbytes)`` where everything is a flat Python list indexed by op id
+        (C-speed scalar indexing for the scheduling loop — no per-warp or
+        per-op nested list is ever built). The conversion is computed once
+        and cached on the stream: machines that share an expansion reuse it
+        across their simulations.
+        """
+        cached = getattr(self, "_flat_csr", None)
+        if cached is None:
+            cached = (self.op_start.tolist(), self.issue.tolist(),
+                      self.kind.tolist(), self.blk_off.tolist(),
+                      self.blk_len.tolist(), self.blocks.tolist(),
+                      self.nbytes.tolist())
+            self._flat_csr = cached
+        return cached
+
     def to_warp_ops(self) -> List[List[WarpOp]]:
         """Materialize the legacy per-warp ``WarpOp`` lists."""
         ops: List[List[WarpOp]] = [[] for _ in range(self.n_warps)]
@@ -128,19 +147,49 @@ def _grouped_transactions(keys, blocks: np.ndarray, block_bytes: int):
     :func:`coalesce.warp_transactions_bytes`, applied to every group in one
     lexsort + run-length dedup).
     """
-    order = np.lexsort((blocks,) + tuple(reversed(keys)))
-    sk = [k[order] for k in keys]
-    sb = blocks[order]
-    new = np.empty(len(sb), dtype=bool)
-    new[0] = True
-    changed = sb[1:] != sb[:-1]
-    for k in sk:
-        changed = changed | (k[1:] != k[:-1])
-    new[1:] = changed
-    idx = np.nonzero(new)[0]
-    counts = np.diff(np.append(idx, len(sb)))
+    if len(keys) == 1:                   # SIMT: group by warp only
+        k0 = keys[0]
+        warp_step = k0[1:] != k0[:-1]    # k0 is non-decreasing (thread order)
+        sorted_already = bool(
+            (warp_step | (blocks[1:] >= blocks[:-1])).all())
+        if sorted_already:
+            # Coalesced / broadcast / monotone-strided accesses arrive
+            # already in (warp, block) order — skip the sort entirely.
+            sb = blocks
+            changed = (sb[1:] != sb[:-1]) | warp_step
+        elif int(blocks.max()) < (1 << 44) and \
+                int(k0[-1] if len(k0) else 0) < (1 << 18):
+            # Pack (warp, block) into one int64 and quicksort: ~2x faster
+            # than lexsort, identical (warp, block) lexicographic order.
+            # blocks fit 44 bits (region base < 2^48.1, >=32 B transactions)
+            # and k0 is non-decreasing, so its max is its last element.
+            comb = np.sort((k0 << np.int64(44)) | blocks)
+            changed = comb[1:] != comb[:-1]
+            k0 = comb >> np.int64(44)
+            sb = comb & np.int64((1 << 44) - 1)
+        else:
+            order = np.lexsort((blocks, k0))
+            k0 = k0[order]
+            sb = blocks[order]
+            changed = (sb[1:] != sb[:-1]) | (k0[1:] != k0[:-1])
+    else:
+        order = np.lexsort((blocks,) + tuple(reversed(keys)))
+        sk = [k[order] for k in keys]
+        k0 = sk[0]
+        sb = blocks[order]
+        changed = sb[1:] != sb[:-1]
+        for k in sk:
+            changed |= k[1:] != k[:-1]
+    cut = np.nonzero(changed)[0]
+    cut += 1
+    idx = np.empty(len(cut) + 1, dtype=np.int64)
+    idx[0] = 0
+    idx[1:] = cut
+    counts = np.empty(len(idx), dtype=np.int64)
+    counts[:-1] = idx[1:] - idx[:-1]
+    counts[-1] = len(sb) - idx[-1]
     nbytes = np.minimum(counts * coalesce._WORD, block_bytes)
-    return sk[0][idx], sb[idx], nbytes
+    return k0[idx], sb[idx], nbytes
 
 
 def expand_stream(workload: Workload, cfg: MachineConfig) -> WarpStream:
@@ -174,13 +223,45 @@ def expand_stream(workload: Workload, cfg: MachineConfig) -> WarpStream:
     # fragment, not across the whole warp.
     frag_id = np.zeros(n, dtype=np.int64)
 
+    # Per-mask index arrays, memoized by mask object identity: straight-line
+    # statement runs and loop bodies re-walk the *same* mask array many
+    # times, and the derived (tid, warp ids, per-warp counts) are pure
+    # functions of it. Entries pin their mask, so an id() can never be
+    # recycled while its cache entry is alive.
+    mask_stats: dict = {}
+
+    def _mask_stats(mask: np.ndarray):
+        ent = mask_stats.get(id(mask))
+        if ent is None:
+            tid = np.nonzero(mask)[0]
+            warp_all = warp_of_thread[tid]
+            act = np.bincount(warp_all, minlength=n_warps)
+            w_idx = np.nonzero(act)[0]
+            ent = (mask, tid, warp_all, w_idx, act[w_idx])
+            mask_stats[id(mask)] = ent
+        return ent
+
+    # Read-only filler chunks (zeros / constant kind bytes) shared across
+    # appends by length: they are only ever concatenated, never written.
+    zeros_cache: dict = {}
+    kind_cache: dict = {}
+
+    def _zeros(m: int) -> np.ndarray:
+        z = zeros_cache.get(m)
+        if z is None:
+            z = zeros_cache[m] = np.zeros(m, dtype=np.int64)
+        return z
+
     def append(warps, issue, tins, kind, maccs, blen, blocks=None,
                nbytes=None):
         m = len(warps)
         c_warp.append(np.asarray(warps, dtype=np.int64))
         c_issue.append(np.asarray(issue, dtype=np.int64))
         c_tins.append(np.asarray(tins, dtype=np.int64))
-        c_kind.append(np.full(m, kind, dtype=np.int8))
+        kc = kind_cache.get((kind, m))
+        if kc is None:
+            kc = kind_cache[(kind, m)] = np.full(m, kind, dtype=np.int8)
+        c_kind.append(kc)
         c_maccs.append(np.asarray(maccs, dtype=np.int64))
         c_blen.append(np.asarray(blen, dtype=np.int64))
         if blocks is not None:
@@ -188,23 +269,19 @@ def expand_stream(workload: Workload, cfg: MachineConfig) -> WarpStream:
             c_nbytes.append(np.asarray(nbytes, dtype=np.int64))
 
     def emit_compute(mask: np.ndarray, count: int) -> None:
-        act = np.bincount(warp_of_thread[mask], minlength=n_warps)
-        w_idx = np.nonzero(act)[0]
-        a = act[w_idx]
+        _, _, _, w_idx, a = _mask_stats(mask)
         if cfg.mimd:
             issue = count * -(-a // simd)
         else:
             issue = np.full(len(w_idx), count * g_simt, dtype=np.int64)
-        append(w_idx, issue, count * a, KIND_COMPUTE,
-               np.zeros(len(w_idx), dtype=np.int64),
-               np.zeros(len(w_idx), dtype=np.int64))
+        z = _zeros(len(w_idx))
+        append(w_idx, issue, count * a, KIND_COMPUTE, z, z)
 
     def emit_mem(mask: np.ndarray, stmt: Mem) -> None:
         uid[0] += 1
         addrs = coalesce.generate_addresses(stmt, uid[0], n, rng)
-        tid = np.nonzero(mask)[0]
+        _, tid, warp_all, w_idx, a = _mask_stats(mask)
         blocks_all = addrs[tid] // tb
-        warp_all = warp_of_thread[tid]
         if cfg.mimd:
             # Coalesce per never-reconverging fragment; fragment groups of
             # one warp are emitted in ascending fragment-id order.
@@ -212,9 +289,6 @@ def expand_stream(workload: Workload, cfg: MachineConfig) -> WarpStream:
         else:
             keys = (warp_all,)
         uwarp, ublocks, unbytes = _grouped_transactions(keys, blocks_all, tb)
-        act = np.bincount(warp_all, minlength=n_warps)
-        w_idx = np.nonzero(act)[0]
-        a = act[w_idx]
         starts = np.searchsorted(uwarp, w_idx, side="left")
         ends = np.searchsorted(uwarp, w_idx, side="right")
         if cfg.mimd:

@@ -43,3 +43,17 @@ def warp_size_sweep(simd_width: int, multipliers: Iterable[int] = (1, 2, 4, 8)
             baseline(m * simd_width, simd_width)
         for m in multipliers
     }
+
+
+def expansion_groups(machine_set: Dict[str, MachineConfig]
+                     ) -> Dict[tuple, list]:
+    """Machine names bucketed by :meth:`MachineConfig.expansion_key`.
+
+    Machines in one bucket produce byte-identical ``expand_stream`` output
+    for any workload, so the sweep engine expands once per bucket (in the
+    paper suite, SW+ rides on ws8's stream: 5 buckets for 6 machines).
+    """
+    groups: Dict[tuple, list] = {}
+    for name, cfg in machine_set.items():
+        groups.setdefault(cfg.expansion_key(), []).append(name)
+    return groups

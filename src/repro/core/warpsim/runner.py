@@ -30,18 +30,26 @@ def run_suite(
     cache: Optional[sweep_mod.ResultCache] = None,
     parallel: Optional[bool] = None,
     engine: str = "auto",
-) -> Dict[str, Dict[str, SimResult]]:
+    seeds: Optional[Iterable[int]] = None,
+    group_expansion: bool = True,
+    reuse_expansion: bool = True,
+) -> Dict[str, Dict[str, SimResult]] | Dict[int, Dict[str, Dict[str, SimResult]]]:
     """results[machine][bench] -> SimResult.
 
     Delegates to :func:`repro.core.warpsim.sweep.run_sweep`: pass `cache`
     for on-disk result reuse across runs and `parallel` to force or forbid
-    process-parallel grid execution (default auto).
+    process-parallel grid execution (default auto). Pass `seeds` (overrides
+    `seed`) to run the grid per workload seed; with more than one seed the
+    result is keyed ``results[seed][machine][bench]`` — feed it to
+    :func:`suite_summary` for mean + min/max variance bands.
     """
     spec = sweep_mod.SweepSpec(
         benches=tuple(benches), machines=machine_set,
-        n_threads=n_threads, seeds=(seed,))
+        n_threads=n_threads,
+        seeds=tuple(seeds) if seeds is not None else (seed,))
     return sweep_mod.run_sweep(spec, cache=cache, parallel=parallel,
-                               engine=engine)
+                               engine=engine, group_expansion=group_expansion,
+                               reuse_expansion=reuse_expansion)
 
 
 # ---------------------------------------------------------------------------
@@ -83,8 +91,24 @@ def mean_idle_reduction(a: Mapping[str, SimResult],
     return 1.0 - ia / max(ib, 1e-12)
 
 
-def suite_summary(results: Mapping[str, Mapping[str, SimResult]]) -> dict:
-    """Headline numbers in the shape of the paper's claims."""
+def suite_summary(results: Mapping) -> dict:
+    """Headline numbers in the shape of the paper's claims.
+
+    Accepts either a single-seed grid ``results[machine][bench]`` (returns
+    ``{metric: float}``, unchanged) or the seed-keyed
+    ``results[seed][machine][bench]`` shape multi-seed ``run_sweep`` /
+    ``run_suite(seeds=...)`` produce — then every metric is averaged over
+    seeds and returned as ``{metric: {"mean", "min", "max"}}`` variance
+    bands (the workload-seed sensitivity bars of Figs. 4/7).
+    """
+    if results and all(isinstance(k, (int, np.integer)) for k in results):
+        per_seed = [suite_summary(r) for r in results.values()]
+        bands = {}
+        for k in per_seed[0]:
+            vals = [s[k] for s in per_seed]
+            bands[k] = {"mean": float(np.mean(vals)),
+                        "min": min(vals), "max": max(vals)}
+        return bands
     s = {}
     if "SW+" in results and "LW+" in results:
         s["swplus_over_lwplus"] = mean_speedup(results["SW+"], results["LW+"])

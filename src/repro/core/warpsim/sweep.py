@@ -16,6 +16,21 @@ objects:
   ``concurrent.futures.ProcessPoolExecutor``, and returns results in the
   spec's deterministic order regardless of completion order.
 
+Cold-path scheduling is *grouped by shared expansion*: workload expansion
+(:func:`~repro.core.warpsim.divergence.expand_stream`) depends only on the
+four machine fields in :func:`expansion_key` (warp size, SIMD width, MIMD
+flag, transaction bytes), so uncached cells are bucketed by ``(bench,
+n_threads, seed, expansion_key)`` and each bucket is one unit of work: the
+worker expands the :class:`WarpStream` once and simulates every machine
+variant that shares it (the paper suite shares ws8's stream with SW+, so a
+6-machine × 15-bench grid needs 75 expansions instead of 90). Expansions
+additionally flow through a small per-process LRU
+(:data:`EXPANSION_CACHE`), so repeated *serial* sweeps in one process —
+figure generation on small hosts, long-lived sweep servers — skip
+re-expansion entirely without unbounded memory growth. (Parallel sweeps
+tear their worker pool down per call; workers inherit the parent's cache
+on fork-start platforms but their own fills are not carried back.)
+
 Usage (see ``examples/warpsize_study.py``)::
 
     from repro.core.warpsim import sweep, machines
@@ -31,10 +46,14 @@ Usage (see ``examples/warpsize_study.py``)::
 Simulation results are bit-deterministic across processes (workload
 expansion draws everything from the workload seed and stable hashes), so a
 cache entry computed by any worker — or any earlier run — is exact.
+:data:`LAST_SWEEP_STATS` records cell/cache/grouping counters of the most
+recent ``run_sweep`` call in this process, surfaced by
+``benchmarks/sweep_bench.py``.
 """
 
 from __future__ import annotations
 
+import collections
 import concurrent.futures
 import dataclasses
 import functools
@@ -43,11 +62,12 @@ import json
 import os
 from typing import Dict, List, Mapping, Optional, Tuple
 
+from repro.core.warpsim import _native
 from repro.core.warpsim import machines as machines_mod
 from repro.core.warpsim.config import MachineConfig
-from repro.core.warpsim.divergence import expand_stream
+from repro.core.warpsim.divergence import WarpStream, expand_stream
 from repro.core.warpsim.timing import SimResult, simulate
-from repro.core.warpsim.trace import BENCHMARKS, get_workload
+from repro.core.warpsim.trace import BENCHMARKS, Workload, get_workload
 
 # Bump whenever the simulation model changes observable numbers: it is part
 # of every cache key, so stale entries from older models can never be
@@ -75,14 +95,37 @@ def machine_key(cfg: MachineConfig) -> str:
     return hashlib.sha256(blob.encode()).hexdigest()[:16]
 
 
+def expansion_key(cfg: MachineConfig) -> tuple:
+    """The machine fields that determine ``expand_stream`` output.
+
+    Cells whose machines collide on this key (and share bench, thread
+    count and seed) share one expanded :class:`WarpStream`; see
+    :meth:`MachineConfig.expansion_key`. The collision⇔identical-stream
+    property is locked by ``tests/test_golden.py``.
+    """
+    return cfg.expansion_key()
+
+
 @functools.lru_cache(maxsize=None)
 def _default_n_threads(bench: str) -> int:
     return get_workload(bench).n_threads
 
 
+@functools.lru_cache(maxsize=256)
+def _machine_dict(cfg: MachineConfig) -> dict:
+    """Memoized ``dataclasses.asdict`` (MachineConfig is frozen/hashable;
+    one grid keys the same few configs hundreds of times)."""
+    return dataclasses.asdict(cfg)
+
+
 def cell_key(bench: str, cfg: MachineConfig, n_threads: Optional[int],
              seed: int) -> str:
-    """Content-addressed key for one (bench, machine, n_threads, seed) cell."""
+    """Content-addressed key for one (bench, machine, n_threads, seed) cell.
+
+    The blob encoding is part of the on-disk contract: existing caches
+    (including PR 1's sharded layout) stay valid, so changes here require
+    a MODEL_VERSION bump.
+    """
     if n_threads is None:
         # Canonicalize: a cell run with the bench's default thread count is
         # the same cell as one requesting that count explicitly.
@@ -90,7 +133,7 @@ def cell_key(bench: str, cfg: MachineConfig, n_threads: Optional[int],
     blob = json.dumps({
         "model": MODEL_VERSION,
         "bench": bench.upper(),
-        "machine": dataclasses.asdict(cfg),
+        "machine": _machine_dict(cfg),
         "n_threads": n_threads,
         "seed": seed,
     }, sort_keys=True)
@@ -100,22 +143,64 @@ def cell_key(bench: str, cfg: MachineConfig, n_threads: Optional[int],
 class ResultCache:
     """Content-addressed on-disk store of :class:`SimResult` cells.
 
-    One JSON file per key under `root`. Reads that fail for any reason
-    (truncated write, garbage contents, missing or extra fields, schema
-    drift) count as misses and the offending file is deleted, so a corrupt
-    cache degrades to a cold one instead of poisoning sweeps.
+    One JSON file per key, flat under `root` (cell files are only ever
+    opened by exact name, so sharded subdirectories bought nothing but
+    per-shard ``mkdir``/``stat`` traffic on cold sweeps). Reads that fail
+    for any reason (truncated write, garbage contents, missing or extra
+    fields, schema drift) count as misses and the offending file is
+    deleted, so a corrupt cache degrades to a cold one instead of
+    poisoning sweeps.
+
+    Existence is answered from a one-time directory listing (plus this
+    instance's own writes): a cold 90-cell sweep costs one ``scandir``
+    instead of 90 failed ``open`` calls. The negative cache is
+    instance-lifetime — entries written by *other* processes after this
+    instance's first lookup are re-simulated rather than read, which is
+    always correct (results are deterministic) just not maximally shared;
+    create a fresh ResultCache to re-sync with the directory.
     """
 
     def __init__(self, root: str):
         self.root = root
         self.hits = 0
         self.misses = 0
+        self._listing: Optional[set] = None
+        self._legacy: Dict[str, str] = {}
+        self._root_ok = False
 
     def _path(self, key: str) -> str:
-        return os.path.join(self.root, key[:2], key + ".json")
+        return os.path.join(self.root, key + ".json")
+
+    def _index(self) -> set:
+        if self._listing is None:
+            try:
+                self._listing = set(os.listdir(self.root))
+                self._root_ok = True
+            except OSError:
+                self._listing = set()
+            # Older caches sharded cells under two-hex-char subdirectories;
+            # those entries stay readable (keys are unchanged) — new writes
+            # always land flat. Flat cell names are 64 hex chars + .json,
+            # so the isdir probe only ever fires on legacy shard dirs.
+            for entry in [e for e in self._listing if len(e) == 2]:
+                shard = os.path.join(self.root, entry)
+                if not os.path.isdir(shard):
+                    continue
+                self._listing.discard(entry)
+                try:
+                    for name in os.listdir(shard):
+                        self._legacy[name] = os.path.join(shard, name)
+                        self._listing.add(name)
+                except OSError:
+                    pass
+        return self._listing
 
     def get(self, key: str) -> Optional[SimResult]:
-        path = self._path(key)
+        name = key + ".json"
+        if name not in self._index():
+            self.misses += 1
+            return None
+        path = self._legacy.get(name) or os.path.join(self.root, name)
         try:
             with open(path) as f:
                 blob = json.load(f)
@@ -138,16 +223,88 @@ class ResultCache:
         return res
 
     def put(self, key: str, result: SimResult) -> None:
-        path = self._path(key)
-        os.makedirs(os.path.dirname(path), exist_ok=True)
-        # Per-process tmp name: concurrent writers of the same cell must not
-        # clobber each other's tmp file (results are deterministic, so
-        # whichever os.replace lands last is equally correct).
-        tmp = f"{path}.{os.getpid()}.tmp"
-        with open(tmp, "w") as f:
-            json.dump({"key": key, "model": MODEL_VERSION,
-                       "result": dataclasses.asdict(result)}, f)
-        os.replace(tmp, path)
+        if not self._root_ok:
+            os.makedirs(self.root, exist_ok=True)
+            self._root_ok = True
+        # Direct low-level write, no tmp+rename dance: a torn write (crash
+        # mid-put, or two processes racing on one cell) leaves a file the
+        # corruption-recovery path in get() detects, deletes and
+        # re-simulates — and results are deterministic, so losing a racer's
+        # copy costs a re-simulation, never wrong data. The rename barely
+        # bought safety but doubled the syscall bill of cold sweeps.
+        data = json.dumps({"key": key, "model": MODEL_VERSION,
+                           "result": dataclasses.asdict(result)}).encode()
+        fd = os.open(self._path(key),
+                     os.O_WRONLY | os.O_CREAT | os.O_TRUNC, 0o644)
+        try:
+            os.write(fd, data)
+        finally:
+            os.close(fd)
+        name = key + ".json"
+        self._legacy.pop(name, None)     # flat copy supersedes a legacy one
+        self._index().add(name)
+
+
+# ---------------------------------------------------------------------------
+# Per-process expansion LRU
+# ---------------------------------------------------------------------------
+
+
+class ExpansionCache:
+    """Bounded LRU of expanded :class:`WarpStream` objects.
+
+    Keyed by ``(bench, n_threads, seed, expansion_key)`` — everything that
+    determines ``expand_stream`` output. Bounded (default
+    :data:`EXPANSION_CACHE_SIZE` streams, a few hundred KB each) so
+    long-lived sweep servers cannot grow without limit; eviction is
+    least-recently-used. Each process (sweep parent and every pool worker)
+    holds its own instance.
+    """
+
+    def __init__(self, maxsize: int = 64):
+        self.maxsize = maxsize
+        # key -> (workload, stream); the stored workload pins the program
+        # object so the identity check below can never alias a recycled id.
+        self._streams: "collections.OrderedDict[tuple, tuple]" = (
+            collections.OrderedDict())
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, workload: Workload, cfg: MachineConfig) -> WarpStream:
+        key = (workload.name, workload.n_threads, workload.seed,
+               cfg.expansion_key())
+        ent = self._streams.get(key)
+        # The program-identity check guards callers that build Workload
+        # objects by hand: two different programs sharing a name must not
+        # alias one cached stream (get_workload-canonical workloads always
+        # pass — the workload itself is memoized).
+        if ent is not None and ent[0].program is workload.program:
+            self._streams.move_to_end(key)
+            self.hits += 1
+            return ent[1]
+        self.misses += 1
+        stream = expand_stream(workload, cfg)
+        self._streams[key] = (workload, stream)
+        while len(self._streams) > self.maxsize:
+            self._streams.popitem(last=False)
+        return stream
+
+    def __len__(self) -> int:
+        return len(self._streams)
+
+    def clear(self) -> None:
+        self._streams.clear()
+        self.hits = 0
+        self.misses = 0
+
+
+EXPANSION_CACHE_SIZE = 64
+EXPANSION_CACHE = ExpansionCache(EXPANSION_CACHE_SIZE)
+
+# Counters of the most recent run_sweep call in this process (the sweep
+# parent: worker-local expansion reuse shows up in `expansions_saved`,
+# which is computed from the grouping itself and is process-independent).
+LAST_SWEEP_STATS: Dict[str, int] = {}
 
 
 # ---------------------------------------------------------------------------
@@ -196,9 +353,16 @@ class SweepSpec:
                     for w in self.warp_sizes}
         return machines_mod.paper_suite(self.simd_width)
 
-    def cells(self) -> List[Cell]:
+    def cells(self, machine_set: Optional[Mapping[str, MachineConfig]] = None
+              ) -> List[Cell]:
+        """Cell list in the spec's fixed order.
+
+        Pass a precomputed ``machine_set()`` to avoid rebuilding it (the
+        result is identical; ``run_sweep`` computes the set exactly once).
+        """
+        mset = self.machine_set() if machine_set is None else machine_set
         out: List[Cell] = []
-        for mname, cfg in self.machine_set().items():
+        for mname, cfg in mset.items():
             for b in self.benches:
                 for seed in self.seeds:
                     out.append((mname, cfg, b, self.n_threads, seed))
@@ -210,13 +374,28 @@ class SweepSpec:
 # ---------------------------------------------------------------------------
 
 
-def _run_cell(args: Tuple[str, MachineConfig, Optional[int], int, str]
-              ) -> SimResult:
-    """Worker: simulate one grid cell (top-level for pickling)."""
-    bench, cfg, n_threads, seed, engine = args
+# One unit of worker work: (bench, n_threads, seed, [configs sharing one
+# expansion], engine, reuse_expansion).
+_GroupPayload = Tuple[str, Optional[int], int, List[MachineConfig], str,
+                      bool]
+
+
+def _run_group(args: _GroupPayload) -> List[SimResult]:
+    """Worker: expand once, simulate every machine sharing the expansion.
+
+    Top-level for pickling. The expansion flows through the per-process
+    LRU, so a worker that sees the same (bench, n_threads, seed,
+    expansion_key) bucket again — across chunks, or across run_sweep calls
+    in serial mode — skips re-expansion. `reuse_expansion=False` bypasses
+    the LRU entirely (baseline measurements); riding in the payload means
+    it reaches pool workers under any multiprocessing start method.
+    """
+    bench, n_threads, seed, cfgs, engine, reuse = args
     wl = get_workload(bench, n_threads=n_threads, seed=seed)
-    stream = expand_stream(wl, cfg)
-    return simulate(wl.name, stream, cfg, engine=engine)
+    stream = (EXPANSION_CACHE.get(wl, cfgs[0]) if reuse
+              else expand_stream(wl, cfgs[0]))
+    ops = stream.to_warp_ops() if engine == "event" else stream
+    return [simulate(wl.name, ops, cfg, engine=engine) for cfg in cfgs]
 
 
 def run_sweep(
@@ -225,18 +404,29 @@ def run_sweep(
     parallel: Optional[bool] = None,
     max_workers: Optional[int] = None,
     engine: str = "auto",
+    group_expansion: bool = True,
+    reuse_expansion: bool = True,
 ) -> Dict[int, Dict[str, Dict[str, SimResult]]] | Dict[str, Dict[str, SimResult]]:
     """Run a sweep grid; returns ``results[machine][bench] -> SimResult``.
 
     With multiple seeds the result is keyed ``results[seed][machine][bench]``.
-    Cached cells are served from `cache`; uncached cells run process-parallel
-    (`parallel=None` auto-enables parallelism when the grid is big enough and
-    more than one CPU is available). Result ordering is deterministic — the
-    spec's cell order — independent of worker completion order.
+    Cached cells are served from `cache`; uncached cells are grouped by
+    shared expansion (disable with ``group_expansion=False`` to schedule
+    one cell per work unit, the pre-grouping behavior;
+    ``reuse_expansion=False`` additionally bypasses the per-process
+    expansion LRU in every worker — the from-scratch baseline mode of
+    ``benchmarks/sweep_bench.py``) and run process-parallel
+    (`parallel=None` auto-enables parallelism when the grid is big enough
+    and at least four CPUs are available). Result ordering is
+    deterministic — the spec's cell order — independent of worker
+    completion order.
     """
-    cells = spec.cells()
+    mset = spec.machine_set()
+    cells = spec.cells(machine_set=mset)
     results: Dict[int, Dict[str, Dict[str, SimResult]]] = {
         seed: {} for seed in spec.seeds}
+    cache_hits0 = cache.hits if cache is not None else 0
+    cache_miss0 = cache.misses if cache is not None else 0
 
     todo: List[Tuple[Cell, Optional[str]]] = []
     for mname, cfg, bench, n_threads, seed in cells:
@@ -248,23 +438,71 @@ def run_sweep(
         else:
             todo.append(((mname, cfg, bench, n_threads, seed), key))
 
+    n_groups = 0
     if todo:
-        payloads = [(bench, cfg, n_threads, seed, engine)
-                    for (mname, cfg, bench, n_threads, seed), _ in todo]
+        # Bucket uncached cells by shared expansion; one bucket is one unit
+        # of worker work (expand once, simulate every member).
+        groups: "collections.OrderedDict[tuple, List[Tuple[Cell, Optional[str]]]]" = (
+            collections.OrderedDict())
+        for idx, (cell, key) in enumerate(todo):
+            mname, cfg, bench, n_threads, seed = cell
+            gkey = ((bench, n_threads, seed, cfg.expansion_key())
+                    if group_expansion else idx)
+            groups.setdefault(gkey, []).append((cell, key))
+        n_groups = len(groups)
+        payloads: List[_GroupPayload] = [
+            (members[0][0][2], members[0][0][3], members[0][0][4],
+             [cell[1] for cell, _ in members], engine, reuse_expansion)
+            for members in groups.values()]
+
         ncpu = os.cpu_count() or 1
-        if parallel is None:
-            parallel = len(todo) >= 4 and ncpu > 1
-        if parallel:
-            workers = max_workers or min(ncpu, len(todo))
-            chunk = max(1, len(todo) // (4 * workers))
-            with concurrent.futures.ProcessPoolExecutor(workers) as ex:
-                sims = list(ex.map(_run_cell, payloads, chunksize=chunk))
+        if engine in ("auto", "native"):
+            # Compile/load the native core once in the parent so forked
+            # workers inherit it instead of racing to build it (and so the
+            # parallel heuristic below knows the per-cell cost).
+            cells_are_cheap = _native.available()
         else:
-            sims = [_run_cell(p) for p in payloads]
-        for ((mname, cfg, bench, n_threads, seed), key), res in zip(todo, sims):
-            results[seed].setdefault(mname, {})[bench] = res
-            if cache is not None:
-                cache.put(key, res)
+            cells_are_cheap = False
+        if parallel is None:
+            # Process pools only pay off when there is real work per cell
+            # relative to pool spawn + IPC: with the compiled engine a
+            # grid cell costs ~0.5 ms, so below 4 CPUs the pool overhead
+            # exceeds the extra cores' contribution (measured: 0.26 s
+            # serial vs 0.33 s parallel for the 90-cell paper grid on a
+            # 2-CPU host). On the pure-Python engines (no compiler, or
+            # event/fast_nested explicitly) cells are ~10x heavier and a
+            # second core already wins.
+            parallel = len(payloads) >= 4 and (
+                ncpu >= 4 or (ncpu > 1 and not cells_are_cheap))
+
+        def _scatter(members, group_res) -> None:
+            for (cell, key), res in zip(members, group_res):
+                mname, cfg, bench, n_threads, seed = cell
+                results[seed].setdefault(mname, {})[bench] = res
+                if cache is not None:
+                    cache.put(key, res)
+
+        if parallel:
+            workers = max_workers or min(ncpu, len(payloads))
+            chunk = max(1, len(payloads) // (4 * workers))
+            with concurrent.futures.ProcessPoolExecutor(workers) as ex:
+                for members, group_res in zip(
+                        groups.values(),
+                        ex.map(_run_group, payloads, chunksize=chunk)):
+                    _scatter(members, group_res)
+        else:
+            for members, payload in zip(groups.values(), payloads):
+                _scatter(members, _run_group(payload))
+
+    LAST_SWEEP_STATS.clear()
+    LAST_SWEEP_STATS.update(
+        cells=len(cells),
+        cache_hits=(cache.hits - cache_hits0) if cache is not None else 0,
+        cache_misses=(cache.misses - cache_miss0) if cache is not None else 0,
+        simulated=len(todo),
+        expansion_groups=n_groups,
+        expansions_saved=len(todo) - n_groups,
+    )
 
     # Re-impose the spec's machine/bench ordering (cache hits and parallel
     # completion both fill dicts out of order).
@@ -272,7 +510,7 @@ def run_sweep(
     for seed in spec.seeds:
         ordered[seed] = {
             mname: {b: results[seed][mname][b] for b in spec.benches}
-            for mname in spec.machine_set()
+            for mname in mset
         }
     if len(spec.seeds) == 1:
         return ordered[spec.seeds[0]]

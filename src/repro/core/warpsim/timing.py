@@ -12,21 +12,35 @@ The DRAM system is a set of memory controllers, each a bandwidth server
 coalescing merges read requests with in-flight requests to the same block
 across the whole SM via :class:`OutstandingTable`.
 
-Two engines implement the model:
+Four engines implement the model; all are bit-identical (locked by the
+golden + hypothesis tests in ``tests/test_golden.py``):
 
 * ``engine="event"`` — the reference discrete-event loop over
   ``List[List[WarpOp]]`` streams (one Python object per macro-op).
-* ``engine="fast"`` — the batched fast path. It consumes the
-  struct-of-arrays :class:`~repro.core.warpsim.divergence.WarpStream`
-  produced by ``expand_stream``: per-warp issue/compute phases are
-  precomputed as arrays, all order-independent aggregates (instruction
-  counts, front-end busy cycles, SIMD efficiency) are reduced vectorized
-  up front, and the event heap only has to carry scheduling decisions.
-  The fast engine replays the exact decision sequence of the reference
-  loop, so every :class:`SimResult` field is bit-identical (locked by the
-  golden tests in ``tests/test_golden.py``).
+* ``engine="fast"`` — the flat-CSR engine. It drives the scheduling heap
+  *directly* over the struct-of-arrays CSR columns of
+  :class:`~repro.core.warpsim.divergence.WarpStream` (flat ``issue`` /
+  ``kind`` / ``blk_off`` lists indexed by absolute op id via ``op_start``),
+  so no per-warp or per-op nested Python list is ever materialized; the
+  one-time ``tolist`` flattening is cached on the stream and shared by
+  every machine that reuses the expansion. Fire-and-forget stores drain
+  through a batched numpy pass (:func:`_drain_stores_vectorized`:
+  per-controller cumulative occupancy via a stable controller sort +
+  ``np.add.accumulate``, the exact IEEE-754 addition sequence of the
+  scalar loop). A heap peek short-circuit keeps issuing the same warp
+  without a push/pop round trip whenever the reference loop would pop it
+  right back — a pure reordering of identical work.
+* ``engine="native"`` — the same flat-CSR loop compiled to machine code
+  (:mod:`repro.core.warpsim._native`, built on demand with the system C
+  compiler; unavailable hosts fall back to ``fast``).
+* ``engine="fast_nested"`` — the previous generation of the fast path,
+  which materialized per-warp nested op lists in ``_normalize``. Kept as
+  the measured baseline for ``benchmarks/sweep_bench.py`` (the cold-sweep
+  speedup floor is asserted against it) and as a third independent
+  implementation in the equivalence tests.
 
-``engine="auto"`` (default) picks the fast path.
+``engine="auto"`` (default) picks ``native`` when the compiled core is
+available and ``fast`` otherwise.
 """
 
 from __future__ import annotations
@@ -35,6 +49,9 @@ import dataclasses
 import heapq
 from typing import List, Union
 
+import numpy as np
+
+from repro.core.warpsim import _native
 from repro.core.warpsim.coalesce import L1Cache
 from repro.core.warpsim.config import MachineConfig
 from repro.core.warpsim.divergence import (
@@ -109,18 +126,25 @@ def simulate(
 
     `warp_ops` may be a :class:`WarpStream` (preferred; what
     ``expand_stream`` emits) or the legacy ``List[List[WarpOp]]``. `engine`
-    selects ``"fast"`` (batched arrays), ``"event"`` (reference loop) or
-    ``"auto"`` (fast). Both engines return bit-identical results.
+    selects ``"fast"`` (flat-CSR loop), ``"native"`` (compiled loop),
+    ``"fast_nested"`` (previous-generation fast path, benchmark baseline),
+    ``"event"`` (reference loop) or ``"auto"`` (native when available,
+    else fast). All engines return bit-identical results.
     """
     if engine == "auto":
-        engine = "fast"
+        engine = "native" if _native.available() else "fast"
+    if engine == "native":
+        return _simulate_native(name, warp_ops, cfg)
     if engine == "fast":
         return _simulate_fast(name, warp_ops, cfg)
+    if engine == "fast_nested":
+        return _simulate_fast_nested(name, warp_ops, cfg)
     if engine == "event":
         if isinstance(warp_ops, WarpStream):
             warp_ops = warp_ops.to_warp_ops()
         return _simulate_event(name, warp_ops, cfg)
-    raise ValueError(f"unknown engine {engine!r}; use fast|event|auto")
+    raise ValueError(
+        f"unknown engine {engine!r}; use auto|native|fast|fast_nested|event")
 
 
 # ---------------------------------------------------------------------------
@@ -241,16 +265,323 @@ def _simulate_event(
 
 
 # ---------------------------------------------------------------------------
-# Batched fast-path engine
+# Flat-CSR fast engine
+# ---------------------------------------------------------------------------
+
+
+def _flat_arrays(warp_ops: Ops):
+    """Flat CSR op columns + order-independent totals for the fast engines.
+
+    Returns ``(n_warps, op_start, issue, kind, blk_off, blk_len, blocks,
+    nbytes, blocks_np, nbytes_np, thread_insns, mem_insns, total_busy,
+    eff)`` where the CSR columns are flat Python lists indexed by absolute
+    op id (no nested per-warp/per-op lists) and ``*_np`` are the numpy
+    block pools for the vectorized store drain.
+    """
+    if isinstance(warp_ops, WarpStream):
+        st = warp_ops
+        op_start, issue, kind, blk_off, blk_len, blocks, nbytes = st.flat_csr()
+        return (st.n_warps, op_start, issue, kind, blk_off, blk_len,
+                blocks, nbytes, st.blocks, st.nbytes,
+                int(st.tins.sum()), int(st.maccs.sum()),
+                float(st.issue.sum()), simd_efficiency(st))
+
+    op_start = [0]
+    issue: List[int] = []
+    kind: List[int] = []
+    blk_off: List[int] = []
+    blk_len: List[int] = []
+    blocks: List[int] = []
+    nbytes: List[int] = []
+    thread_insns = mem_insns = 0
+    total_busy = 0
+    for warp in warp_ops:
+        for op in warp:
+            issue.append(op.issue_cycles)
+            total_busy += op.issue_cycles
+            thread_insns += op.thread_insns
+            blk_off.append(len(blocks))
+            if op.is_mem:
+                kind.append(KIND_LOAD if op.is_load else KIND_STORE)
+                blk_len.append(len(op.mem_blocks))
+                blocks.extend(int(b) for b in op.mem_blocks)
+                nbytes.extend(int(b) for b in op.mem_block_bytes)
+                mem_insns += op.mem_thread_accesses
+            else:
+                kind.append(KIND_COMPUTE)
+                blk_len.append(0)
+        op_start.append(len(issue))
+    blocks_np = np.asarray(blocks, dtype=np.int64)
+    nbytes_np = np.asarray(nbytes, dtype=np.int64)
+    return (len(warp_ops), op_start, issue, kind, blk_off, blk_len,
+            blocks, nbytes, blocks_np, nbytes_np,
+            thread_insns, mem_insns, float(total_busy),
+            simd_efficiency(warp_ops))
+
+
+# Store ops with at least this many transactions take the numpy drain; the
+# scalar loop wins below it (constant numpy dispatch overhead). Both paths
+# perform the identical IEEE-754 addition sequence.
+_STORE_VEC_MIN = 32
+
+
+def _drain_stores_vectorized(blocks_np, nbytes_np, o, l, ctrl_free, t_acc,
+                             svc_unit, nctrl) -> None:
+    """Batched fire-and-forget store drain over one store op's block slice.
+
+    Per-controller cumulative occupancy: blocks are grouped by memory
+    controller with a stable sort (preserving each controller's sub-order
+    within the slice) and each controller's busy time advances by a left
+    fold via ``np.add.accumulate`` — the exact addition sequence of the
+    reference per-block loop, so results stay bit-identical.
+    """
+    nb = nbytes_np[o:o + l]
+    svc = svc_unit * (np.maximum(nb, 32) / 64.0)
+    c = blocks_np[o:o + l] % nctrl
+    order = np.argsort(c, kind="stable")
+    cs = c[order]
+    ss = svc[order]
+    cut = np.flatnonzero(cs[1:] != cs[:-1]) + 1
+    starts = [0] + cut.tolist()
+    ends = cut.tolist() + [l]
+    acc = np.empty(l + 1)
+    for s0, s1 in zip(starts, ends):
+        ctrl = int(cs[s0])
+        cf = ctrl_free[ctrl]
+        seg = acc[:s1 - s0 + 1]
+        seg[0] = cf if cf > t_acc else t_acc
+        seg[1:] = ss[s0:s1]
+        np.add.accumulate(seg, out=seg)
+        ctrl_free[ctrl] = float(seg[s1 - s0])
+
+
+def _simulate_fast(name: str, warp_ops: Ops, cfg: MachineConfig) -> SimResult:
+    (n_warps, op_start, issue_l, kind_l, off_l, len_l, blocks_l, nbytes_l,
+     blocks_np, nbytes_np, thread_insns, mem_insns, total_busy, eff
+     ) = _flat_arrays(warp_ops)
+    n_sms = cfg.num_sms
+
+    # DRAM (inlined bandwidth servers).
+    nctrl = cfg.num_mem_ctrls
+    ctrl_free = [0.0] * nctrl
+    dram_lat = float(cfg.dram_latency_cycles)
+    svc_unit = cfg.dram_cycles_per_transaction
+
+    # L1 (inlined set-associative LRU with pending-fill lines, identical
+    # decision sequence to coalesce.L1Cache) + SW+ outstanding tables.
+    n_sets = cfg.l1_size_bytes // (cfg.transaction_bytes * cfg.l1_ways)
+    ways = cfg.l1_ways
+    l1_sets: List[dict] = [dict() for _ in range(n_sms)]
+    l1_tick = [0] * n_sms
+    outstanding: List[dict] = [dict() for _ in range(n_sms)]
+    ideal = cfg.ideal_coalescing
+    hit_lat = cfg.l1_hit_latency
+    depth = cfg.pipeline_depth
+
+    issue_free = [0.0] * n_sms
+    sm_of = [min(w * n_sms // max(n_warps, 1), n_sms - 1)
+             for w in range(n_warps)]
+    # next_idx / op_end are absolute CSR op indices (sliced copies: the
+    # cached flat columns are shared across simulations of this stream).
+    next_idx = list(op_start[:n_warps])
+    op_end = list(op_start[1:])
+    heap = [(0.0, w) for w in range(n_warps) if next_idx[w] < op_end[w]]
+    heapq.heapify(heap)
+
+    offchip = 0
+    merged = 0
+    l1_hits = 0
+
+    heappop = heapq.heappop
+    heappush = heapq.heappush
+
+    while heap:
+        ready_t, w = heappop(heap)
+        sm = sm_of[w]
+        i = next_idx[w]
+        end = op_end[w]
+        while True:
+            free = issue_free[sm]
+            t_start = ready_t if ready_t > free else free
+            t_acc = t_start + issue_l[i]
+            issue_free[sm] = t_acc
+
+            k = kind_l[i]
+            if k == 0:                               # compute phase
+                warp_ready = t_acc + depth
+            elif k == 1:                             # load
+                done = t_acc + hit_lat
+                sets = l1_sets[sm]
+                tick = l1_tick[sm]
+                outst = outstanding[sm]
+                o = off_l[i]
+                for block in blocks_l[o:o + len_l[i]]:
+                    # L1 lookup (pending lines visible with their fill time).
+                    tick += 1
+                    si = block % n_sets
+                    s = sets.get(si)
+                    if s is None:
+                        s = sets[si] = {}
+                    ent = s.get(block)
+                    if ent is not None:
+                        ent[0] = tick
+                        fill = ent[1]
+                        if fill <= t_acc:
+                            l1_hits += 1
+                            continue
+                    if ideal:
+                        out = outst.get(block)
+                        if out is not None and out > t_acc:
+                            merged += 1
+                            if out > done:
+                                done = out
+                            continue
+                    # DRAM request (full 64 B read transaction).
+                    c = block % nctrl
+                    cf = ctrl_free[c]
+                    start = cf if cf > t_acc else t_acc
+                    ctrl_free[c] = start + svc_unit
+                    completion = start + dram_lat + svc_unit
+                    offchip += 1
+                    # L1 fill / pending-line allocation.
+                    tick += 1
+                    if ent is not None:
+                        ent[0] = tick
+                        if completion < ent[1]:
+                            ent[1] = completion
+                    else:
+                        if len(s) >= ways:
+                            victim = min(s, key=lambda b: s[b][0])  # LRU
+                            del s[victim]
+                        s[block] = [tick, completion]
+                    if ideal:
+                        outst[block] = completion
+                        if len(outst) > 4096:
+                            outst = {b: t for b, t in outst.items()
+                                     if t > t_acc}
+                            outstanding[sm] = outst
+                    if completion > done:
+                        done = completion
+                l1_tick[sm] = tick
+                warp_ready = done
+            else:                                    # store: fire-and-forget
+                o = off_l[i]
+                l = len_l[i]
+                if l >= _STORE_VEC_MIN:
+                    _drain_stores_vectorized(blocks_np, nbytes_np, o, l,
+                                             ctrl_free, t_acc, svc_unit,
+                                             nctrl)
+                else:
+                    for bi in range(o, o + l):
+                        nb = nbytes_l[bi]
+                        c = blocks_l[bi] % nctrl
+                        svc = svc_unit * ((nb if nb > 32 else 32) / 64.0)
+                        cf = ctrl_free[c]
+                        start = cf if cf > t_acc else t_acc
+                        ctrl_free[c] = start + svc
+                offchip += l
+                warp_ready = t_acc + hit_lat
+
+            i += 1
+            if i == end:
+                break
+            # Peek: if this warp precedes the heap top in (time, warp id)
+            # order, the reference loop would pop it right back — keep
+            # issuing it without the push/pop round trip.
+            if heap:
+                h0 = heap[0]
+                if warp_ready > h0[0] or (warp_ready == h0[0] and w > h0[1]):
+                    next_idx[w] = i
+                    heappush(heap, (warp_ready, w))
+                    break
+            ready_t = warp_ready
+
+    cycles = max(max(issue_free), 1.0)
+    # Idle share: fraction of scheduler slots with nothing to issue,
+    # averaged over SMs (paper Fig. 3).
+    idle = n_sms * cycles - total_busy
+
+    return SimResult(
+        name=name,
+        machine=cfg.name,
+        cycles=cycles,
+        thread_insns=thread_insns,
+        mem_insns=mem_insns,
+        offchip_requests=offchip,
+        merged_requests=merged,
+        l1_hits=l1_hits,
+        idle_cycles=idle / n_sms,
+        busy_cycles=total_busy / n_sms,
+        simd_eff=eff,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Native (compiled) engine
+# ---------------------------------------------------------------------------
+
+
+def _simulate_native(name: str, warp_ops: Ops, cfg: MachineConfig
+                     ) -> SimResult:
+    """Flat-CSR loop in compiled C; falls back to ``fast`` when the core
+    is unavailable or declines the configuration."""
+    if isinstance(warp_ops, WarpStream):
+        st = warp_ops
+        loop = _native.run_scheduling_loop(
+            st.n_warps, st.op_start, st.issue, st.kind, st.blk_off,
+            st.blk_len, st.blocks, st.nbytes, cfg)
+        if loop is None:
+            return _simulate_fast(name, warp_ops, cfg)
+        totals = (int(st.tins.sum()), int(st.maccs.sum()),
+                  float(st.issue.sum()), simd_efficiency(st))
+    else:
+        (n_warps, op_start, issue_l, kind_l, off_l, len_l, _, _,
+         blocks_np, nbytes_np, thread_insns, mem_insns, total_busy, eff
+         ) = _flat_arrays(warp_ops)
+        loop = _native.run_scheduling_loop(
+            n_warps, np.asarray(op_start, dtype=np.int64),
+            np.asarray(issue_l, dtype=np.int64),
+            np.asarray(kind_l, dtype=np.int8),
+            np.asarray(off_l, dtype=np.int64),
+            np.asarray(len_l, dtype=np.int64), blocks_np, nbytes_np, cfg)
+        if loop is None:
+            return _simulate_fast(name, warp_ops, cfg)
+        totals = (thread_insns, mem_insns, total_busy, eff)
+
+    raw_cycles, offchip, merged, l1_hits = loop
+    thread_insns, mem_insns, total_busy, eff = totals
+    n_sms = cfg.num_sms
+    cycles = max(raw_cycles, 1.0)
+    idle = n_sms * cycles - total_busy
+    return SimResult(
+        name=name,
+        machine=cfg.name,
+        cycles=cycles,
+        thread_insns=thread_insns,
+        mem_insns=mem_insns,
+        offchip_requests=offchip,
+        merged_requests=merged,
+        l1_hits=l1_hits,
+        idle_cycles=idle / n_sms,
+        busy_cycles=total_busy / n_sms,
+        simd_eff=eff,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Previous-generation fast engine (nested per-warp lists) — kept as the
+# measured baseline for benchmarks/sweep_bench.py and as an independent
+# implementation in the equivalence tests.
 # ---------------------------------------------------------------------------
 
 
 def _normalize(warp_ops: Ops):
-    """Per-warp plain-list op phases + order-independent totals.
+    """Per-warp nested op phases + order-independent totals (legacy).
 
     Returns ``(issues, kinds, blockss, nbytess, thread_insns, mem_insns,
-    total_busy, simd_eff)`` where ``issues[w][i]`` etc. are Python scalars
-    (C-speed indexing in the scheduling loop below).
+    total_busy, simd_eff)`` where ``issues[w][i]`` etc. are Python scalars.
+    This is the PR 1 normalization that materializes one nested list per
+    warp and per op — the allocation cost the flat-CSR engine removes.
     """
     if isinstance(warp_ops, WarpStream):
         st = warp_ops
@@ -304,7 +635,8 @@ def _normalize(warp_ops: Ops):
             simd_efficiency(warp_ops))
 
 
-def _simulate_fast(name: str, warp_ops: Ops, cfg: MachineConfig) -> SimResult:
+def _simulate_fast_nested(name: str, warp_ops: Ops, cfg: MachineConfig
+                          ) -> SimResult:
     (issues, kinds, blockss, nbytess,
      thread_insns, mem_insns, total_busy, eff) = _normalize(warp_ops)
     n_warps = len(issues)

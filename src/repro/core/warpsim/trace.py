@@ -19,6 +19,7 @@ machine model sees the *same* logical workload and results are reproducible.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import List, Optional, Sequence, Union
 
 import numpy as np
@@ -379,16 +380,22 @@ COALESCING_HUNGRY = ("BKP", "GAS", "SR1", "SR2")
 INSENSITIVE = ("FWAL", "DYN")
 
 
-def get_workload(name: str, n_threads: Optional[int] = None,
-                 seed: int = 0) -> Workload:
-    try:
-        wl = _FACTORIES[name.upper()]()
-    except KeyError:
-        raise KeyError(f"unknown benchmark {name!r}; have {BENCHMARKS}") from None
+@functools.lru_cache(maxsize=256)
+def _workload(name: str, n_threads: Optional[int], seed: int) -> Workload:
+    wl = _FACTORIES[name]()
     if n_threads is not None or seed != wl.seed:
         wl = dataclasses.replace(
             wl, n_threads=n_threads or wl.n_threads, seed=seed)
     return wl
+
+
+def get_workload(name: str, n_threads: Optional[int] = None,
+                 seed: int = 0) -> Workload:
+    """Benchmark workload by name (memoized; workloads are read-only)."""
+    try:
+        return _workload(name.upper(), n_threads, seed)
+    except KeyError:
+        raise KeyError(f"unknown benchmark {name!r}; have {BENCHMARKS}") from None
 
 
 def program_stats(program: Sequence[Stmt]) -> dict:

@@ -19,18 +19,28 @@ numbers are reproducible across processes and machines).
 
 import dataclasses
 
+import numpy as np
 import pytest
 
-from repro.core.warpsim import machines, runner
-from repro.core.warpsim.divergence import expand_stream
+from repro.core.warpsim import _native, machines, runner
+from repro.core.warpsim.config import MachineConfig
+from repro.core.warpsim.divergence import WarpStream, expand_stream
+from repro.core.warpsim.sweep import expansion_key
 from repro.core.warpsim.timing import simulate
-from repro.core.warpsim.trace import get_workload
+from repro.core.warpsim.trace import (
+    Branch, Compute, Loop, Mem, Workload, get_workload,
+)
 
 # Benches exercising every op path: divergence (BFS), dense strided loads
 # (BKP), uncoalesced stores (MTM), shared-region reuse + broadcast (DYN),
 # stencil regions (SR2).
 GOLDEN_BENCHES = ("BFS", "BKP", "MTM", "DYN", "SR2")
 N_THREADS = 512
+
+# Every non-reference engine must replay the event loop bit-for-bit; the
+# native engine only participates where the compiled core is available.
+FAST_ENGINES = ["fast", "fast_nested"] + (
+    ["native"] if _native.available() else [])
 
 
 @pytest.fixture(scope="module")
@@ -42,25 +52,190 @@ def small_suite():
 
 # ------------------------------------------------ engine bit-compatibility
 
+@pytest.mark.parametrize("engine", FAST_ENGINES)
 @pytest.mark.parametrize("mname", list(machines.paper_suite()))
 @pytest.mark.parametrize("bench", GOLDEN_BENCHES)
-def test_fast_engine_matches_event_loop(mname, bench):
+def test_fast_engine_matches_event_loop(mname, bench, engine):
     cfg = machines.paper_suite()[mname]
     wl = get_workload(bench, n_threads=N_THREADS)
     stream = expand_stream(wl, cfg)
-    fast = simulate(wl.name, stream, cfg, engine="fast")
+    fast = simulate(wl.name, stream, cfg, engine=engine)
     event = simulate(wl.name, stream, cfg, engine="event")
     assert dataclasses.asdict(fast) == dataclasses.asdict(event)
 
 
-def test_fast_engine_accepts_legacy_warp_ops():
-    """The fast path gives identical results fed WarpOp lists or streams."""
+@pytest.mark.parametrize("engine", FAST_ENGINES)
+def test_fast_engine_accepts_legacy_warp_ops(engine):
+    """The fast paths give identical results fed WarpOp lists or streams."""
     cfg = machines.sw_plus()
     wl = get_workload("BFS", n_threads=N_THREADS)
     stream = expand_stream(wl, cfg)
-    from_stream = simulate(wl.name, stream, cfg, engine="fast")
-    from_ops = simulate(wl.name, stream.to_warp_ops(), cfg, engine="fast")
+    from_stream = simulate(wl.name, stream, cfg, engine=engine)
+    from_ops = simulate(wl.name, stream.to_warp_ops(), cfg, engine=engine)
     assert dataclasses.asdict(from_stream) == dataclasses.asdict(from_ops)
+
+
+# ------------------------------------------------------------ expansion key
+
+def _streams_equal(a: WarpStream, b: WarpStream) -> bool:
+    if a.n_warps != b.n_warps:
+        return False
+    return all(np.array_equal(getattr(a, f), getattr(b, f))
+               for f in ("warp", "issue", "tins", "lanes", "kind", "maccs",
+                         "blk_off", "blk_len", "blocks", "nbytes",
+                         "op_start"))
+
+
+def test_expansion_key_collides_iff_streams_identical():
+    """expansion_key(a) == expansion_key(b) <=> identical expand_stream.
+
+    Walks every MachineConfig field with an alternate value: fields inside
+    the expansion key must change both the key and the expanded stream;
+    fields outside it must change neither stream nor key. BFS exercises
+    every mechanism a key field feeds (branch divergence for the MIMD
+    flag, loads+stores for transaction bytes, issue occupancy for
+    warp/SIMD width). Adding a MachineConfig field without classifying it
+    here fails the exhaustiveness check.
+    """
+    base = MachineConfig()
+    wl = get_workload("BFS", n_threads=256)
+    base_stream = expand_stream(wl, base)
+
+    # field -> (alternate value, participates in the expansion key?)
+    alternates = {
+        "name": ("other", False),
+        "warp_size": (64, True),
+        "simd_width": (4, True),
+        "ideal_coalescing": (True, False),
+        "mimd": (True, True),
+        "num_sms": (4, False),
+        "threads_per_sm": (2048, False),
+        "pipeline_depth": (12, False),
+        "core_clock_ghz": (2.0, False),
+        "num_mem_ctrls": (8, False),
+        "dram_bw_gbps": (100.0, False),
+        "dram_latency_cycles": (100, False),
+        "transaction_bytes": (128, True),
+        "l1_size_bytes": (96 * 1024, False),
+        "l1_ways": (4, False),
+        "l1_hit_latency": (2, False),
+    }
+    fields = {f.name for f in dataclasses.fields(MachineConfig)}
+    assert fields == set(alternates), "classify new fields for expansion_key"
+
+    k0 = expansion_key(base)
+    for fname, (alt, in_key) in alternates.items():
+        cfg = dataclasses.replace(base, **{fname: alt})
+        stream = expand_stream(wl, cfg)
+        if in_key:
+            assert expansion_key(cfg) != k0, fname
+            assert not _streams_equal(stream, base_stream), fname
+        else:
+            assert expansion_key(cfg) == k0, fname
+            assert _streams_equal(stream, base_stream), fname
+
+
+# ------------------------------------- property-based engine equivalence
+# Guarded import: hypothesis is optional — the golden locks above must run
+# (and fail loudly) even on hosts without it, so no module-level skip.
+
+try:
+    import hypothesis as hyp
+    import hypothesis.strategies as hyp_st
+except ImportError:
+    hyp = None
+
+
+if hyp is None:
+    @pytest.mark.skip(reason="optional dep: property test needs hypothesis")
+    def test_engines_bit_identical_on_random_workloads():
+        pass
+
+
+def _program_strategy():
+    computes = hyp_st.builds(Compute, n=hyp_st.integers(1, 8))
+    mems = hyp_st.builds(
+        Mem,
+        pattern=hyp_st.sampled_from(
+            ["coalesced", "strided", "random", "broadcast"]),
+        is_load=hyp_st.booleans(),
+        stride=hyp_st.sampled_from([4, 8, 64, 128]),
+        working_set=hyp_st.sampled_from([1 << 12, 1 << 16]),
+        irregularity=hyp_st.sampled_from([0.0, 0.25]),
+        region=hyp_st.sampled_from([None, "hyp_a", "hyp_b"]),
+        offset=hyp_st.sampled_from([0, -64, 64]),
+    )
+    stmt = hyp_st.recursive(
+        computes | mems,
+        lambda ch: hyp_st.one_of(
+            hyp_st.builds(
+                Branch,
+                p_taken=hyp_st.floats(0.05, 0.95),
+                corr=hyp_st.floats(0.0, 0.95),
+                then=hyp_st.lists(ch, min_size=1, max_size=3).map(tuple),
+                orelse=hyp_st.lists(ch, min_size=0, max_size=2).map(tuple),
+            ),
+            hyp_st.builds(
+                Loop,
+                trips=hyp_st.integers(1, 3),
+                body=hyp_st.lists(ch, min_size=1, max_size=3).map(tuple),
+            ),
+        ),
+        max_leaves=10,
+    )
+    return hyp_st.lists(stmt, min_size=1, max_size=4)
+
+
+def _machine_strategy_draw(draw):
+    simd = draw(hyp_st.sampled_from([4, 8]))
+    warp = draw(hyp_st.sampled_from([4, 8, 16, 32, 64]))
+    if warp % simd and warp > simd:
+        warp = simd
+    return MachineConfig(
+        name=f"hyp_ws{warp}",
+        warp_size=warp,
+        simd_width=simd,
+        # Includes the SW+/LW+ idealizations and non-default memory
+        # systems; fractional bandwidth exercises non-representable
+        # service times (float addition order must still agree).
+        ideal_coalescing=draw(hyp_st.booleans()),
+        mimd=draw(hyp_st.booleans()),
+        num_sms=draw(hyp_st.sampled_from([1, 2, 3])),
+        pipeline_depth=draw(hyp_st.sampled_from([8, 24])),
+        core_clock_ghz=draw(hyp_st.sampled_from([1.3, 1.7])),
+        num_mem_ctrls=draw(hyp_st.sampled_from([1, 3, 6])),
+        dram_bw_gbps=draw(hyp_st.sampled_from([76.8, 100.0, 33.3])),
+        dram_latency_cycles=draw(hyp_st.sampled_from([100, 420])),
+        l1_size_bytes=draw(hyp_st.sampled_from([4096, 48 * 1024])),
+        l1_ways=draw(hyp_st.sampled_from([2, 8])),
+        l1_hit_latency=draw(hyp_st.sampled_from([1, 2])),
+    )
+
+
+if hyp is not None:
+    @hyp.given(
+        program=_program_strategy(),
+        cfg=hyp_st.composite(_machine_strategy_draw)(),
+        n_warp_groups=hyp_st.sampled_from([4, 8, 16]),
+        seed=hyp_st.integers(0, 2**31 - 1),
+    )
+    @hyp.settings(max_examples=25, deadline=None,
+                  suppress_health_check=[hyp.HealthCheck.too_slow])
+    def test_engines_bit_identical_on_random_workloads(
+            program, cfg, n_warp_groups, seed):
+        """fast == fast_nested == native == event on arbitrary workloads ×
+        machine configs (MIMD/LW+, ideal and baseline coalescing, odd
+        memory geometries included), every SimResult field compared
+        exactly."""
+        wl = Workload("HYP", program,
+                      n_threads=cfg.warp_size * n_warp_groups, seed=seed)
+        stream = expand_stream(wl, cfg)
+        ref = dataclasses.asdict(
+            simulate(wl.name, stream, cfg, engine="event"))
+        for engine in FAST_ENGINES:
+            got = dataclasses.asdict(simulate(wl.name, stream, cfg,
+                                              engine=engine))
+            assert got == ref, engine
 
 
 # ------------------------------------------------------- golden constants

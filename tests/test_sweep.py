@@ -8,6 +8,7 @@ import os
 import pytest
 
 from repro.core.warpsim import machines
+from repro.core.warpsim import sweep as sweep_mod
 from repro.core.warpsim.config import MachineConfig
 from repro.core.warpsim.sweep import (
     ResultCache, SweepSpec, cell_key, machine_key, run_sweep,
@@ -50,7 +51,7 @@ def test_warm_cache_never_simulates(tmp_path, monkeypatch):
     def boom(args):
         raise AssertionError("warm sweep must not simulate")
 
-    monkeypatch.setattr(sweep_mod, "_run_cell", boom)
+    monkeypatch.setattr(sweep_mod, "_run_group", boom)
     res = run_sweep(spec, cache=ResultCache(str(tmp_path)), parallel=False)
     assert res["SW+"]["BFS"].cycles > 0
 
@@ -134,6 +135,27 @@ def test_cache_corrupt_file_recovers(tmp_path):
     assert again.misses == 0
 
 
+def test_cache_reads_legacy_sharded_layout(tmp_path):
+    """Caches written by the PR 1 layout (key[:2]/ shard dirs) stay warm."""
+    cache = ResultCache(str(tmp_path))
+    spec = _spec(benches=("DYN",))
+    ref = run_sweep(spec, cache=cache, parallel=False)
+
+    for name in os.listdir(tmp_path):       # re-shard like the old layout
+        if name.endswith(".json"):
+            shard = tmp_path / name[:2]
+            shard.mkdir(exist_ok=True)
+            os.replace(tmp_path / name, shard / name)
+
+    legacy = ResultCache(str(tmp_path))
+    res = run_sweep(spec, cache=legacy, parallel=False)
+    assert legacy.hits == len(spec.cells()) and legacy.misses == 0
+    for m in ref:
+        for b in ref[m]:
+            assert (dataclasses.asdict(res[m][b])
+                    == dataclasses.asdict(ref[m][b]))
+
+
 # -------------------------------------------------------------------- spec
 
 def test_spec_deterministic_cell_order():
@@ -174,3 +196,77 @@ def test_parallel_matches_serial():
         for b in serial[m]:
             assert (dataclasses.asdict(par[m][b])
                     == dataclasses.asdict(serial[m][b]))
+
+
+# ------------------------------------------------- shared-expansion groups
+
+def test_grouped_matches_ungrouped():
+    """Expansion sharing must be invisible in the numbers."""
+    spec = _spec()
+    grouped = run_sweep(spec, parallel=False)
+    ungrouped = run_sweep(spec, parallel=False, group_expansion=False)
+    for m in ungrouped:
+        for b in ungrouped[m]:
+            assert (dataclasses.asdict(grouped[m][b])
+                    == dataclasses.asdict(ungrouped[m][b]))
+
+
+def test_sweep_stats_expansion_groups():
+    # ws8 and SW+ share an expansion key; ws16 does not.
+    spec = _spec(machines={"ws8": machines.baseline(8),
+                           "SW+": machines.sw_plus(),
+                           "ws16": machines.baseline(16)})
+    run_sweep(spec, parallel=False)
+    stats = dict(sweep_mod.LAST_SWEEP_STATS)
+    assert stats["cells"] == stats["simulated"] == 9
+    assert stats["expansion_groups"] == 6       # 3 benches x {ws8/SW+, ws16}
+    assert stats["expansions_saved"] == 3
+    assert stats["cache_hits"] == stats["cache_misses"] == 0
+
+    run_sweep(spec, parallel=False, group_expansion=False)
+    stats = dict(sweep_mod.LAST_SWEEP_STATS)
+    assert stats["expansion_groups"] == 9 and stats["expansions_saved"] == 0
+
+
+def test_sweep_stats_cache_counters(tmp_path):
+    cache = ResultCache(str(tmp_path))
+    spec = _spec(benches=("DYN",))
+    run_sweep(spec, cache=cache, parallel=False)
+    assert sweep_mod.LAST_SWEEP_STATS["cache_misses"] == 2
+    assert sweep_mod.LAST_SWEEP_STATS["cache_hits"] == 0
+    run_sweep(spec, cache=ResultCache(str(tmp_path)), parallel=False)
+    assert sweep_mod.LAST_SWEEP_STATS["cache_hits"] == 2
+    assert sweep_mod.LAST_SWEEP_STATS["simulated"] == 0
+    assert sweep_mod.LAST_SWEEP_STATS["expansion_groups"] == 0
+
+
+def test_expansion_cache_lru_bound():
+    from repro.core.warpsim.sweep import ExpansionCache
+    from repro.core.warpsim.trace import get_workload
+
+    lru = ExpansionCache(maxsize=2)
+    cfgs = [machines.baseline(8), machines.baseline(16),
+            machines.baseline(32)]
+    wl = get_workload("DYN", n_threads=256)
+    for cfg in cfgs:
+        lru.get(wl, cfg)
+    assert len(lru) == 2 and lru.misses == 3    # ws8 evicted (LRU)
+    s16 = lru.get(wl, cfgs[1])
+    assert lru.hits == 1
+    assert s16 is lru.get(wl, cfgs[1])          # cached object, not a copy
+    lru.get(wl, cfgs[0])                        # re-expand after eviction
+    assert lru.misses == 4 and len(lru) == 2
+    lru.clear()
+    assert len(lru) == 0 and lru.hits == lru.misses == 0
+
+
+def test_expansion_cache_shared_across_variants():
+    """ws8 and SW+ collide on the expansion key -> one stored stream."""
+    from repro.core.warpsim.sweep import ExpansionCache
+    from repro.core.warpsim.trace import get_workload
+
+    lru = ExpansionCache()
+    wl = get_workload("BFS", n_threads=256)
+    a = lru.get(wl, machines.baseline(8))
+    b = lru.get(wl, machines.sw_plus())
+    assert a is b and lru.hits == 1 and lru.misses == 1
