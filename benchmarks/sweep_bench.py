@@ -9,23 +9,34 @@ the speedups the sweep subsystem exists to deliver:
   per-warp Python expansion — so the derived speedups below are *lower
   bounds* on the speedup vs the original seed serial path.
 * ``cold_pr1`` — the PR 1 cold path, re-measured live: process-parallel
-  grid over a fresh cache with one expansion per cell (no grouping) and
-  the previous-generation ``fast_nested`` engine (nested per-warp op
-  lists).
-* ``cold`` — the current cold path: shared-expansion grouping + the
-  flat-CSR engine (compiled core when available), fresh (empty) cache.
+  grid over a fresh cache with one single-phase expansion per cell (no
+  grouping) and the previous-generation ``fast_nested`` engine (nested
+  per-warp op lists).
+* ``cold_pr2`` — the PR 2 cold path, re-measured live: shared-expansion
+  grouping + the flat-CSR/native timing engine, but single-phase
+  expansion per expansion-key group (``share_traces=False``).
+* ``trace_build`` — phase 1 of the two-phase expansion alone: one
+  ThreadTrace build per (bench, n_threads, seed) of the grid.
+* ``cold`` — the current cold path: trace families (one ThreadTrace per
+  workload, shared by every expansion key) + per-key aggregation (native
+  core when available) + the flat-CSR/native timing engine, fresh (empty)
+  cache.
 * ``warm`` — same sweep again over the now-populated cache.
 
-The in-process expansion LRU is cleared between phases so every cold
-number is an honest from-scratch measurement. Extra rows surface the
-ResultCache hit/miss counters and the expansion-grouping counters of the
-cold and warm runs, so cache efficacy is visible in the BENCH trajectory.
+The in-process trace/expansion LRUs are cleared between phases so every
+cold number is an honest from-scratch measurement. Extra rows surface the
+ResultCache hit/miss counters and the trace/expansion-grouping counters of
+the cold and warm runs, so cache efficacy is visible in the BENCH
+trajectory.
 
 Speedup floors are asserted (tunable via CLI): ``cold`` must beat
-``cold_pr1`` by ``--min-speedup-pr1`` (default 2.5) and ``serial_event``
-by ``--min-speedup-event`` (default 8). ``--quick`` shrinks the grid for
-CI smoke runs (floors scale down: parallel/pool overhead dominates tiny
-grids) and ``--json PATH`` dumps the rows for artifact upload.
+``cold_pr1`` by ``--min-speedup-pr1`` (default 2.5), ``cold_pr2`` by
+``--min-speedup-pr2`` (default 1.2) and ``serial_event`` by
+``--min-speedup-event`` (default 8). ``--quick`` shrinks the grid for CI
+smoke runs (floors scale down: parallel/pool overhead dominates tiny
+grids) and ``--json PATH`` dumps the rows for artifact upload — and also
+refreshes the repo-root ``BENCH_PR3.json`` trajectory entry so future PRs
+can diff cold/warm/trace-phase timings against this one.
 
 Rows follow the harness CSV convention ``(name, us_per_call, derived)``
 where `derived` carries the speedup vs the serial event path (timing
@@ -36,27 +47,57 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import shutil
 import tempfile
 import time
 from typing import List, Optional, Tuple
 
 from repro.core.warpsim import _native, machines, runner, sweep
+from repro.core.warpsim.divergence import build_thread_trace
+from repro.core.warpsim.trace import BENCHMARKS, get_workload
 
 Row = Tuple[str, float, float]
 
 QUICK_BENCHES = ("BFS", "BKP", "MTM", "DYN")
 QUICK_N_THREADS = 512
 
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+TRAJECTORY_PATH = os.path.join(_REPO_ROOT, "BENCH_PR3.json")
+
+
+def effective_floors(quick: bool,
+                     min_speedup_pr1: Optional[float] = None,
+                     min_speedup_pr2: Optional[float] = None,
+                     min_speedup_event: Optional[float] = None) -> dict:
+    """Resolve the asserted floors (None -> per-grid default).
+
+    Single source of truth for run() and the BENCH_PR3.json trajectory
+    entry, so an explicit floor — including 0.0, i.e. disabled — is
+    recorded exactly as asserted.
+    """
+    return {
+        "cold_vs_pr1": (1.5 if quick else 2.5) if min_speedup_pr1 is None
+        else min_speedup_pr1,
+        "cold_vs_pr2": (1.1 if quick else 1.2) if min_speedup_pr2 is None
+        else min_speedup_pr2,
+        "cold_vs_serial_event": (3.0 if quick else 8.0)
+        if min_speedup_event is None else min_speedup_event,
+    }
+
 
 def run(quick: bool = False,
         min_speedup_pr1: Optional[float] = None,
+        min_speedup_pr2: Optional[float] = None,
         min_speedup_event: Optional[float] = None) -> List[Row]:
-    if min_speedup_pr1 is None:
-        min_speedup_pr1 = 1.5 if quick else 2.5
-    if min_speedup_event is None:
-        min_speedup_event = 3.0 if quick else 8.0
+    floors = effective_floors(quick, min_speedup_pr1, min_speedup_pr2,
+                              min_speedup_event)
+    min_speedup_pr1 = floors["cold_vs_pr1"]
+    min_speedup_pr2 = floors["cold_vs_pr2"]
+    min_speedup_event = floors["cold_vs_serial_event"]
     suite = machines.paper_suite()
+    benches = QUICK_BENCHES if quick else BENCHMARKS
+    n_threads = QUICK_N_THREADS if quick else None
     kw = (dict(benches=QUICK_BENCHES, n_threads=QUICK_N_THREADS)
           if quick else {})
 
@@ -65,14 +106,15 @@ def run(quick: bool = False,
     native = _native.available()
 
     # Each phase is min-of-N with from-scratch state per repeat (fresh
-    # cache dir, cleared expansion LRU): min is the noise-robust wall-time
-    # estimator, and the asserted ratios must not flap with box jitter.
+    # cache dir, cleared trace/expansion LRUs): min is the noise-robust
+    # wall-time estimator, and the asserted ratios must not flap with box
+    # jitter.
     reps = 2
 
     # The two baseline phases replicate PR 1 semantics exactly: one
-    # expansion per cell, no in-process expansion reuse (the LRU postdates
-    # them). reuse_expansion=False rides in the worker payload, so it
-    # holds under any multiprocessing start method.
+    # single-phase expansion per cell, no in-process reuse (the LRUs
+    # postdate them). reuse_expansion=False rides in the worker payload,
+    # so it holds under any multiprocessing start method.
     baseline_kw = dict(group_expansion=False, reuse_expansion=False, **kw)
     t_serial = float("inf")
     for _ in range(reps):
@@ -93,14 +135,44 @@ def run(quick: bool = False,
         finally:
             shutil.rmtree(pr1_dir, ignore_errors=True)
 
+    # Expansion phase 1 alone: one ThreadTrace per (bench, n_threads,
+    # seed) of the grid — the work the two-phase cold path runs once and
+    # every expansion key then shares.
+    t_trace = float("inf")
+    for _ in range(reps):
+        t0 = time.time()
+        for b in benches:
+            build_thread_trace(get_workload(b, n_threads=n_threads))
+        t_trace = min(t_trace, time.time() - t0)
+
+    # PR 2 cold path (expansion-key grouping + flat-CSR/native timing but
+    # single-phase expansion, share_traces=False) and the current
+    # two-phase cold path, measured *interleaved*: the asserted pr2/cold
+    # ratio must not flap when a noisy-neighbor period hits one phase but
+    # not the other, so each repetition times both back to back and min
+    # is taken per phase.
+    t_pr2 = float("inf")
     t_cold = float("inf")
     cache_dir = None
     try:
-        for _ in range(reps):
+        for _ in range(reps + 1):
+            pr2_dir = tempfile.mkdtemp(prefix="warpsim-sweep-bench-pr2-")
+            try:
+                sweep.EXPANSION_CACHE.clear()
+                sweep.TRACE_CACHE.clear()
+                t0 = time.time()
+                pr2 = runner.run_suite(suite,
+                                       cache=sweep.ResultCache(pr2_dir),
+                                       share_traces=False, **kw)
+                t_pr2 = min(t_pr2, time.time() - t0)
+            finally:
+                shutil.rmtree(pr2_dir, ignore_errors=True)
+
             if cache_dir is not None:
                 shutil.rmtree(cache_dir, ignore_errors=True)
             cache_dir = tempfile.mkdtemp(prefix="warpsim-sweep-bench-")
             sweep.EXPANSION_CACHE.clear()
+            sweep.TRACE_CACHE.clear()
             cold_cache = sweep.ResultCache(cache_dir)
             t0 = time.time()
             cold = runner.run_suite(suite, cache=cold_cache, **kw)
@@ -117,23 +189,29 @@ def run(quick: bool = False,
         if cache_dir is not None:
             shutil.rmtree(cache_dir, ignore_errors=True)
 
-    # The cache, grouping and every engine generation must be invisible in
-    # the numbers: bit-identical to the reference event loop.
+    # The cache, grouping and every engine/expansion generation must be
+    # invisible in the numbers: bit-identical to the reference event loop.
     for m in ref:
         for b in ref[m]:
             assert pr1[m][b].as_dict() == ref[m][b].as_dict(), (m, b)
+            assert pr2[m][b].as_dict() == ref[m][b].as_dict(), (m, b)
             assert cold[m][b].as_dict() == ref[m][b].as_dict(), (m, b)
             assert warm[m][b].as_dict() == ref[m][b].as_dict(), (m, b)
     n_cells = len(ref) * len(next(iter(ref.values())))
     assert warm_cache.hits == n_cells
     assert warm_stats["cache_hits"] == n_cells
     assert cold_stats["cache_misses"] == n_cells
+    assert cold_stats["trace_families"] == len(benches)
 
     speedup_pr1 = t_pr1 / max(t_cold, 1e-9)
+    speedup_pr2 = t_pr2 / max(t_cold, 1e-9)
     speedup_event = t_serial / max(t_cold, 1e-9)
     assert speedup_pr1 >= min_speedup_pr1, (
         f"cold sweep only {speedup_pr1:.2f}x faster than the PR 1 cold "
         f"path (floor {min_speedup_pr1}x): {t_cold:.3f}s vs {t_pr1:.3f}s")
+    assert speedup_pr2 >= min_speedup_pr2, (
+        f"cold sweep only {speedup_pr2:.2f}x faster than the PR 2 cold "
+        f"path (floor {min_speedup_pr2}x): {t_cold:.3f}s vs {t_pr2:.3f}s")
     assert speedup_event >= min_speedup_event, (
         f"cold sweep only {speedup_event:.2f}x faster than serial_event "
         f"(floor {min_speedup_event}x): {t_cold:.3f}s vs {t_serial:.3f}s")
@@ -141,12 +219,18 @@ def run(quick: bool = False,
     return [
         ("sweep/serial_event", t_serial * 1e6, 1.0),
         ("sweep/cold_pr1", t_pr1 * 1e6, t_serial / max(t_pr1, 1e-9)),
+        ("sweep/cold_pr2", t_pr2 * 1e6, t_serial / max(t_pr2, 1e-9)),
+        ("sweep/trace_build", t_trace * 1e6, t_trace / max(t_cold, 1e-9)),
         ("sweep/cold", t_cold * 1e6, speedup_event),
         ("sweep/warm", t_warm * 1e6, t_serial / max(t_warm, 1e-9)),
         ("sweep/cold_speedup_vs_pr1", 0.0, speedup_pr1),
+        ("sweep/cold_speedup_vs_pr2", 0.0, speedup_pr2),
         ("sweep/native_engine", 0.0, 1.0 if native else 0.0),
         ("sweep/cold_cells", 0.0, float(cold_stats["cells"])),
         ("sweep/cold_cache_misses", 0.0, float(cold_stats["cache_misses"])),
+        ("sweep/cold_trace_families", 0.0,
+         float(cold_stats["trace_families"])),
+        ("sweep/cold_traces_shared", 0.0, float(cold_stats["traces_shared"])),
         ("sweep/cold_expansion_groups", 0.0,
          float(cold_stats["expansion_groups"])),
         ("sweep/cold_expansions_saved", 0.0,
@@ -156,20 +240,62 @@ def run(quick: bool = False,
     ]
 
 
+def write_trajectory(rows: List[Row], quick: bool,
+                     floors: dict, path: str = TRAJECTORY_PATH) -> None:
+    """Refresh the repo-root BENCH_PR3.json trajectory entry.
+
+    One self-contained snapshot of this PR's perf claim — cold/warm/
+    trace-phase timings plus the asserted floors — so later PRs can diff
+    their own cold paths against PR 3 without re-deriving the harness.
+    """
+    by_name = {n: (us, d) for n, us, d in rows}
+    entry = {
+        "pr": 3,
+        "change": "two-phase workload expansion: shared thread-trace "
+                  "cache + native per-warp aggregation core",
+        "quick_grid": quick,
+        "native_engine": bool(by_name["sweep/native_engine"][1]),
+        "timings_us": {
+            k: by_name[f"sweep/{k}"][0]
+            for k in ("serial_event", "cold_pr1", "cold_pr2", "trace_build",
+                      "cold", "warm")},
+        "speedups": {
+            "cold_vs_pr1": by_name["sweep/cold_speedup_vs_pr1"][1],
+            "cold_vs_pr2": by_name["sweep/cold_speedup_vs_pr2"][1],
+            "cold_vs_serial_event": by_name["sweep/cold"][1],
+        },
+        "asserted_floors": floors,
+        "counters": {
+            k.split("/", 1)[1]: by_name[k][1]
+            for k in by_name if by_name[k][0] == 0.0
+            and k not in ("sweep/cold_speedup_vs_pr1",
+                          "sweep/cold_speedup_vs_pr2",
+                          "sweep/native_engine")},
+    }
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(entry, f, indent=1)
+    os.replace(tmp, path)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true",
                     help="reduced grid (CI smoke): 4 benches, 512 threads")
     ap.add_argument("--min-speedup-pr1", type=float, default=None,
                     help="assertion floor for cold vs the PR 1 cold path")
+    ap.add_argument("--min-speedup-pr2", type=float, default=None,
+                    help="assertion floor for cold vs the PR 2 cold path")
     ap.add_argument("--min-speedup-event", type=float, default=None,
                     help="assertion floor for cold vs serial_event")
     ap.add_argument("--json", default=None, metavar="PATH",
-                    help="also dump rows as JSON (CI artifact)")
+                    help="also dump rows as JSON (CI artifact) and refresh "
+                         "the repo-root BENCH_PR3.json trajectory entry")
     args = ap.parse_args()
 
     rows = run(quick=args.quick,
                min_speedup_pr1=args.min_speedup_pr1,
+               min_speedup_pr2=args.min_speedup_pr2,
                min_speedup_event=args.min_speedup_event)
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived:.6g}")
@@ -177,6 +303,10 @@ def main() -> None:
         with open(args.json, "w") as f:
             json.dump([{"name": n, "us_per_call": us, "derived": d}
                        for n, us, d in rows], f, indent=1)
+        write_trajectory(rows, args.quick,
+                         effective_floors(args.quick, args.min_speedup_pr1,
+                                          args.min_speedup_pr2,
+                                          args.min_speedup_event))
 
 
 if __name__ == "__main__":

@@ -24,17 +24,26 @@ def main():
     cache = ResultCache(CACHE_DIR)
 
     print("running 15 benchmarks x 6 machines (paper Figs. 2-7)...")
+    print(f"  {machines.sharing_plan(machines.paper_suite())}")
     for ekey, names in machines.expansion_groups(machines.paper_suite()).items():
         if len(names) > 1:
             print(f"  {'+'.join(names)} share one expansion "
                   f"(warp={ekey[0]}, simd={ekey[1]})")
     spec = SweepSpec(machines=machines.paper_suite())
     t0 = time.time()
-    res = run_sweep(spec, cache=cache)
+    res = run_sweep(spec, cache=cache, persist_traces=True)
     print(f"  {len(spec.cells())} cells in {time.time() - t0:.2f}s "
           f"({cache.hits} cached, {cache.misses} simulated, "
-          f"{LAST_SWEEP_STATS['expansion_groups']} expansions for "
+          f"{LAST_SWEEP_STATS['expansion_groups']} aggregations from "
+          f"{LAST_SWEEP_STATS['trace_families']} thread traces for "
           f"{LAST_SWEEP_STATS['simulated']} uncached cells)")
+    print(f"  trace cache: {LAST_SWEEP_STATS['trace_cache_hits']} hits / "
+          f"{LAST_SWEEP_STATS['trace_cache_misses']} misses "
+          f"({LAST_SWEEP_STATS['trace_disk_hits']} from disk, "
+          f"{LAST_SWEEP_STATS['traces_shared']} aggregations rode a "
+          f"shared trace); expansion LRU: "
+          f"{LAST_SWEEP_STATS['expansion_cache_hits']} hits / "
+          f"{LAST_SWEEP_STATS['expansion_cache_misses']} misses")
 
     benches = list(next(iter(res.values())))
     print(f"\n{'':6s}" + " ".join(f"{b:>6s}" for b in benches))
@@ -57,8 +66,11 @@ def main():
     print("\ndense warp-size scaling sweep, 4..128 threads/warp:")
     dense = SweepSpec.warp_size_range(4, 128)
     t0 = time.time()
-    dres = run_sweep(dense, cache=cache)
-    print(f"  {len(dense.cells())} cells in {time.time() - t0:.2f}s")
+    dres = run_sweep(dense, cache=cache, persist_traces=True)
+    print(f"  {len(dense.cells())} cells in {time.time() - t0:.2f}s "
+          f"(trace cache: {LAST_SWEEP_STATS['trace_cache_hits']}h/"
+          f"{LAST_SWEEP_STATS['trace_cache_misses']}m, "
+          f"{LAST_SWEEP_STATS['trace_disk_hits']} from disk)")
     for m, per_bench in dres.items():
         print(f"  {m:6s} geomean IPC {runner.mean_ipc(per_bench):6.3f}")
 

@@ -24,6 +24,30 @@ all per-warp macro-op streams, built with vectorized per-statement passes
 ``np.unique`` per warp). :func:`expand_workload` materializes the stream
 into the legacy ``List[List[WarpOp]]`` shape for the reference event-loop
 engine and for tests; both views describe byte-identical op streams.
+
+Expansion is a *two-phase* pipeline:
+
+1. :func:`build_thread_trace` walks the program once per ``(bench,
+   n_threads, seed)`` and records everything drawn from the workload seed
+   (branch-outcome masks, memory addresses, walk order) as a
+   :class:`~repro.core.warpsim.trace.ThreadTrace`. Nothing in the trace
+   depends on the machine: masks are pure functions of the rng stream, and
+   MIMD fragment bookkeeping is deferred to phase 2 as SPLIT/RESET events.
+2. :func:`aggregate_stream` replays the trace for one
+   ``MachineConfig.expansion_key()`` (warp size, SIMD width, MIMD flag,
+   transaction bytes) and emits the :class:`WarpStream` — per-warp issue
+   occupancy and intra-warp (or per-fragment) coalescing. The pass is
+   vectorized per event and has a compiled C core
+   (:func:`repro.core.warpsim._native.run_aggregation`, same
+   compile-on-demand / ``WARPSIM_NATIVE=0`` fallback contract as the
+   timing engine).
+
+:func:`expand_stream` composes the two phases; sweeps share one trace
+across every expansion key of a workload (``sweep.TRACE_CACHE``). The
+retired single-phase walk is kept verbatim as
+:func:`expand_stream_single` — the reference implementation the
+golden/property tests hold both phases (and the native core) bit-identical
+to, and the honest baseline for ``benchmarks/sweep_bench.py``.
 """
 
 from __future__ import annotations
@@ -33,10 +57,12 @@ from typing import List, Optional, Sequence, Union
 
 import numpy as np
 
-from repro.core.warpsim import coalesce
+from repro.core.warpsim import _native, coalesce
 from repro.core.warpsim.config import MachineConfig
 from repro.core.warpsim.trace import (
-    Branch, Compute, Loop, Mem, Stmt, Workload, correlated_outcomes,
+    TEV_COMPUTE, TEV_LOAD, TEV_RESET, TEV_SPLIT, TEV_STORE,
+    Branch, Compute, Loop, Mem, Stmt, ThreadTrace, Workload,
+    correlated_outcomes,
 )
 
 # WarpStream op kinds.
@@ -192,8 +218,16 @@ def _grouped_transactions(keys, blocks: np.ndarray, block_bytes: int):
     return k0[idx], sb[idx], nbytes
 
 
-def expand_stream(workload: Workload, cfg: MachineConfig) -> WarpStream:
-    """Expand a workload into the struct-of-arrays op streams for `cfg`."""
+def expand_stream_single(workload: Workload, cfg: MachineConfig) -> WarpStream:
+    """Single-phase expansion: the retired one-pass walk, kept verbatim.
+
+    Reference implementation for the two-phase pipeline (trace build +
+    per-key aggregation): ``tests/test_golden.py`` asserts bit-identical
+    :class:`WarpStream` output across this path, the two-phase Python path
+    and the native aggregation core. Also the honest re-measured baseline
+    of ``benchmarks/sweep_bench.py`` (the PR 1/PR 2 cold paths expanded
+    from scratch per cell / per expansion key).
+    """
     n = workload.n_threads
     ws = cfg.warp_size
     if n % ws:
@@ -367,6 +401,308 @@ def expand_stream(workload: Workload, cfg: MachineConfig) -> WarpStream:
         blk_off=blk_off[perm], blk_len=blen[perm], blocks=blocks,
         nbytes=nbytes, op_start=op_start,
     )
+
+
+# ---------------------------------------------------------------------------
+# Two-phase expansion: shared thread trace + per-key aggregation
+# ---------------------------------------------------------------------------
+
+
+def build_thread_trace(workload: Workload) -> ThreadTrace:
+    """Phase 1: walk the program once, record everything seed-derived.
+
+    Replays the exact rng consumption order of the single-phase walk
+    (addresses at each executed memory instance, outcomes at each executed
+    branch), so the recorded trace is byte-identical to what any
+    ``expand_stream_single(workload, cfg)`` call would draw — for *every*
+    machine config: masks are pure functions of the outcome stream, and a
+    subtree is skipped (mask empty) independently of the machine.
+    """
+    n = workload.n_threads
+    rng = np.random.default_rng(workload.seed)
+    uid = [0]
+
+    # Mask table: one row per unique mask object (straight-line runs and
+    # loop bodies re-walk the same array; branch children are fresh rows).
+    mask_rows: dict = {}
+    mask_list: List[np.ndarray] = []
+    tid_cache: dict = {}
+
+    def row_of(mask: np.ndarray) -> int:
+        r = mask_rows.get(id(mask))
+        if r is None:
+            r = len(mask_list)
+            mask_list.append(mask)       # pins `mask`: id() never recycled
+            mask_rows[id(mask)] = r
+        return r
+
+    ev_kind: List[int] = []
+    ev_mask: List[int] = []
+    ev_arg: List[int] = []
+    ev_addr: List[int] = []
+    addr_rows: List[np.ndarray] = []
+
+    def walk(stmts: Sequence[Stmt], mask: np.ndarray) -> None:
+        if not mask.any():
+            return
+        mrow = row_of(mask)
+        for s in stmts:
+            if isinstance(s, Compute):
+                ev_kind.append(TEV_COMPUTE)
+                ev_mask.append(mrow)
+                ev_arg.append(s.n)
+                ev_addr.append(-1)
+            elif isinstance(s, Mem):
+                uid[0] += 1
+                addrs = coalesce.generate_addresses(s, uid[0], n, rng)
+                tid = tid_cache.get(mrow)
+                if tid is None:
+                    tid = tid_cache[mrow] = np.nonzero(mask)[0]
+                ev_kind.append(TEV_LOAD if s.is_load else TEV_STORE)
+                ev_mask.append(mrow)
+                ev_arg.append(0)
+                ev_addr.append(len(addr_rows))
+                addr_rows.append(addrs[tid])
+            elif isinstance(s, Loop):
+                for _ in range(s.trips):
+                    walk(s.body, mask)
+                    # MIMD fragment re-formation at the loop boundary;
+                    # SIMT aggregation skips RESET events.
+                    ev_kind.append(TEV_RESET)
+                    ev_mask.append(mrow)
+                    ev_arg.append(0)
+                    ev_addr.append(-1)
+            elif isinstance(s, Branch):
+                # The branch instruction itself.
+                ev_kind.append(TEV_COMPUTE)
+                ev_mask.append(mrow)
+                ev_arg.append(1)
+                ev_addr.append(-1)
+                outcome = correlated_outcomes(rng, n, s.p_taken, s.corr)
+                m_then = mask & outcome
+                m_else = mask & ~outcome
+                # SPLIT carries the then-mask: for threads of `mask`,
+                # membership in it *is* the branch outcome (MIMD fragment
+                # update); SIMT aggregation skips SPLIT events.
+                ev_kind.append(TEV_SPLIT)
+                ev_mask.append(mrow)
+                ev_arg.append(row_of(m_then))
+                ev_addr.append(-1)
+                walk(s.then, m_then)
+                walk(s.orelse, m_else)
+            else:
+                raise TypeError(f"unknown stmt {type(s)}")
+
+    walk(workload.program, np.ones(n, dtype=bool))
+
+    masks = (np.stack(mask_list) if mask_list
+             else np.zeros((0, n), dtype=bool))
+    addr_off = np.zeros(len(addr_rows) + 1, dtype=np.int64)
+    if addr_rows:
+        np.cumsum([len(r) for r in addr_rows], out=addr_off[1:])
+    addr_vals = (np.concatenate(addr_rows) if addr_rows
+                 else np.zeros(0, dtype=np.int64))
+    return ThreadTrace(
+        n_threads=n,
+        ev_kind=np.asarray(ev_kind, dtype=np.int8),
+        ev_mask=np.asarray(ev_mask, dtype=np.int32),
+        ev_arg=np.asarray(ev_arg, dtype=np.int64),
+        ev_addr=np.asarray(ev_addr, dtype=np.int64),
+        masks=masks, addr_off=addr_off, addr_vals=addr_vals,
+    )
+
+
+def _assemble_stream(n_warps: int, simd: int, warp, issue, tins, kind,
+                     maccs, blen, blocks, nbytes) -> WarpStream:
+    """Emission-order columns -> CSR :class:`WarpStream` (shared tail of the
+    single-phase walk: block-pool offsets, stable per-warp grouping)."""
+    blk_off = np.zeros(len(blen), dtype=np.int64)
+    if len(blen):
+        np.cumsum(blen[:-1], out=blk_off[1:])
+    perm = np.argsort(warp, kind="stable")
+    warp = warp[perm]
+    op_start = np.searchsorted(warp, np.arange(n_warps + 1))
+    return WarpStream(
+        n_warps=n_warps, warp=warp, issue=issue[perm], tins=tins[perm],
+        lanes=issue[perm] * simd, kind=kind[perm], maccs=maccs[perm],
+        blk_off=blk_off[perm], blk_len=blen[perm], blocks=blocks,
+        nbytes=nbytes, op_start=op_start,
+    )
+
+
+def aggregate_stream(trace: ThreadTrace, cfg: MachineConfig,
+                     impl: str = "auto") -> WarpStream:
+    """Phase 2: replay a :class:`ThreadTrace` for one expansion key.
+
+    Emits the same :class:`WarpStream` the single-phase walk produces for
+    ``cfg`` — bit-identical (all-integer arithmetic, canonical sort
+    orders), locked by the golden/property tests. `impl` selects
+    ``"native"`` (compiled C core; falls back cleanly when unavailable),
+    ``"python"`` (vectorized numpy pass) or ``"auto"`` (native when
+    available).
+    """
+    n = trace.n_threads
+    ws = cfg.warp_size
+    if n % ws:
+        raise ValueError(f"n_threads {n} not a multiple of warp size {ws}")
+    n_warps = n // ws
+    simd = cfg.simd_width
+
+    if impl not in ("auto", "native", "python"):
+        raise ValueError(f"unknown aggregation impl {impl!r}")
+    if impl in ("auto", "native"):
+        cols = _native.run_aggregation(trace, cfg)
+        if cols is not None:
+            (warp, issue, tins, kind, maccs, blk_off, blen, blocks,
+             nbytes, op_start) = cols
+            return WarpStream(
+                n_warps=n_warps, warp=warp, issue=issue, tins=tins,
+                lanes=issue * simd, kind=kind, maccs=maccs, blk_off=blk_off,
+                blk_len=blen, blocks=blocks, nbytes=nbytes,
+                op_start=op_start)
+
+    g_simt = cfg.issue_cycles_per_group
+    tb = cfg.transaction_bytes
+    mimd = cfg.mimd
+    warp_of_thread = np.arange(n) // ws
+
+    c_warp: List[np.ndarray] = []
+    c_issue: List[np.ndarray] = []
+    c_tins: List[np.ndarray] = []
+    c_kind: List[np.ndarray] = []
+    c_maccs: List[np.ndarray] = []
+    c_blen: List[np.ndarray] = []
+    c_blocks: List[np.ndarray] = []
+    c_nbytes: List[np.ndarray] = []
+
+    masks = trace.masks
+    tid_off, tid_cat = trace.tid_csr()
+
+    # Per-mask-row (tid, warp ids, per-warp counts), memoized per row: the
+    # same stats the single-phase `_mask_stats` derives per mask object.
+    row_stats: dict = {}
+
+    def _row_stats(row: int):
+        ent = row_stats.get(row)
+        if ent is None:
+            tid = tid_cat[tid_off[row]:tid_off[row + 1]]
+            warp_all = warp_of_thread[tid]
+            act = np.bincount(warp_all, minlength=n_warps)
+            w_idx = np.nonzero(act)[0]
+            ent = row_stats[row] = (tid, warp_all, w_idx, act[w_idx])
+        return ent
+
+    zeros_cache: dict = {}
+    kind_cache: dict = {}
+
+    def _zeros(m: int) -> np.ndarray:
+        z = zeros_cache.get(m)
+        if z is None:
+            z = zeros_cache[m] = np.zeros(m, dtype=np.int64)
+        return z
+
+    def append(warps, issue, tins, kind, maccs, blen, blocks=None,
+               nbytes=None):
+        m = len(warps)
+        c_warp.append(np.asarray(warps, dtype=np.int64))
+        c_issue.append(np.asarray(issue, dtype=np.int64))
+        c_tins.append(np.asarray(tins, dtype=np.int64))
+        kc = kind_cache.get((kind, m))
+        if kc is None:
+            kc = kind_cache[(kind, m)] = np.full(m, kind, dtype=np.int8)
+        c_kind.append(kc)
+        c_maccs.append(np.asarray(maccs, dtype=np.int64))
+        c_blen.append(np.asarray(blen, dtype=np.int64))
+        if blocks is not None:
+            c_blocks.append(np.asarray(blocks, dtype=np.int64))
+            c_nbytes.append(np.asarray(nbytes, dtype=np.int64))
+
+    frag_id = np.zeros(n, dtype=np.int64) if mimd else None
+
+    ev_kind = trace.ev_kind
+    ev_mask = trace.ev_mask
+    ev_arg = trace.ev_arg
+    ev_addr = trace.ev_addr
+    addr_off = trace.addr_off
+    addr_vals = trace.addr_vals
+
+    for i in range(trace.n_events):
+        k = ev_kind[i]
+        row = ev_mask[i]
+        if k == TEV_COMPUTE:
+            count = int(ev_arg[i])
+            _, _, w_idx, a = _row_stats(row)
+            if mimd:
+                issue = count * -(-a // simd)
+            else:
+                issue = np.full(len(w_idx), count * g_simt, dtype=np.int64)
+            z = _zeros(len(w_idx))
+            append(w_idx, issue, count * a, KIND_COMPUTE, z, z)
+        elif k == TEV_LOAD or k == TEV_STORE:
+            tid, warp_all, w_idx, a = _row_stats(row)
+            r = ev_addr[i]
+            blocks_all = addr_vals[addr_off[r]:addr_off[r + 1]] // tb
+            if mimd:
+                keys = (warp_all, frag_id[tid])
+            else:
+                keys = (warp_all,)
+            uwarp, ublocks, unbytes = _grouped_transactions(
+                keys, blocks_all, tb)
+            starts = np.searchsorted(uwarp, w_idx, side="left")
+            ends = np.searchsorted(uwarp, w_idx, side="right")
+            if mimd:
+                issue = -(-a // simd)
+            else:
+                issue = np.full(len(w_idx), g_simt, dtype=np.int64)
+            append(w_idx, issue, a,
+                   KIND_LOAD if k == TEV_LOAD else KIND_STORE,
+                   a, ends - starts, ublocks, unbytes)
+        elif k == TEV_SPLIT:
+            if mimd:
+                mask = masks[row]
+                then_mask = masks[ev_arg[i]]
+                sorted_f = np.sort(frag_id.reshape(n_warps, ws), axis=1)
+                nf = 1 + (sorted_f[:, 1:] != sorted_f[:, :-1]).sum(axis=1)
+                can_split = (nf < 4)[warp_of_thread]
+                upd = mask & can_split
+                frag_id[upd] = frag_id[upd] * 2 + then_mask[upd]
+        elif k == TEV_RESET:
+            if mimd:
+                frag_id[masks[row]] = 0
+        else:
+            raise ValueError(f"unknown trace event kind {k}")
+
+    if c_warp:
+        warp = np.concatenate(c_warp)
+        issue = np.concatenate(c_issue)
+        tins = np.concatenate(c_tins)
+        kind = np.concatenate(c_kind)
+        maccs = np.concatenate(c_maccs)
+        blen = np.concatenate(c_blen)
+    else:
+        warp = issue = tins = maccs = blen = np.zeros(0, dtype=np.int64)
+        kind = np.zeros(0, dtype=np.int8)
+    blocks = (np.concatenate(c_blocks) if c_blocks
+              else np.zeros(0, dtype=np.int64))
+    nbytes = (np.concatenate(c_nbytes) if c_nbytes
+              else np.zeros(0, dtype=np.int64))
+    return _assemble_stream(n_warps, simd, warp, issue, tins, kind, maccs,
+                            blen, blocks, nbytes)
+
+
+def expand_stream(workload: Workload, cfg: MachineConfig,
+                  trace: Optional[ThreadTrace] = None) -> WarpStream:
+    """Expand a workload into the struct-of-arrays op streams for `cfg`.
+
+    Two-phase: builds (or reuses, via `trace`) the expansion-key-independent
+    :class:`~repro.core.warpsim.trace.ThreadTrace`, then aggregates it for
+    ``cfg.expansion_key()``. Callers sweeping many expansion keys of one
+    workload should build the trace once (or go through
+    ``sweep.TRACE_CACHE``) and pass it in.
+    """
+    if trace is None:
+        trace = build_thread_trace(workload)
+    return aggregate_stream(trace, cfg)
 
 
 def expand_workload(

@@ -50,10 +50,26 @@ def expansion_groups(machine_set: Dict[str, MachineConfig]
     """Machine names bucketed by :meth:`MachineConfig.expansion_key`.
 
     Machines in one bucket produce byte-identical ``expand_stream`` output
-    for any workload, so the sweep engine expands once per bucket (in the
+    for any workload, so the sweep engine aggregates one
+    :class:`~repro.core.warpsim.divergence.WarpStream` per bucket (in the
     paper suite, SW+ rides on ws8's stream: 5 buckets for 6 machines).
+    This is the second level of the two-phase expansion hierarchy — one
+    level up, *every* machine of the set shares a single per-workload
+    thread trace (``sweep.TRACE_CACHE``), because no machine field at all
+    participates in :func:`~repro.core.warpsim.divergence.build_thread_trace`.
     """
     groups: Dict[tuple, list] = {}
     for name, cfg in machine_set.items():
         groups.setdefault(cfg.expansion_key(), []).append(name)
     return groups
+
+
+def sharing_plan(machine_set: Dict[str, MachineConfig]) -> str:
+    """One-line summary of the expansion sharing a machine set enjoys.
+
+    E.g. ``"6 machines -> 1 thread trace + 5 aggregations per workload"``
+    — used by ``examples/warpsize_study.py`` to narrate the cold path.
+    """
+    groups = expansion_groups(machine_set)
+    return (f"{len(machine_set)} machines -> 1 thread trace + "
+            f"{len(groups)} aggregations per workload")

@@ -33,6 +33,7 @@ def run_suite(
     seeds: Optional[Iterable[int]] = None,
     group_expansion: bool = True,
     reuse_expansion: bool = True,
+    share_traces: bool = True,
 ) -> Dict[str, Dict[str, SimResult]] | Dict[int, Dict[str, Dict[str, SimResult]]]:
     """results[machine][bench] -> SimResult.
 
@@ -42,6 +43,8 @@ def run_suite(
     `seed`) to run the grid per workload seed; with more than one seed the
     result is keyed ``results[seed][machine][bench]`` — feed it to
     :func:`suite_summary` for mean + min/max variance bands.
+    ``share_traces=False`` disables the two-phase trace sharing (one
+    single-phase expansion per expansion-key group, the PR 2 cold path).
     """
     spec = sweep_mod.SweepSpec(
         benches=tuple(benches), machines=machine_set,
@@ -49,7 +52,8 @@ def run_suite(
         seeds=tuple(seeds) if seeds is not None else (seed,))
     return sweep_mod.run_sweep(spec, cache=cache, parallel=parallel,
                                engine=engine, group_expansion=group_expansion,
-                               reuse_expansion=reuse_expansion)
+                               reuse_expansion=reuse_expansion,
+                               share_traces=share_traces)
 
 
 # ---------------------------------------------------------------------------

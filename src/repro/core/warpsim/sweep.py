@@ -16,20 +16,30 @@ objects:
   ``concurrent.futures.ProcessPoolExecutor``, and returns results in the
   spec's deterministic order regardless of completion order.
 
-Cold-path scheduling is *grouped by shared expansion*: workload expansion
-(:func:`~repro.core.warpsim.divergence.expand_stream`) depends only on the
-four machine fields in :func:`expansion_key` (warp size, SIMD width, MIMD
-flag, transaction bytes), so uncached cells are bucketed by ``(bench,
-n_threads, seed, expansion_key)`` and each bucket is one unit of work: the
-worker expands the :class:`WarpStream` once and simulates every machine
-variant that shares it (the paper suite shares ws8's stream with SW+, so a
-6-machine × 15-bench grid needs 75 expansions instead of 90). Expansions
-additionally flow through a small per-process LRU
-(:data:`EXPANSION_CACHE`), so repeated *serial* sweeps in one process —
-figure generation on small hosts, long-lived sweep servers — skip
-re-expansion entirely without unbounded memory growth. (Parallel sweeps
-tear their worker pool down per call; workers inherit the parent's cache
-on fork-start platforms but their own fills are not carried back.)
+Cold-path scheduling is a *two-level sharing hierarchy*:
+
+* **Shared thread traces** — expansion phase 1
+  (:func:`~repro.core.warpsim.divergence.build_thread_trace`) depends on
+  *no* machine field at all, so uncached cells are first bucketed into
+  families by ``(bench, n_threads, seed)``; each family is one unit of
+  worker work that builds (or fetches from :data:`TRACE_CACHE`, a bounded
+  LRU with optional on-disk persistence next to the result cells) the
+  :class:`~repro.core.warpsim.trace.ThreadTrace` once.
+* **Shared expansions** — phase 2 aggregation
+  (:func:`~repro.core.warpsim.divergence.aggregate_stream`) depends only
+  on the four machine fields in :func:`expansion_key` (warp size, SIMD
+  width, MIMD flag, transaction bytes), so cells inside one family are
+  sub-bucketed by expansion key: the worker aggregates the family's trace
+  once per key and simulates every machine variant sharing the resulting
+  :class:`WarpStream` (the paper suite shares ws8's stream with SW+, so a
+  6-machine × 15-bench grid needs 15 trace builds + 75 aggregations
+  instead of 90 full expansions). Aggregated streams additionally flow
+  through a small per-process LRU (:data:`EXPANSION_CACHE`), so repeated
+  *serial* sweeps in one process — figure generation on small hosts,
+  long-lived sweep servers — skip re-aggregation entirely without
+  unbounded memory growth. (Parallel sweeps tear their worker pool down
+  per call; workers inherit the parent's caches on fork-start platforms
+  but their own fills are not carried back.)
 
 Usage (see ``examples/warpsize_study.py``)::
 
@@ -62,12 +72,19 @@ import json
 import os
 from typing import Dict, List, Mapping, Optional, Tuple
 
+import numpy as np
+
 from repro.core.warpsim import _native
 from repro.core.warpsim import machines as machines_mod
 from repro.core.warpsim.config import MachineConfig
-from repro.core.warpsim.divergence import WarpStream, expand_stream
+from repro.core.warpsim.divergence import (
+    WarpStream, aggregate_stream, build_thread_trace, expand_stream,
+    expand_stream_single,
+)
 from repro.core.warpsim.timing import SimResult, simulate
-from repro.core.warpsim.trace import BENCHMARKS, Workload, get_workload
+from repro.core.warpsim.trace import (
+    BENCHMARKS, ThreadTrace, Workload, get_workload,
+)
 
 # Bump whenever the simulation model changes observable numbers: it is part
 # of every cache key, so stale entries from older models can never be
@@ -270,7 +287,21 @@ class ExpansionCache:
         self.hits = 0
         self.misses = 0
 
-    def get(self, workload: Workload, cfg: MachineConfig) -> WarpStream:
+    def get(self, workload: Workload, cfg: MachineConfig,
+            trace: Optional[ThreadTrace] = None,
+            trace_fn=None,
+            single_phase: bool = False) -> WarpStream:
+        """Cached stream for ``(workload, cfg.expansion_key())``.
+
+        On a miss the stream is built by aggregating `trace` (or the
+        result of calling `trace_fn`, resolved lazily so a cache hit never
+        touches the trace layer — the two-phase fast path: one
+        :class:`~repro.core.warpsim.trace.ThreadTrace` serves every
+        expansion key of the workload), by the retired single-phase walk
+        when ``single_phase=True`` (the honest PR 2 baseline of
+        ``benchmarks/sweep_bench.py``), else by the two-phase
+        ``expand_stream`` building its own trace.
+        """
         key = (workload.name, workload.n_threads, workload.seed,
                cfg.expansion_key())
         ent = self._streams.get(key)
@@ -283,7 +314,14 @@ class ExpansionCache:
             self.hits += 1
             return ent[1]
         self.misses += 1
-        stream = expand_stream(workload, cfg)
+        if trace is None and trace_fn is not None:
+            trace = trace_fn()
+        if trace is not None:
+            stream = aggregate_stream(trace, cfg)
+        elif single_phase:
+            stream = expand_stream_single(workload, cfg)
+        else:
+            stream = expand_stream(workload, cfg)
         self._streams[key] = (workload, stream)
         while len(self._streams) > self.maxsize:
             self._streams.popitem(last=False)
@@ -300,6 +338,138 @@ class ExpansionCache:
 
 EXPANSION_CACHE_SIZE = 64
 EXPANSION_CACHE = ExpansionCache(EXPANSION_CACHE_SIZE)
+
+
+# ---------------------------------------------------------------------------
+# Per-process thread-trace LRU (+ optional on-disk persistence)
+# ---------------------------------------------------------------------------
+
+
+# Bump when the ThreadTrace encoding changes: part of every on-disk trace
+# key, so stale trace files from older encodings can never be loaded.
+TRACE_VERSION = "trace-1"
+
+_TRACE_FIELDS = ("ev_kind", "ev_mask", "ev_arg", "ev_addr", "masks",
+                 "addr_off", "addr_vals")
+
+
+def trace_key(bench: str, n_threads: int, seed: int) -> str:
+    """Content-addressed key of one workload's thread trace on disk."""
+    blob = json.dumps({
+        "model": MODEL_VERSION,
+        "trace": TRACE_VERSION,
+        "bench": bench.upper(),
+        "n_threads": n_threads,
+        "seed": seed,
+    }, sort_keys=True)
+    return hashlib.sha256(blob.encode()).hexdigest()
+
+
+class TraceCache:
+    """Bounded LRU of :class:`~repro.core.warpsim.trace.ThreadTrace`.
+
+    Sibling of :data:`EXPANSION_CACHE` one level up the sharing hierarchy:
+    keyed by ``(bench, n_threads, seed)`` only — *no* machine field
+    participates, every expansion key aggregates from the same trace.
+    Bounded (default :data:`TRACE_CACHE_SIZE` traces, a few hundred KB
+    each) with LRU eviction, like the expansion cache.
+
+    With a `root` directory (``run_sweep`` points it at ``traces/`` inside
+    the :class:`ResultCache` root), in-memory misses fall back to an
+    ``.npz`` snapshot on disk and fresh builds are persisted — traces are
+    deterministic in ``(MODEL_VERSION, TRACE_VERSION, bench, n_threads,
+    seed)`` (stable region hashing), so a snapshot written by any process
+    is exact. Unreadable or stale snapshots are deleted and rebuilt, the
+    same corruption contract as ``ResultCache``.
+    """
+
+    def __init__(self, maxsize: int = 32):
+        self.maxsize = maxsize
+        # key -> (workload, trace); the stored workload pins the program
+        # object so the identity check can never alias a recycled id.
+        self._traces: "collections.OrderedDict[tuple, tuple]" = (
+            collections.OrderedDict())
+        self.hits = 0
+        self.misses = 0
+        self.disk_hits = 0
+        self.builds = 0
+
+    def get(self, workload: Workload,
+            root: Optional[str] = None) -> ThreadTrace:
+        key = (workload.name, workload.n_threads, workload.seed)
+        ent = self._traces.get(key)
+        if ent is not None and ent[0].program is workload.program:
+            self._traces.move_to_end(key)
+            self.hits += 1
+            if root and not os.path.exists(self._path(workload, root)):
+                # The LRU entry may predate persistence (built by an
+                # earlier sweep without a root): snapshot it now so the
+                # persist_traces=True promise holds for later processes.
+                self._store(workload, root, ent[1])
+            return ent[1]
+        self.misses += 1
+        trace = self._load(workload, root) if root else None
+        if trace is None:
+            trace = build_thread_trace(workload)
+            self.builds += 1
+            if root:
+                self._store(workload, root, trace)
+        else:
+            self.disk_hits += 1
+        self._traces[key] = (workload, trace)
+        while len(self._traces) > self.maxsize:
+            self._traces.popitem(last=False)
+        return trace
+
+    def _path(self, workload: Workload, root: str) -> str:
+        return os.path.join(root, trace_key(
+            workload.name, workload.n_threads, workload.seed) + ".npz")
+
+    def _load(self, workload: Workload,
+              root: str) -> Optional[ThreadTrace]:
+        path = self._path(workload, root)
+        try:
+            with np.load(path) as data:
+                if set(data.files) != set(_TRACE_FIELDS):
+                    raise ValueError("schema mismatch")
+                return ThreadTrace(n_threads=workload.n_threads,
+                                   **{f: data[f] for f in _TRACE_FIELDS})
+        except FileNotFoundError:
+            return None
+        except Exception:
+            # Corrupt/stale snapshot: drop it and rebuild.
+            try:
+                os.remove(path)
+            except OSError:
+                pass
+            return None
+
+    def _store(self, workload: Workload, root: str,
+               trace: ThreadTrace) -> None:
+        path = self._path(workload, root)
+        tmp = f"{path}.{os.getpid()}.tmp"
+        try:
+            os.makedirs(root, exist_ok=True)
+            with open(tmp, "wb") as f:
+                np.savez(f, **{f_: getattr(trace, f_)
+                               for f_ in _TRACE_FIELDS})
+            os.replace(tmp, path)   # atomic: concurrent writers race benignly
+        except OSError:
+            try:
+                os.remove(tmp)
+            except OSError:
+                pass
+
+    def __len__(self) -> int:
+        return len(self._traces)
+
+    def clear(self) -> None:
+        self._traces.clear()
+        self.hits = self.misses = self.disk_hits = self.builds = 0
+
+
+TRACE_CACHE_SIZE = 32
+TRACE_CACHE = TraceCache(TRACE_CACHE_SIZE)
 
 # Counters of the most recent run_sweep call in this process (the sweep
 # parent: worker-local expansion reuse shows up in `expansions_saved`,
@@ -375,25 +545,42 @@ class SweepSpec:
 
 
 # One unit of worker work: (bench, n_threads, seed, [configs sharing one
-# expansion], engine, reuse_expansion).
+# expansion key], engine, reuse_expansion, share_trace, trace_dir).
+# Payloads are ordered family-major (all expansion-key groups of one
+# workload adjacent), so parallel chunking colocates a family's groups in
+# one worker and its per-process trace LRU serves them all.
 _GroupPayload = Tuple[str, Optional[int], int, List[MachineConfig], str,
-                      bool]
+                      bool, bool, Optional[str]]
 
 
 def _run_group(args: _GroupPayload) -> List[SimResult]:
-    """Worker: expand once, simulate every machine sharing the expansion.
+    """Worker: aggregate one expansion key's stream, simulate every member.
 
-    Top-level for pickling. The expansion flows through the per-process
-    LRU, so a worker that sees the same (bench, n_threads, seed,
-    expansion_key) bucket again — across chunks, or across run_sweep calls
-    in serial mode — skips re-expansion. `reuse_expansion=False` bypasses
-    the LRU entirely (baseline measurements); riding in the payload means
-    it reaches pool workers under any multiprocessing start method.
+    Top-level for pickling. With `share_trace` the workload's ThreadTrace
+    comes from the per-process trace LRU (or its on-disk snapshot under
+    `trace_dir`), resolved lazily on an expansion-LRU miss — so every
+    expansion-key group of one workload handled by this process shares a
+    single trace build, and a worker that sees the same (bench, n_threads,
+    seed, expansion_key) bucket again — across chunks, or across run_sweep
+    calls in serial mode — skips re-aggregation entirely.
+    `share_trace=False` keeps per-group single-phase expansion (the PR 2
+    cold path, re-measured by ``benchmarks/sweep_bench.py``), and
+    `reuse_expansion=False` bypasses every cache and expands from scratch
+    (the PR 1 baseline); riding in the payload means the flags reach pool
+    workers under any multiprocessing start method.
     """
-    bench, n_threads, seed, cfgs, engine, reuse = args
+    bench, n_threads, seed, cfgs, engine, reuse, share, tdir = args
     wl = get_workload(bench, n_threads=n_threads, seed=seed)
-    stream = (EXPANSION_CACHE.get(wl, cfgs[0]) if reuse
-              else expand_stream(wl, cfgs[0]))
+    if reuse:
+        if share:
+            stream = EXPANSION_CACHE.get(
+                wl, cfgs[0],
+                trace_fn=lambda: TRACE_CACHE.get(wl, root=tdir))
+        else:
+            stream = EXPANSION_CACHE.get(wl, cfgs[0], single_phase=True)
+    else:
+        stream = (expand_stream(wl, cfgs[0]) if share
+                  else expand_stream_single(wl, cfgs[0]))
     ops = stream.to_warp_ops() if engine == "event" else stream
     return [simulate(wl.name, ops, cfg, engine=engine) for cfg in cfgs]
 
@@ -406,20 +593,32 @@ def run_sweep(
     engine: str = "auto",
     group_expansion: bool = True,
     reuse_expansion: bool = True,
+    share_traces: bool = True,
+    persist_traces: bool = False,
 ) -> Dict[int, Dict[str, Dict[str, SimResult]]] | Dict[str, Dict[str, SimResult]]:
     """Run a sweep grid; returns ``results[machine][bench] -> SimResult``.
 
     With multiple seeds the result is keyed ``results[seed][machine][bench]``.
-    Cached cells are served from `cache`; uncached cells are grouped by
-    shared expansion (disable with ``group_expansion=False`` to schedule
-    one cell per work unit, the pre-grouping behavior;
-    ``reuse_expansion=False`` additionally bypasses the per-process
-    expansion LRU in every worker — the from-scratch baseline mode of
-    ``benchmarks/sweep_bench.py``) and run process-parallel
+    Cached cells are served from `cache`; uncached cells are bucketed by
+    shared expansion key within trace families (``(bench, n_threads,
+    seed)``) — one expansion-key group is one unit of worker work
+    (aggregate the family's ThreadTrace once per key, simulate every
+    machine variant), ordered family-major so a family's groups land in
+    one worker's chunk and share a single trace build through the
+    per-process :data:`TRACE_CACHE`; run process-parallel
     (`parallel=None` auto-enables parallelism when the grid is big enough
-    and at least four CPUs are available). Result ordering is
-    deterministic — the spec's cell order — independent of worker
-    completion order.
+    and at least four CPUs are available). ``share_traces=False`` drops
+    back to single-phase expansion per group (the PR 2 cold path,
+    re-measured live by ``benchmarks/sweep_bench.py``);
+    ``group_expansion=False`` schedules one cell per work unit (the PR 1
+    behavior) and ``reuse_expansion=False`` additionally bypasses the
+    per-process trace/expansion LRUs in every worker (the from-scratch
+    baseline mode). With ``persist_traces=True`` (and a `cache`), traces
+    are additionally persisted under ``<cache root>/traces/`` and
+    reloaded by later processes — worth it for long-lived grids that keep
+    adding machine variants; off by default (cold sweeps should not pay
+    the snapshot writes). Result ordering is deterministic — the spec's
+    cell order — independent of worker completion order.
     """
     mset = spec.machine_set()
     cells = spec.cells(machine_set=mset)
@@ -427,6 +626,9 @@ def run_sweep(
         seed: {} for seed in spec.seeds}
     cache_hits0 = cache.hits if cache is not None else 0
     cache_miss0 = cache.misses if cache is not None else 0
+    exp_hits0, exp_miss0 = EXPANSION_CACHE.hits, EXPANSION_CACHE.misses
+    trc_hits0, trc_miss0 = TRACE_CACHE.hits, TRACE_CACHE.misses
+    trc_disk0 = TRACE_CACHE.disk_hits
 
     todo: List[Tuple[Cell, Optional[str]]] = []
     for mname, cfg, bench, n_threads, seed in cells:
@@ -439,21 +641,42 @@ def run_sweep(
             todo.append(((mname, cfg, bench, n_threads, seed), key))
 
     n_groups = 0
+    n_families = 0
+    if not group_expansion:
+        share_traces = False     # per-cell scheduling: no sharing at all
     if todo:
-        # Bucket uncached cells by shared expansion; one bucket is one unit
-        # of worker work (expand once, simulate every member).
-        groups: "collections.OrderedDict[tuple, List[Tuple[Cell, Optional[str]]]]" = (
+        # Two-level bucketing of uncached cells: trace family (bench,
+        # n_threads, seed), then expansion key within the family. One
+        # expansion-key group is one unit of worker work; keeping the
+        # family level makes payload order family-major, so a family's
+        # groups are adjacent and parallel chunking sends them to one
+        # worker (whose trace LRU then builds the family's trace once).
+        families: "collections.OrderedDict[tuple, collections.OrderedDict]" = (
             collections.OrderedDict())
         for idx, (cell, key) in enumerate(todo):
             mname, cfg, bench, n_threads, seed = cell
-            gkey = ((bench, n_threads, seed, cfg.expansion_key())
-                    if group_expansion else idx)
-            groups.setdefault(gkey, []).append((cell, key))
-        n_groups = len(groups)
-        payloads: List[_GroupPayload] = [
-            (members[0][0][2], members[0][0][3], members[0][0][4],
-             [cell[1] for cell, _ in members], engine, reuse_expansion)
-            for members in groups.values()]
+            if not group_expansion:
+                fkey, gkey = (idx,), idx
+            else:
+                fkey = (bench, n_threads, seed)
+                gkey = cfg.expansion_key()
+            fam = families.setdefault(fkey, collections.OrderedDict())
+            fam.setdefault(gkey, []).append((cell, key))
+        n_families = len(families)
+        n_groups = sum(len(fam) for fam in families.values())
+        trace_dir = (os.path.join(cache.root, "traces")
+                     if cache is not None and share_traces and
+                     reuse_expansion and persist_traces else None)
+        payloads: List[_GroupPayload] = []
+        grp_members: List[List[Tuple[Cell, Optional[str]]]] = []
+        for fam in families.values():
+            for members in fam.values():
+                first = members[0][0]
+                payloads.append((
+                    first[2], first[3], first[4],
+                    [cell[1] for cell, _ in members],
+                    engine, reuse_expansion, share_traces, trace_dir))
+                grp_members.append(members)
 
         ncpu = os.cpu_count() or 1
         if engine in ("auto", "native"):
@@ -487,11 +710,11 @@ def run_sweep(
             chunk = max(1, len(payloads) // (4 * workers))
             with concurrent.futures.ProcessPoolExecutor(workers) as ex:
                 for members, group_res in zip(
-                        groups.values(),
+                        grp_members,
                         ex.map(_run_group, payloads, chunksize=chunk)):
                     _scatter(members, group_res)
         else:
-            for members, payload in zip(groups.values(), payloads):
+            for members, payload in zip(grp_members, payloads):
                 _scatter(members, _run_group(payload))
 
     LAST_SWEEP_STATS.clear()
@@ -502,6 +725,15 @@ def run_sweep(
         simulated=len(todo),
         expansion_groups=n_groups,
         expansions_saved=len(todo) - n_groups,
+        trace_families=n_families,
+        traces_shared=(n_groups - n_families if share_traces else 0),
+        # LRU counter deltas of the sweep parent (serial sweeps; pool
+        # workers keep their own caches, like the expansion LRU).
+        expansion_cache_hits=EXPANSION_CACHE.hits - exp_hits0,
+        expansion_cache_misses=EXPANSION_CACHE.misses - exp_miss0,
+        trace_cache_hits=TRACE_CACHE.hits - trc_hits0,
+        trace_cache_misses=TRACE_CACHE.misses - trc_miss0,
+        trace_disk_hits=TRACE_CACHE.disk_hits - trc_disk0,
     )
 
     # Re-impose the spec's machine/bench ordering (cache hits and parallel

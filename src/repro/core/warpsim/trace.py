@@ -87,6 +87,92 @@ class Loop:
 Stmt = Union[Compute, Mem, Branch, Loop]
 
 
+# --------------------------------------------------------------------------
+# Thread-level trace (expansion phase 1)
+# --------------------------------------------------------------------------
+
+# ThreadTrace event kinds. COMPUTE/LOAD/STORE deliberately share the values
+# of divergence.KIND_* so aggregation can emit op kinds without remapping;
+# SPLIT/RESET are MIMD fragment-bookkeeping events that SIMT aggregation
+# skips.
+TEV_COMPUTE = 0
+TEV_LOAD = 1
+TEV_STORE = 2
+TEV_SPLIT = 3
+TEV_RESET = 4
+
+
+@dataclasses.dataclass
+class ThreadTrace:
+    """Expansion-key-independent thread-level trace of one workload.
+
+    Phase 1 of the two-phase workload expansion
+    (:func:`~repro.core.warpsim.divergence.build_thread_trace`): everything
+    ``expand_stream`` draws from the workload seed — branch outcomes (as
+    active-thread masks), memory addresses, the walk order of statement
+    instances — recorded once per ``(bench, n_threads, seed)`` as a linear
+    *event tape* over a table of unique thread masks. Per-warp aggregation
+    (phase 2) replays the tape for any ``MachineConfig.expansion_key()``
+    without touching the rng, so every expansion key of one workload shares
+    this object (and it can be persisted: all content is deterministic in
+    the seed and process-stable region hashing).
+
+    Events reference rows of ``masks``; memory events additionally
+    reference a row of the CSR address pool (``addr_off``/``addr_vals``),
+    which stores the byte addresses of the *active* threads of the event's
+    mask in ascending thread order.
+    """
+
+    n_threads: int
+    ev_kind: np.ndarray    # int8[n_ev]   TEV_*
+    ev_mask: np.ndarray    # int32[n_ev]  row of `masks`
+    ev_arg: np.ndarray     # int64[n_ev]  compute count / then-mask row (SPLIT)
+    ev_addr: np.ndarray    # int64[n_ev]  address row of mem events, else -1
+    masks: np.ndarray      # bool[n_masks, n_threads]
+    addr_off: np.ndarray   # int64[n_addr_rows+1] CSR offsets
+    addr_vals: np.ndarray  # int64[total_active] active-thread byte addresses
+
+    @property
+    def n_events(self) -> int:
+        return len(self.ev_kind)
+
+    @property
+    def n_masks(self) -> int:
+        return len(self.masks)
+
+    def active_counts(self) -> np.ndarray:
+        """Active threads per mask row (cached; masks are read-only)."""
+        cached = getattr(self, "_active_counts", None)
+        if cached is None:
+            cached = self.masks.sum(axis=1, dtype=np.int64)
+            self._active_counts = cached
+        return cached
+
+    def tid_csr(self):
+        """Active thread ids per mask as CSR ``(tid_off, tid_cat)``.
+
+        ``tid_cat[tid_off[m]:tid_off[m+1]]`` are the ascending thread ids
+        of mask row ``m`` — the expansion-key-independent half of the
+        per-mask statistics every aggregation pass needs. Computed once and
+        cached on the trace (shared by the Python and native aggregators
+        and by every expansion key).
+        """
+        cached = getattr(self, "_tid_csr", None)
+        if cached is None:
+            rows, cols = np.nonzero(self.masks)
+            off = np.zeros(self.n_masks + 1, dtype=np.int64)
+            np.cumsum(np.bincount(rows, minlength=self.n_masks), out=off[1:])
+            cached = (off, cols.astype(np.int64, copy=False))
+            self._tid_csr = cached
+        return cached
+
+    def nbytes(self) -> int:
+        """Approximate in-memory footprint (for cache sizing decisions)."""
+        return sum(a.nbytes for a in (self.ev_kind, self.ev_mask, self.ev_arg,
+                                      self.ev_addr, self.masks, self.addr_off,
+                                      self.addr_vals))
+
+
 @dataclasses.dataclass(frozen=True)
 class Workload:
     name: str

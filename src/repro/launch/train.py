@@ -138,24 +138,40 @@ def main(argv=None) -> dict:
     step_fn = jax.jit(step_fn, donate_argnums=(0,))
 
     losses = []
-    with mesh:
-        for step in range(start_step, args.steps):
-            injector.check(step)
-            monitor.start_step()
-            batch = get_batch(step)
-            if args.accum > 1:
-                batch = jax.tree.map(
-                    lambda x: x.reshape(args.accum, -1, *x.shape[1:]), batch)
-            state, metrics = step_fn(state, batch)
-            loss = float(metrics["loss"])
-            monitor.end_step(step)
-            losses.append(loss)
-            if step % args.log_every == 0 or step == args.steps - 1:
-                print(f"step {step:5d} loss {loss:.4f} "
-                      f"lr {float(metrics['lr']):.2e} "
-                      f"gnorm {float(metrics['grad_norm']):.3f}", flush=True)
-            if saver and (step + 1) % args.ckpt_every == 0:
-                saver.save(step + 1, state)
+    try:
+        with mesh:
+            for step in range(start_step, args.steps):
+                injector.check(step)
+                monitor.start_step()
+                batch = get_batch(step)
+                if args.accum > 1:
+                    batch = jax.tree.map(
+                        lambda x: x.reshape(args.accum, -1, *x.shape[1:]),
+                        batch)
+                state, metrics = step_fn(state, batch)
+                loss = float(metrics["loss"])
+                monitor.end_step(step)
+                losses.append(loss)
+                if step % args.log_every == 0 or step == args.steps - 1:
+                    print(f"step {step:5d} loss {loss:.4f} "
+                          f"lr {float(metrics['lr']):.2e} "
+                          f"gnorm {float(metrics['grad_norm']):.3f}",
+                          flush=True)
+                if saver and (step + 1) % args.ckpt_every == 0:
+                    saver.save(step + 1, state)
+    except BaseException:
+        # A crash (including an injected SimulatedFailure) must not abandon
+        # an in-flight async checkpoint: the write the failing run already
+        # started is the one a restart resumes from, and dropping it made
+        # kill/resume nondeterministic (resume from N vs N - ckpt_every
+        # depending on thread timing). Drain it, then re-raise the real
+        # failure — a secondary checkpoint error must not mask it.
+        if saver:
+            try:
+                saver.wait()
+            except Exception:
+                pass
+        raise
     if saver:
         saver.save(args.steps, state)
         saver.wait()

@@ -24,7 +24,10 @@ import pytest
 
 from repro.core.warpsim import _native, machines, runner
 from repro.core.warpsim.config import MachineConfig
-from repro.core.warpsim.divergence import WarpStream, expand_stream
+from repro.core.warpsim.divergence import (
+    WarpStream, aggregate_stream, build_thread_trace, expand_stream,
+    expand_stream_single,
+)
 from repro.core.warpsim.sweep import expansion_key
 from repro.core.warpsim.timing import simulate
 from repro.core.warpsim.trace import (
@@ -77,13 +80,52 @@ def test_fast_engine_accepts_legacy_warp_ops(engine):
 
 # ------------------------------------------------------------ expansion key
 
+_STREAM_FIELDS = ("warp", "issue", "tins", "lanes", "kind", "maccs",
+                  "blk_off", "blk_len", "blocks", "nbytes", "op_start")
+
+
 def _streams_equal(a: WarpStream, b: WarpStream) -> bool:
     if a.n_warps != b.n_warps:
         return False
     return all(np.array_equal(getattr(a, f), getattr(b, f))
-               for f in ("warp", "issue", "tins", "lanes", "kind", "maccs",
-                         "blk_off", "blk_len", "blocks", "nbytes",
-                         "op_start"))
+               for f in _STREAM_FIELDS)
+
+
+def _assert_streams_equal(got: WarpStream, ref: WarpStream, tag) -> None:
+    assert got.n_warps == ref.n_warps, tag
+    for f in _STREAM_FIELDS:
+        assert np.array_equal(getattr(got, f), getattr(ref, f)), (tag, f)
+
+
+# ----------------------------------------------- two-phase expansion paths
+
+# Aggregation implementations that must replay the single-phase walk
+# bit-for-bit; the native core only participates where it compiled.
+AGG_IMPLS = ["python"] + (["native"] if _native.available() else [])
+
+
+@pytest.mark.parametrize("impl", AGG_IMPLS)
+@pytest.mark.parametrize("mname", list(machines.paper_suite()))
+@pytest.mark.parametrize("bench", GOLDEN_BENCHES)
+def test_two_phase_expansion_matches_single_phase(bench, mname, impl):
+    """trace build + per-key aggregation == the retired single-phase walk,
+    every WarpStream column bit-identical, for every paper machine."""
+    cfg = machines.paper_suite()[mname]
+    wl = get_workload(bench, n_threads=N_THREADS)
+    trace = build_thread_trace(wl)
+    ref = expand_stream_single(wl, cfg)
+    got = aggregate_stream(trace, cfg, impl=impl)
+    _assert_streams_equal(got, ref, (bench, mname, impl))
+
+
+def test_expand_stream_reuses_supplied_trace():
+    """expand_stream(trace=...) must equal expand_stream building its own,
+    and one trace must serve every expansion key of the workload."""
+    wl = get_workload("BFS", n_threads=N_THREADS)
+    trace = build_thread_trace(wl)
+    for cfg in machines.paper_suite().values():
+        _assert_streams_equal(expand_stream(wl, cfg, trace=trace),
+                              expand_stream(wl, cfg), cfg.name)
 
 
 def test_expansion_key_collides_iff_streams_identical():
@@ -223,13 +265,20 @@ if hyp is not None:
                   suppress_health_check=[hyp.HealthCheck.too_slow])
     def test_engines_bit_identical_on_random_workloads(
             program, cfg, n_warp_groups, seed):
-        """fast == fast_nested == native == event on arbitrary workloads ×
+        """Both halves of the model locked on arbitrary workloads ×
         machine configs (MIMD/LW+, ideal and baseline coalescing, odd
-        memory geometries included), every SimResult field compared
+        memory geometries included): expansion — single-phase walk ==
+        two-phase Python aggregation == native aggregation core, every
+        WarpStream column bit-identical — and timing — fast ==
+        fast_nested == native == event, every SimResult field compared
         exactly."""
         wl = Workload("HYP", program,
                       n_threads=cfg.warp_size * n_warp_groups, seed=seed)
-        stream = expand_stream(wl, cfg)
+        stream = expand_stream_single(wl, cfg)
+        trace = build_thread_trace(wl)
+        for impl in AGG_IMPLS:
+            _assert_streams_equal(aggregate_stream(trace, cfg, impl=impl),
+                                  stream, impl)
         ref = dataclasses.asdict(
             simulate(wl.name, stream, cfg, engine="event"))
         for engine in FAST_ENGINES:

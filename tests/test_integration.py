@@ -10,13 +10,19 @@ import tempfile
 import numpy as np
 import pytest
 
-pytestmark = pytest.mark.slow  # long integration sims: opt in with --runslow
+# Long integration sims carry @pytest.mark.slow individually (opt in with
+# --runslow). test_kill_resume_bitwise_identical runs in tier-1: its old
+# straggler was a checkpoint race (the async step-N snapshot could be lost
+# when the injected failure propagated first — see launch/train.py), fixed
+# by draining the checkpointer on the failure path; at ~14 s it is cheap
+# enough to keep the restart drill under permanent watch.
 
 from repro.launch import serve as serve_lib
 from repro.launch import train as train_lib
 from repro.runtime.fault import SimulatedFailure
 
 
+@pytest.mark.slow
 def test_train_loss_decreases():
     out = train_lib.main(["--arch", "tinyllama-1.1b", "--smoke",
                           "--steps", "40", "--batch", "4",
@@ -48,6 +54,7 @@ def test_kill_resume_bitwise_identical():
         shutil.rmtree(d2)
 
 
+@pytest.mark.slow
 def test_grad_accumulation_equivalence():
     """accum=2 with half microbatch == accum=1 same data (approximately:
     identical batches, mean of grads)."""
@@ -60,6 +67,7 @@ def test_grad_accumulation_equivalence():
     assert abs(a1["last_loss"] - a2["last_loss"]) < 0.15
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["mamba2-780m", "deepseek-moe-16b",
                                   "hymba-1.5b", "musicgen-medium"])
 def test_train_driver_all_families(arch):
@@ -69,6 +77,7 @@ def test_train_driver_all_families(arch):
     assert np.isfinite(out["last_loss"])
 
 
+@pytest.mark.slow
 def test_serve_batched_requests():
     stats = serve_lib.main(["--arch", "tinyllama-1.1b", "--smoke",
                             "--requests", "5", "--slots", "2",

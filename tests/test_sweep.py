@@ -260,6 +260,26 @@ def test_expansion_cache_lru_bound():
     assert len(lru) == 0 and lru.hits == lru.misses == 0
 
 
+def test_expansion_cache_lru_recency_order():
+    """A hit refreshes recency: the least-recently-USED entry is evicted,
+    not the least-recently-inserted one."""
+    from repro.core.warpsim.sweep import ExpansionCache
+    from repro.core.warpsim.trace import get_workload
+
+    lru = ExpansionCache(maxsize=2)
+    wl = get_workload("DYN", n_threads=256)
+    ws8, ws16, ws32 = (machines.baseline(w) for w in (8, 16, 32))
+    lru.get(wl, ws8)
+    lru.get(wl, ws16)
+    lru.get(wl, ws8)                            # refresh ws8
+    lru.get(wl, ws32)                           # evicts ws16, not ws8
+    hits0 = lru.hits
+    lru.get(wl, ws8)
+    assert lru.hits == hits0 + 1                # ws8 still cached
+    lru.get(wl, ws16)
+    assert lru.misses == 4                      # ws16 was the evictee
+
+
 def test_expansion_cache_shared_across_variants():
     """ws8 and SW+ collide on the expansion key -> one stored stream."""
     from repro.core.warpsim.sweep import ExpansionCache
@@ -270,3 +290,183 @@ def test_expansion_cache_shared_across_variants():
     a = lru.get(wl, machines.baseline(8))
     b = lru.get(wl, machines.sw_plus())
     assert a is b and lru.hits == 1 and lru.misses == 1
+
+
+def test_expansion_cache_aggregates_supplied_trace():
+    """A trace passed (directly or lazily) must feed the miss path; the
+    lazy supplier must not run on a hit."""
+    from repro.core.warpsim.divergence import build_thread_trace
+    from repro.core.warpsim.sweep import ExpansionCache
+    from repro.core.warpsim.trace import get_workload
+
+    lru = ExpansionCache()
+    wl = get_workload("BFS", n_threads=256)
+    trace = build_thread_trace(wl)
+    calls = []
+
+    def supplier():
+        calls.append(1)
+        return trace
+
+    a = lru.get(wl, machines.baseline(8), trace_fn=supplier)
+    assert calls == [1] and lru.misses == 1
+    b = lru.get(wl, machines.baseline(8), trace_fn=supplier)
+    assert calls == [1] and lru.hits == 1       # hit: supplier untouched
+    assert a is b
+
+
+# -------------------------------------------------------- trace cache (LRU)
+
+def test_trace_cache_lru_and_counters():
+    from repro.core.warpsim.sweep import TraceCache
+    from repro.core.warpsim.trace import get_workload
+
+    lru = TraceCache(maxsize=2)
+    wls = [get_workload(b, n_threads=256) for b in ("BFS", "BKP", "DYN")]
+    for wl in wls:
+        lru.get(wl)
+    assert len(lru) == 2 and lru.misses == 3 and lru.builds == 3
+    assert lru.hits == 0
+    t = lru.get(wls[1])                         # BKP still cached
+    assert lru.hits == 1 and t is lru.get(wls[1])
+    lru.get(wls[0])                             # BFS evicted -> rebuild
+    assert lru.misses == 4 and lru.builds == 4 and len(lru) == 2
+    lru.clear()
+    assert len(lru) == 0
+    assert lru.hits == lru.misses == lru.builds == lru.disk_hits == 0
+
+
+def test_trace_cache_keyed_by_threads_and_seed():
+    from repro.core.warpsim.sweep import TraceCache
+    from repro.core.warpsim.trace import get_workload
+
+    lru = TraceCache()
+    a = lru.get(get_workload("BFS", n_threads=256))
+    b = lru.get(get_workload("BFS", n_threads=512))
+    c = lru.get(get_workload("BFS", n_threads=256, seed=1))
+    assert lru.misses == 3 and len({id(a), id(b), id(c)}) == 3
+    assert a is lru.get(get_workload("BFS", n_threads=256))
+
+
+def test_trace_cache_disk_roundtrip(tmp_path):
+    import numpy as np
+
+    from repro.core.warpsim.divergence import aggregate_stream
+    from repro.core.warpsim.sweep import TraceCache
+    from repro.core.warpsim.trace import get_workload
+
+    root = str(tmp_path / "traces")
+    wl = get_workload("BFS", n_threads=256)
+    writer = TraceCache()
+    built = writer.get(wl, root=root)
+    assert writer.builds == 1
+    files = os.listdir(root)
+    assert len(files) == 1 and files[0].endswith(".npz")
+
+    # A fresh cache (fresh process stand-in) loads the snapshot instead of
+    # rebuilding, and the loaded trace aggregates to the identical stream.
+    reader = TraceCache()
+    loaded = reader.get(wl, root=root)
+    assert reader.disk_hits == 1 and reader.builds == 0
+    cfg = machines.baseline(8)
+    ref = aggregate_stream(built, cfg)
+    got = aggregate_stream(loaded, cfg)
+    assert ref.n_warps == got.n_warps
+    for f in ("warp", "issue", "tins", "lanes", "kind", "maccs",
+              "blk_off", "blk_len", "blocks", "nbytes", "op_start"):
+        assert np.array_equal(getattr(ref, f), getattr(got, f)), f
+
+
+def test_trace_cache_corrupt_snapshot_rebuilds(tmp_path):
+    from repro.core.warpsim.sweep import TraceCache
+    from repro.core.warpsim.trace import get_workload
+
+    root = str(tmp_path / "traces")
+    wl = get_workload("DYN", n_threads=256)
+    TraceCache().get(wl, root=root)
+    (path,) = [os.path.join(root, f) for f in os.listdir(root)]
+    with open(path, "w") as f:
+        f.write("not an npz")
+
+    recovered = TraceCache()
+    recovered.get(wl, root=root)
+    assert recovered.builds == 1 and recovered.disk_hits == 0
+    assert not os.path.exists(path) or os.path.getsize(path) > 20
+    # ... and the rewritten snapshot serves the next fresh cache.
+    again = TraceCache()
+    again.get(wl, root=root)
+    assert again.disk_hits == 1 and again.builds == 0
+
+
+# ------------------------------------------------------ trace-family sweeps
+
+def test_share_traces_off_matches_default():
+    """Trace sharing must be invisible in the numbers."""
+    spec = _spec()
+    shared = run_sweep(spec, parallel=False)
+    unshared = run_sweep(spec, parallel=False, share_traces=False)
+    for m in unshared:
+        for b in unshared[m]:
+            assert (dataclasses.asdict(shared[m][b])
+                    == dataclasses.asdict(unshared[m][b]))
+
+
+def test_sweep_stats_trace_families():
+    # Two benches x two expansion keys (ws8/SW+ share, ws16 alone):
+    # 2 families, 4 expansion groups, 2 of them riding a shared trace.
+    spec = _spec(benches=("BFS", "DYN"),
+                 machines={"ws8": machines.baseline(8),
+                           "SW+": machines.sw_plus(),
+                           "ws16": machines.baseline(16)})
+    sweep_mod.TRACE_CACHE.clear()
+    sweep_mod.EXPANSION_CACHE.clear()
+    run_sweep(spec, parallel=False)
+    stats = dict(sweep_mod.LAST_SWEEP_STATS)
+    assert stats["trace_families"] == 2
+    assert stats["expansion_groups"] == 4
+    assert stats["traces_shared"] == 2
+    assert stats["trace_cache_misses"] == 2     # one build per family
+    assert stats["trace_cache_hits"] == 2       # second key rides the first
+    # One expansion-LRU probe per group (SW+ shares ws8's group outright).
+    assert stats["expansion_cache_misses"] == 4
+    assert stats["expansion_cache_hits"] == 0
+
+    # Serial re-sweep in the same process: streams come from the expansion
+    # LRU, the trace layer is never touched (lazy trace_fn).
+    run_sweep(spec, parallel=False)
+    stats = dict(sweep_mod.LAST_SWEEP_STATS)
+    assert stats["expansion_cache_hits"] == 4
+    assert stats["trace_cache_hits"] == stats["trace_cache_misses"] == 0
+
+    run_sweep(spec, parallel=False, share_traces=False)
+    stats = dict(sweep_mod.LAST_SWEEP_STATS)
+    assert stats["traces_shared"] == 0
+
+
+def test_sweep_persist_traces_writes_beside_result_cache(tmp_path):
+    spec = _spec(benches=("DYN",))
+    sweep_mod.TRACE_CACHE.clear()
+    sweep_mod.EXPANSION_CACHE.clear()   # a warm stream would skip the trace
+    run_sweep(spec, cache=ResultCache(str(tmp_path)), parallel=False,
+              persist_traces=True)
+    tdir = tmp_path / "traces"
+    assert tdir.is_dir() and len(list(tdir.glob("*.npz"))) == 1
+
+    # A fresh process stand-in (cleared LRU) cold-starts from the snapshot
+    # ... and the snapshot dir never confuses the result-cache listing.
+    sweep_mod.TRACE_CACHE.clear()
+    cache = ResultCache(str(tmp_path))
+    ref = run_sweep(spec, cache=cache, parallel=False, persist_traces=True)
+    assert cache.hits == len(spec.cells())
+    sweep_mod.TRACE_CACHE.clear()
+    run_sweep(_spec(benches=("DYN",), n_threads=128),
+              cache=ResultCache(str(tmp_path)), parallel=False,
+              persist_traces=True)
+    assert sweep_mod.LAST_SWEEP_STATS["trace_disk_hits"] == 0  # new key
+    sweep_mod.TRACE_CACHE.clear()
+    run_sweep(_spec(benches=("DYN",), n_threads=128, seeds=(0,)),
+              parallel=False)
+    # default sweeps (no cache) never touch the snapshot dir
+    assert sorted(f.name for f in tmp_path.iterdir() if f.is_dir()) == [
+        "traces"]
+    del ref
