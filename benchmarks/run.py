@@ -11,6 +11,11 @@ ResultCache hit/miss counters and the shared-expansion grouping counters
 (``sweep/cold_expansion_groups`` / ``sweep/cold_expansions_saved``) of the
 cold and warm runs, and which asserts the cold-sweep speedup floors
 (see ``benchmarks/sweep_bench.py``).
+
+The ``fig*`` harnesses fetch their grids from a running sweep service when
+``WARPSIM_SERVICE_URL`` is set (see ``repro.core.warpsim.service`` and
+``benchmarks/service_smoke.py``); otherwise they sweep in-process against
+the shared cache under benchmarks/results/.
 """
 
 from __future__ import annotations

@@ -1,0 +1,136 @@
+"""Sweep-service smoke: daemon up, figures cold + warm, zero re-simulation.
+
+The CI `service-smoke` job's driver (also runnable locally):
+
+1. start `python -m repro.core.warpsim.service` on an ephemeral port with
+   a throwaway cache dir;
+2. run figure generation against it **cold** (``WARPSIM_SERVICE_URL`` set
+   in the child env) — everything simulates, on the daemon;
+3. run the same figures **warm** and assert via ``GET /stats`` that the
+   pass simulated **zero** cells and took **zero** result-cache misses —
+   the ROADMAP "figure generation never re-simulates" contract, enforced;
+4. fire two concurrent ``GET /cell`` requests for one *uncomputed* cell
+   and assert exactly one simulation happened (in-flight dedup, observed
+   end-to-end over HTTP).
+
+Exit code 0 iff every assertion holds.
+
+  PYTHONPATH=src python -m benchmarks.service_smoke [--figs fig2,fig4,fig7]
+"""
+
+from __future__ import annotations
+
+import argparse
+import concurrent.futures
+import json
+import os
+import re
+import subprocess
+import sys
+import tempfile
+import time
+import urllib.request
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_FIGS = "fig2,fig4,fig7"
+
+
+def _get(url: str, timeout: float = 30.0) -> dict:
+    with urllib.request.urlopen(url, timeout=timeout) as resp:
+        return json.loads(resp.read().decode())
+
+
+def _child_env(url: str) -> dict:
+    env = dict(os.environ)
+    env["WARPSIM_SERVICE_URL"] = url
+    env["PYTHONPATH"] = (os.path.join(REPO, "src") + os.pathsep +
+                         env.get("PYTHONPATH", ""))
+    return env
+
+
+def _run_figs(url: str, figs: list) -> None:
+    code = "from benchmarks import figs\n" + "".join(
+        f"figs.{name}()\n" for name in figs)
+    subprocess.run([sys.executable, "-c", code], env=_child_env(url),
+                   cwd=REPO, check=True, timeout=600)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--figs", default=DEFAULT_FIGS,
+                    help="comma-separated figs.<name>_* prefixes to drive")
+    args = ap.parse_args(argv)
+    import benchmarks.figs as figs_mod
+    figs = [n for n in dir(figs_mod)
+            if any(n.startswith(p + "_") or n == p
+                   for p in args.figs.split(","))]
+    assert figs, f"no figure functions match {args.figs!r}"
+
+    cache_dir = tempfile.mkdtemp(prefix="warpsim-service-smoke-")
+    daemon = subprocess.Popen(
+        [sys.executable, "-m", "repro.core.warpsim.service",
+         "--port", "0", "--cache-dir", cache_dir],
+        env=_child_env(""), cwd=REPO,
+        stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True)
+    try:
+        url = None
+        for _ in range(50):             # skip any warnings before the banner
+            line = daemon.stdout.readline()
+            if not line:
+                break
+            m = re.search(r"http://[0-9.]+:\d+", line)
+            if m:
+                url = m.group(0)
+                break
+        assert url, "daemon never printed its listening URL"
+        health = _get(url + "/healthz")
+        assert health["ok"], health
+        print(f"service-smoke: daemon at {url}, engine={health['engine']}")
+
+        t0 = time.time()
+        _run_figs(url, figs)
+        cold = _get(url + "/stats")
+        cold_sim = cold["counters"]["simulated"]
+        assert cold_sim > 0, "cold figure pass must simulate"
+        print(f"service-smoke: cold pass {time.time() - t0:.1f}s, "
+              f"{cold_sim} cells simulated, "
+              f"{cold['result_cache']['entries']} cached")
+
+        t0 = time.time()
+        _run_figs(url, figs)
+        warm = _get(url + "/stats")
+        warm_sim = warm["counters"]["simulated"] - cold_sim
+        warm_misses = (warm["result_cache"]["misses"]
+                       - cold["result_cache"]["misses"])
+        assert warm_sim == 0, f"warm pass re-simulated {warm_sim} cells"
+        assert warm_misses == 0, f"warm pass took {warm_misses} cache misses"
+        print(f"service-smoke: warm pass {time.time() - t0:.1f}s, "
+              f"0 cells simulated, 0 cache misses")
+
+        # In-flight dedup over HTTP: two concurrent requests for one cell
+        # no figure ever touches (distinct seed) -> exactly one simulation.
+        before = _get(url + "/stats")["counters"]
+        cell_url = (url + "/cell?bench=BFS&machine=ws32&seed=12345"
+                    "&n_threads=256")
+        with concurrent.futures.ThreadPoolExecutor(2) as pool:
+            a, b = pool.map(_get, [cell_url, cell_url])
+        assert a["result"] == b["result"]
+        after = _get(url + "/stats")["counters"]
+        new_sim = after["simulated"] - before["simulated"]
+        assert new_sim == 1, f"dedup: {new_sim} simulations for one cell"
+        served = {a["source"], b["source"]}
+        assert served <= {"simulated", "dedup", "cache"}, served
+        print(f"service-smoke: concurrent cold cell -> 1 simulation "
+              f"(served as {sorted(served)}, "
+              f"dedup_waits={after['dedup_waits'] - before['dedup_waits']})")
+        print("service-smoke OK")
+    finally:
+        daemon.terminate()
+        try:
+            daemon.wait(10)
+        except subprocess.TimeoutExpired:
+            daemon.kill()
+
+
+if __name__ == "__main__":
+    main()

@@ -5,23 +5,40 @@ cached, process-parallel sweep engine (``repro.core.warpsim.sweep``).
 Run:  PYTHONPATH=src python examples/warpsize_study.py
 
 Re-running is near-instant: every grid cell is served from the
-content-addressed cache under benchmarks/results/sweep_cache.
+content-addressed cache under benchmarks/results/sweep_cache. With
+``WARPSIM_SERVICE_URL`` pointing at a running sweep service
+(``python -m repro.core.warpsim.service``), the grids are fetched from the
+daemon instead — its cache is shared by every client, so nothing is ever
+simulated twice across the whole fleet.
 """
 import sys
 import time
 
 sys.path.insert(0, "src")
 
-from repro.core.warpsim import machines, runner
+from repro.core.warpsim import machines, runner, service
 from repro.core.warpsim.sweep import (
-    LAST_SWEEP_STATS, ResultCache, SweepSpec, run_sweep,
+    ResultCache, SweepSpec, run_sweep_with_stats,
 )
 
 CACHE_DIR = "benchmarks/results/sweep_cache"
 
 
 def main():
-    cache = ResultCache(CACHE_DIR)
+    client = service.from_env()
+    cache = None if client is not None else ResultCache(CACHE_DIR)
+
+    def sweep(spec):
+        """Grid + per-run stats snapshot, remote or local."""
+        if client is not None:
+            res = client.sweep(spec)
+            return res, client.last_stats
+        return run_sweep_with_stats(spec, cache=cache, persist_traces=True)
+
+    if client is not None:
+        h = client.healthz()
+        print(f"using sweep service at {client.base_url} "
+              f"(engine={h['engine']}, model={h['model']})")
 
     print("running 15 benchmarks x 6 machines (paper Figs. 2-7)...")
     print(f"  {machines.sharing_plan(machines.paper_suite())}")
@@ -31,19 +48,18 @@ def main():
                   f"(warp={ekey[0]}, simd={ekey[1]})")
     spec = SweepSpec(machines=machines.paper_suite())
     t0 = time.time()
-    res = run_sweep(spec, cache=cache, persist_traces=True)
+    res, stats = sweep(spec)
     print(f"  {len(spec.cells())} cells in {time.time() - t0:.2f}s "
-          f"({cache.hits} cached, {cache.misses} simulated, "
-          f"{LAST_SWEEP_STATS['expansion_groups']} aggregations from "
-          f"{LAST_SWEEP_STATS['trace_families']} thread traces for "
-          f"{LAST_SWEEP_STATS['simulated']} uncached cells)")
-    print(f"  trace cache: {LAST_SWEEP_STATS['trace_cache_hits']} hits / "
-          f"{LAST_SWEEP_STATS['trace_cache_misses']} misses "
-          f"({LAST_SWEEP_STATS['trace_disk_hits']} from disk, "
-          f"{LAST_SWEEP_STATS['traces_shared']} aggregations rode a "
+          f"({stats['cache_hits']} cached, {stats['simulated']} simulated, "
+          f"{stats['expansion_groups']} aggregations from "
+          f"{stats['trace_families']} thread traces)")
+    print(f"  trace cache: {stats['trace_cache_hits']} hits / "
+          f"{stats['trace_cache_misses']} misses "
+          f"({stats['trace_disk_hits']} from disk, "
+          f"{stats['traces_shared']} aggregations rode a "
           f"shared trace); expansion LRU: "
-          f"{LAST_SWEEP_STATS['expansion_cache_hits']} hits / "
-          f"{LAST_SWEEP_STATS['expansion_cache_misses']} misses")
+          f"{stats['expansion_cache_hits']} hits / "
+          f"{stats['expansion_cache_misses']} misses")
 
     benches = list(next(iter(res.values())))
     print(f"\n{'':6s}" + " ".join(f"{b:>6s}" for b in benches))
@@ -66,11 +82,11 @@ def main():
     print("\ndense warp-size scaling sweep, 4..128 threads/warp:")
     dense = SweepSpec.warp_size_range(4, 128)
     t0 = time.time()
-    dres = run_sweep(dense, cache=cache, persist_traces=True)
+    dres, dstats = sweep(dense)
     print(f"  {len(dense.cells())} cells in {time.time() - t0:.2f}s "
-          f"(trace cache: {LAST_SWEEP_STATS['trace_cache_hits']}h/"
-          f"{LAST_SWEEP_STATS['trace_cache_misses']}m, "
-          f"{LAST_SWEEP_STATS['trace_disk_hits']} from disk)")
+          f"(trace cache: {dstats['trace_cache_hits']}h/"
+          f"{dstats['trace_cache_misses']}m, "
+          f"{dstats['trace_disk_hits']} from disk)")
     for m, per_bench in dres.items():
         print(f"  {m:6s} geomean IPC {runner.mean_ipc(per_bench):6.3f}")
 

@@ -5,7 +5,10 @@ Public API:
     MachineConfig, machines.{baseline,sw_plus,lw_plus,paper_suite}
     trace.get_workload / trace.BENCHMARKS
     runner.run_one / run_suite / suite_summary
-    sweep.SweepSpec / sweep.ResultCache / sweep.run_sweep
+    sweep.SweepSpec / sweep.ResultCache / sweep.run_sweep /
+    sweep.run_sweep_with_stats
+    service.SweepService / service.SweepClient / service.from_env
+    work_queue.WorkQueue / work_queue.run_worker
 """
 
 from repro.core.warpsim.config import MachineConfig
@@ -14,13 +17,19 @@ from repro.core.warpsim.divergence import (
     WarpStream, expand_stream, expand_workload, simd_efficiency,
 )
 from repro.core.warpsim.sweep import (
-    ResultCache, SweepSpec, expansion_key, run_sweep,
+    ResultCache, SweepSpec, expansion_key, run_sweep, run_sweep_with_stats,
 )
 from repro.core.warpsim.timing import SimResult, simulate
+
+# `service` and `work_queue` are deliberately NOT imported eagerly: both
+# are `python -m`-runnable daemons, and importing them here would make
+# runpy warn about double-import on startup. `from repro.core.warpsim
+# import service` still works (plain submodule import).
 
 __all__ = [
     "MachineConfig", "machines", "runner", "sweep", "trace",
     "WarpStream", "expand_stream", "expand_workload", "simd_efficiency",
     "SimResult", "simulate",
     "ResultCache", "SweepSpec", "expansion_key", "run_sweep",
+    "run_sweep_with_stats",
 ]

@@ -31,6 +31,7 @@ import hashlib
 import os
 import subprocess
 import tempfile
+import warnings
 from typing import Optional
 
 import numpy as np
@@ -661,6 +662,14 @@ _CFLAGS = ("-O2", "-fPIC", "-shared", "-ffp-contract=off", "-fno-fast-math")
 
 _lib = None
 _load_attempted = False
+_load_error: Optional[str] = None   # why the core is unavailable, if it is
+_warned = False
+
+_DISABLED_VALUES = ("0", "no", "off")
+
+
+def _env_disabled() -> bool:
+    return os.environ.get("WARPSIM_NATIVE", "1") in _DISABLED_VALUES
 
 
 def _build_dir() -> Optional[str]:
@@ -679,20 +688,30 @@ def _build_dir() -> Optional[str]:
 
 
 def _compile() -> Optional[str]:
-    """Build (or reuse) the shared object; returns its path or None."""
+    """Build (or reuse) the shared object; returns its path or None.
+
+    On failure, the per-compiler diagnostics are recorded in
+    :data:`_load_error` so :func:`_load` can surface them (a silent
+    fallback to the ~25x-slower Python engines is an operator trap).
+    """
+    global _load_error
     tag = hashlib.sha256(
         (_C_SOURCE + " ".join(_CFLAGS)).encode()).hexdigest()[:16]
     try:
         d = _build_dir()
-    except OSError:
+    except OSError as e:
+        _load_error = f"build dir unavailable: {e}"
         return None
     if d is None:
+        _load_error = ("build dir refused: not owned by this user or "
+                       "group/world-writable (set WARPSIM_NATIVE_DIR)")
         return None
     so = os.path.join(d, f"warpsim_{tag}.so")
     if os.path.exists(so):
         return so
     src = os.path.join(d, f"warpsim_{tag}.c")
     tmp = f"{so}.{os.getpid()}.tmp"
+    errors = []
     try:
         with open(src, "w") as f:
             f.write(_C_SOURCE)
@@ -700,13 +719,18 @@ def _compile() -> Optional[str]:
             try:
                 r = subprocess.run([cc, *_CFLAGS, "-o", tmp, src],
                                    capture_output=True, timeout=120)
-            except (OSError, subprocess.TimeoutExpired):
+            except (OSError, subprocess.TimeoutExpired) as e:
+                errors.append(f"{cc}: {e.__class__.__name__}: {e}")
                 continue
             if r.returncode == 0:
                 os.replace(tmp, so)     # atomic: concurrent builders race benignly
                 return so
+            stderr = r.stderr.decode(errors="replace").strip()
+            errors.append(f"{cc}: exit {r.returncode}: {stderr[:500]}")
+        _load_error = "; ".join(errors) or "no C compiler attempted"
         return None
-    except OSError:
+    except OSError as e:
+        _load_error = f"{e.__class__.__name__}: {e}"
         return None
     finally:
         try:
@@ -715,15 +739,38 @@ def _compile() -> Optional[str]:
             pass
 
 
+def _warn_unavailable() -> None:
+    """Surface a failed compile exactly once per process.
+
+    Without this, a broken toolchain silently pinned every sweep to the
+    pure-Python engines for the life of the process — the failure *result*
+    is still cached (retrying a broken compiler per call would be worse),
+    but the cause is now visible to operators and in the service healthz.
+    """
+    global _warned
+    if _warned:
+        return
+    _warned = True
+    warnings.warn(
+        "warpsim native core unavailable, falling back to the pure-Python "
+        f"engines for this process ({_load_error or 'unknown failure'})",
+        RuntimeWarning, stacklevel=3)
+
+
 def _load():
-    global _lib, _load_attempted
+    global _lib, _load_attempted, _load_error
+    # The kill switch is re-read on every call (not snapshotted at first
+    # load), so WARPSIM_NATIVE=0 set on a live service disables the
+    # compiled engine without a restart — and un-setting it after a
+    # skipped first call still allows a later compile.
+    if _env_disabled():
+        return None
     if _load_attempted:
         return _lib
     _load_attempted = True
-    if os.environ.get("WARPSIM_NATIVE", "1") in ("0", "no", "off"):
-        return None
     so = _compile()
     if so is None:
+        _warn_unavailable()
         return None
     try:
         lib = ctypes.CDLL(so)
@@ -742,7 +789,9 @@ def _load():
                         + [i64, ptr, ptr, ptr, ptr] + [i64] + [ptr] * 11)
         agg.restype = ctypes.c_int
         _lib = lib
-    except OSError:
+    except OSError as e:
+        _load_error = f"dlopen failed: {e}"
+        _warn_unavailable()
         _lib = None
     return _lib
 
@@ -754,6 +803,28 @@ def available() -> bool:
     before forking workers so children inherit the loaded library.
     """
     return _load() is not None
+
+
+def status(probe: bool = False) -> dict:
+    """Operator-facing engine report (the sweep service's ``/healthz``).
+
+    ``enabled`` re-reads ``WARPSIM_NATIVE`` at call time — it reflects the
+    environment *now*, not at first load, matching :func:`_load`'s own
+    dynamic gate. With ``probe=True`` the one-time compile/load is
+    triggered first, so the report states which engine is actually live
+    rather than "unknown until first use".
+    """
+    if probe:
+        available()
+    enabled = not _env_disabled()
+    loaded = _lib is not None
+    return {
+        "enabled": enabled,
+        "loaded": loaded,
+        "attempted": _load_attempted,
+        "error": _load_error,
+        "engine": "native" if (enabled and loaded) else "python",
+    }
 
 
 def _canon(a, dtype):

@@ -34,6 +34,7 @@ def run_suite(
     group_expansion: bool = True,
     reuse_expansion: bool = True,
     share_traces: bool = True,
+    service_url: Optional[str] = None,
 ) -> Dict[str, Dict[str, SimResult]] | Dict[int, Dict[str, Dict[str, SimResult]]]:
     """results[machine][bench] -> SimResult.
 
@@ -45,11 +46,22 @@ def run_suite(
     :func:`suite_summary` for mean + min/max variance bands.
     ``share_traces=False`` disables the two-phase trace sharing (one
     single-phase expansion per expansion-key group, the PR 2 cold path).
+
+    With `service_url` the grid is fetched from a running sweep service
+    (:mod:`repro.core.warpsim.service`) instead of simulated in-process —
+    the service owns the cache, so `cache`/`parallel`/grouping flags are
+    ignored and a dead URL raises (callers that want silent fallback use
+    ``service.from_env()`` and only pass a probed URL, as
+    ``benchmarks/figs.py`` does).
     """
     spec = sweep_mod.SweepSpec(
         benches=tuple(benches), machines=machine_set,
         n_threads=n_threads,
         seeds=tuple(seeds) if seeds is not None else (seed,))
+    if service_url:
+        from repro.core.warpsim import service as service_mod
+        return service_mod.SweepClient(service_url).sweep(
+            spec, engine=None if engine == "auto" else engine)
     return sweep_mod.run_sweep(spec, cache=cache, parallel=parallel,
                                engine=engine, group_expansion=group_expansion,
                                reuse_expansion=reuse_expansion,

@@ -1,0 +1,715 @@
+"""Long-lived sweep result service over the three-level cache stack.
+
+The ROADMAP's serving open item: figure generation and ad-hoc queries
+should *never* re-simulate a cell that any process anywhere already
+computed. This module turns the sweep engine into a daemon (stdlib
+``http.server`` only — no new dependencies) that owns one
+:class:`~repro.core.warpsim.sweep.ResultCache` and the per-process
+trace/expansion LRUs, and serves:
+
+* ``GET /cell?bench=BFS&machine=SW%2B[&seed=..&n_threads=..&field=..]`` —
+  one grid cell. Machine is a suite name (``ws8``…, ``SW+``, ``LW+``) or
+  any :class:`MachineConfig` assembled from query-param field overrides.
+* ``POST /sweep`` — a full grid (JSON-encoded
+  :class:`~repro.core.warpsim.sweep.SweepSpec`); returns results in
+  ``run_sweep``'s shape plus that run's private stats snapshot. With
+  ``"enqueue": true`` the grid is instead sharded onto a lease-based
+  :class:`~repro.core.warpsim.work_queue.WorkQueue` for remote workers to
+  drain (``/queue/lease`` / ``/queue/complete`` / ``/queue/status``; see
+  :mod:`repro.core.warpsim.work_queue`).
+* ``GET /stats`` — service counters, live cache-stack counters (the
+  result-cache entry count re-scans the directory via
+  ``ResultCache.refresh()``, so cells written by sibling workers show up),
+  queue status per job.
+* ``GET /healthz`` — liveness plus which timing engine is actually live
+  (:func:`repro.core.warpsim._native.status` re-reads ``WARPSIM_NATIVE``
+  at call time, so operators can flip the engine without a restart and
+  see the truth here).
+
+Requests for the *same uncomputed cell* are deduplicated in flight: the
+first request simulates, every concurrent duplicate parks on the same
+future and is served the one result (the ``dedup_waits`` counter counts
+those). Results are deterministic, so deduplication is purely an
+efficiency contract — but it is what makes a cold-start service behind
+many clients cost one sweep instead of one per client.
+
+Run the daemon::
+
+    PYTHONPATH=src python -m repro.core.warpsim.service \
+        --cache-dir benchmarks/results/sweep_cache --port 8321
+
+Point clients at it with ``WARPSIM_SERVICE_URL=http://127.0.0.1:8321``
+(``benchmarks/figs.py`` and ``examples/warpsize_study.py`` pick it up via
+:func:`from_env` and fall back to in-process sweeps when unset or dead).
+"""
+
+from __future__ import annotations
+
+import argparse
+import concurrent.futures
+import dataclasses
+import json
+import os
+import threading
+import time
+import warnings
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Dict, Iterable, List, Mapping, Optional, Tuple
+from urllib.parse import parse_qs, urlencode, urlparse
+
+from repro.core.warpsim import _native
+from repro.core.warpsim import machines as machines_mod
+from repro.core.warpsim.config import MachineConfig
+from repro.core.warpsim.sweep import (
+    EXPANSION_CACHE, MODEL_VERSION, TRACE_CACHE, ResultCache, SweepSpec,
+    cell_key, compute_cell, family_major_cells, spec_from_dict, spec_to_dict,
+)
+from repro.core.warpsim.timing import SimResult
+from repro.core.warpsim.trace import BENCHMARKS
+from repro.core.warpsim.work_queue import (
+    WorkQueue, _http_json, cell_to_wire,
+)
+
+DEFAULT_CACHE_DIR = os.path.join("benchmarks", "results", "sweep_cache")
+ENV_URL = "WARPSIM_SERVICE_URL"
+
+_BOOL_TRUE = ("1", "true", "yes", "on")
+_BOOL_FALSE = ("0", "false", "no", "off")
+
+
+def _coerce(value: str, proto) -> object:
+    """Parse a query-param string into the type of a MachineConfig field."""
+    if isinstance(proto, bool):        # before int: bool is an int subclass
+        v = value.lower()
+        if v in _BOOL_TRUE:
+            return True
+        if v in _BOOL_FALSE:
+            return False
+        raise ValueError(f"bad boolean {value!r}")
+    return type(proto)(value)
+
+
+_CONFIG_PROTO = MachineConfig()
+_CONFIG_FIELDS = {f.name: getattr(_CONFIG_PROTO, f.name)
+                  for f in dataclasses.fields(MachineConfig)}
+
+
+def resolve_machine(params: Mapping[str, str]) -> MachineConfig:
+    """Machine config from ``/cell`` query params.
+
+    ``machine=`` names a preset (paper-suite name or ``ws<N>``); any
+    :class:`MachineConfig` field given as a query param overrides the
+    preset (or the default config when no preset is named), so arbitrary
+    machine points are reachable without the POST body encoding. Field
+    overrides without an explicit ``name=`` relabel the config
+    ``"custom"`` — the preset's display name must not survive onto a
+    machine it no longer describes (``machine=ws32&warp_size=64`` is not
+    a ws32, and ``name`` participates in the cell cache key, so an honest
+    label also keeps the keyspace honest).
+    """
+    simd = int(params.get("simd_width", 8))
+    name = params.get("machine")
+    if name:
+        suite = machines_mod.paper_suite(simd)
+        if name in suite:
+            base = suite[name]
+        elif name.startswith("ws") and name[2:].isdigit():
+            base = machines_mod.baseline(int(name[2:]), simd)
+        else:
+            raise ValueError(f"unknown machine {name!r} (suite names: "
+                             f"{', '.join(suite)}, or ws<N>)")
+    else:
+        base = MachineConfig()
+    overrides = {fname: _coerce(params[fname], proto)
+                 for fname, proto in _CONFIG_FIELDS.items() if fname in params}
+    if not overrides:
+        return base
+    if "name" not in overrides and set(overrides) - {"simd_width"}:
+        overrides["name"] = "custom"
+    return dataclasses.replace(base, **overrides)
+
+
+# ---------------------------------------------------------------------------
+# Service core (HTTP-free; the handler below is a thin codec over this)
+# ---------------------------------------------------------------------------
+
+
+class SweepService:
+    """Shared state of the daemon: cache stack, in-flight dedup, queues.
+
+    Thread-safe — every public method may be called from concurrent
+    request threads. The in-flight table maps cell key -> Future: the
+    first thread to miss both the cache and the table becomes the owner
+    (simulates, publishes to the cache, resolves the future); every
+    concurrent requester of the same key parks on ``Future.result()``.
+    """
+
+    def __init__(self, cache_dir: str, engine: str = "auto",
+                 persist_traces: bool = True, lease_seconds: float = 60.0):
+        self.cache = ResultCache(cache_dir)
+        self.engine = engine
+        self.trace_dir = (os.path.join(cache_dir, "traces")
+                          if persist_traces else None)
+        self.lease_seconds = lease_seconds
+        self.started = time.time()
+        self._lock = threading.Lock()
+        self._inflight: Dict[str, concurrent.futures.Future] = {}
+        self._jobs: Dict[str, WorkQueue] = {}
+        self._job_seq = 0
+        self.counters: Dict[str, int] = {
+            "requests": 0, "errors": 0, "cells_served": 0, "cache_hits": 0,
+            "simulated": 0, "dedup_waits": 0, "sweeps": 0, "sweep_cells": 0,
+            "queue_cells_adopted": 0,
+        }
+        self.last_sweep_stats: Dict[str, float] = {}
+
+    def bump(self, counter: str, n: int = 1) -> None:
+        with self._lock:
+            self.counters[counter] = self.counters.get(counter, 0) + n
+
+    # ------------------------------------------------------------- cells
+
+    def cell(self, bench: str, cfg: MachineConfig,
+             n_threads: Optional[int] = None, seed: int = 0,
+             engine: Optional[str] = None) -> SimResult:
+        return self.cell_with_source(bench, cfg, n_threads, seed, engine)[0]
+
+    def cell_with_source(self, bench: str, cfg: MachineConfig,
+                         n_threads: Optional[int] = None, seed: int = 0,
+                         engine: Optional[str] = None
+                         ) -> Tuple[SimResult, str]:
+        """One cell plus how it was served: "cache" | "simulated" | "dedup"."""
+        key = cell_key(bench, cfg, n_threads, seed)
+        res = self.cache.get(key)       # optimistic: no service lock held
+        if res is not None:
+            with self._lock:
+                self.counters["cells_served"] += 1
+                self.counters["cache_hits"] += 1
+            return res, "cache"
+        owner = False
+        with self._lock:
+            self.counters["cells_served"] += 1
+            fut = self._inflight.get(key)
+            if fut is None:
+                # Re-probe under the lock: the owner of a just-finished
+                # in-flight simulation published to the cache and left the
+                # table between our optimistic probe and here. contains()
+                # first — it skips the hit/miss counters, so the common
+                # cold path doesn't double-count the optimistic miss.
+                res = self.cache.get(key) if self.cache.contains(key) else None
+                if res is not None:
+                    self.counters["cache_hits"] += 1
+                    return res, "cache"
+                fut = concurrent.futures.Future()
+                self._inflight[key] = fut
+                owner = True
+            else:
+                self.counters["dedup_waits"] += 1
+        if not owner:
+            return fut.result(), "dedup"
+        try:
+            res = compute_cell(bench, cfg, n_threads=n_threads, seed=seed,
+                               engine=engine or self.engine,
+                               trace_dir=self.trace_dir)
+            self.cache.put(key, res)
+            with self._lock:
+                self.counters["simulated"] += 1
+            fut.set_result(res)
+            return res, "simulated"
+        except BaseException as e:
+            fut.set_exception(e)
+            raise
+        finally:
+            with self._lock:
+                self._inflight.pop(key, None)
+
+    # ------------------------------------------------------------ sweeps
+
+    def sweep(self, spec: SweepSpec,
+              engine: Optional[str] = None) -> Tuple[Dict, Dict]:
+        """Serve a whole grid; returns ``(results, stats)``.
+
+        Cells run through :meth:`cell_with_source` in family-major order,
+        so uncached runs get the sweep engine's trace/expansion sharing
+        through the process-wide LRUs, and every cell dedups against
+        concurrent ``/cell`` and ``/sweep`` requests. Trace families are
+        fanned across a small thread pool (one family per task keeps its
+        cells' trace/stream locality) so a cold grid uses the host's
+        cores — the native engine releases the GIL inside its C call, and
+        the cache stack is lock-guarded, so threads are both safe and
+        effective here. `stats` mirrors ``run_sweep_with_stats``'s
+        snapshot keys (plus ``dedup_waits``).
+        """
+        t0 = time.time()
+        mset = spec.machine_set()
+        cells = family_major_cells(spec.cells(machine_set=mset))
+        exp0 = (EXPANSION_CACHE.hits, EXPANSION_CACHE.misses)
+        trc0 = (TRACE_CACHE.hits, TRACE_CACHE.misses, TRACE_CACHE.disk_hits)
+        results: Dict[int, Dict[str, Dict[str, SimResult]]] = {
+            seed: {} for seed in spec.seeds}
+        counts = {"cache": 0, "simulated": 0, "dedup": 0}
+        sim_groups, sim_families = set(), set()
+
+        families: List[List] = []
+        for cell in cells:              # consecutive runs share a family
+            fam = (cell[2], cell[3], cell[4])
+            if not families or fam != families[-1][0]:
+                families.append([fam, []])
+            families[-1][1].append(cell)
+
+        def run_family(group):
+            out = []
+            for mname, cfg, bench, n_threads, seed in group:
+                out.append(((mname, cfg, bench, n_threads, seed),
+                            self.cell_with_source(bench, cfg, n_threads,
+                                                  seed, engine=engine)))
+            return out
+
+        workers = min(8, os.cpu_count() or 1, len(families)) or 1
+        if workers > 1:
+            with concurrent.futures.ThreadPoolExecutor(workers) as pool:
+                per_family = pool.map(run_family,
+                                      (g for _, g in families))
+                done = [cell for fam in per_family for cell in fam]
+        else:
+            done = [cell for _, g in families for cell in run_family(g)]
+
+        for (mname, cfg, bench, n_threads, seed), (res, src) in done:
+            counts[src] += 1
+            if src != "cache":
+                fam = (bench, n_threads, seed)
+                sim_families.add(fam)
+                sim_groups.add(fam + (cfg.expansion_key(),))
+            results[seed].setdefault(mname, {})[bench] = res
+        uncached = counts["simulated"] + counts["dedup"]
+        stats = dict(
+            cells=len(cells),
+            cache_hits=counts["cache"],
+            cache_misses=uncached,
+            simulated=counts["simulated"],
+            dedup_waits=counts["dedup"],
+            expansion_groups=len(sim_groups),
+            expansions_saved=uncached - len(sim_groups),
+            trace_families=len(sim_families),
+            traces_shared=len(sim_groups) - len(sim_families),
+            expansion_cache_hits=EXPANSION_CACHE.hits - exp0[0],
+            expansion_cache_misses=EXPANSION_CACHE.misses - exp0[1],
+            trace_cache_hits=TRACE_CACHE.hits - trc0[0],
+            trace_cache_misses=TRACE_CACHE.misses - trc0[1],
+            trace_disk_hits=TRACE_CACHE.disk_hits - trc0[2],
+            elapsed_s=round(time.time() - t0, 6),
+        )
+        with self._lock:
+            self.counters["sweeps"] += 1
+            self.counters["sweep_cells"] += len(cells)
+            self.last_sweep_stats = stats
+        ordered: Dict[int, Dict[str, Dict[str, SimResult]]] = {
+            seed: {m: {b: results[seed][m][b] for b in spec.benches}
+                   for m in mset}
+            for seed in spec.seeds}
+        if len(spec.seeds) == 1:
+            return ordered[spec.seeds[0]], stats
+        return ordered, stats
+
+    # ------------------------------------------------------------- queue
+
+    # Finished jobs kept queryable (status polling) before the oldest are
+    # dropped, and a hard ceiling on jobs of *any* state so abandoned
+    # enqueues (workers never showed up) can't grow the daemon without
+    # bound either — evicting oldest-first in both passes (dict order).
+    MAX_FINISHED_JOBS = 32
+    MAX_JOBS = 128
+
+    def enqueue(self, spec: SweepSpec, chunk_size: int = 16,
+                lease_seconds: Optional[float] = None) -> dict:
+        """Shard a grid's *uncached* cells onto a new lease-based job."""
+        todo = [c for c in family_major_cells(spec.cells())
+                if not self.cache.contains(cell_key(c[2], c[1], c[3], c[4]))]
+        q = WorkQueue(todo, chunk_size=chunk_size,
+                      lease_seconds=lease_seconds or self.lease_seconds)
+        with self._lock:
+            self._job_seq += 1
+            job = f"job-{self._job_seq}"
+            self._jobs[job] = q
+            finished = [j for j, jq in self._jobs.items()
+                        if jq is not q and jq.done]
+            for j in finished[:max(0, len(finished)
+                                   - self.MAX_FINISHED_JOBS)]:
+                del self._jobs[j]
+            stale = [j for j, jq in self._jobs.items() if jq is not q]
+            for j in stale[:max(0, len(self._jobs) - self.MAX_JOBS)]:
+                del self._jobs[j]       # abandoned jobs: oldest first
+        return {"job": job, **q.status()}
+
+    def _job(self, job: str) -> WorkQueue:
+        with self._lock:
+            q = self._jobs.get(job)
+        if q is None:
+            raise ValueError(f"unknown job {job!r}")
+        return q
+
+    def queue_lease(self, job: str, worker: str) -> dict:
+        q = self._job(job)
+        chunk = q.lease(worker)
+        if chunk is None:
+            return {"job": job, "chunk": None, "done": q.done}
+        return {"job": job, "chunk": chunk.chunk_id,
+                "cells": [cell_to_wire(c) for c in chunk.cells],
+                "lease_seconds": q.lease_seconds, "done": False}
+
+    def queue_renew(self, job: str, chunk: int, worker: str) -> dict:
+        return {"ok": self._job(job).renew(int(chunk), worker),
+                "job": job, "chunk": int(chunk)}
+
+    def queue_complete(self, job: str, chunk: int, worker: str,
+                       results: Iterable[Mapping]) -> dict:
+        """Adopt a worker's results into the cache and retire its chunk.
+
+        Workers POST result fields back instead of relying on a shared
+        filesystem, so a queue can span hosts whose only common ground is
+        this service. (Results are deterministic and content-addressed;
+        adopting a duplicate is byte-identical.)
+        """
+        q = self._job(job)
+        n = 0
+        for ent in results:
+            self.cache.put(ent["key"], SimResult(**ent["result"]))
+            n += 1
+        if n:
+            self.bump("queue_cells_adopted", n)
+        ok = q.complete(int(chunk), worker)
+        return {"ok": ok, "job": job, "chunk": int(chunk), "done": q.done}
+
+    def queue_status(self, job: str) -> dict:
+        return {"job": job, **self._job(job).status()}
+
+    # ------------------------------------------------------ observability
+
+    def healthz(self) -> dict:
+        native = _native.status(probe=True)
+        engine = self.engine
+        if engine == "auto":
+            engine = "native" if native["engine"] == "native" else "fast"
+        return {
+            "ok": True,
+            "model": MODEL_VERSION,
+            "engine": engine,
+            "native": native,
+            "cache_root": os.path.abspath(self.cache.root),
+            "uptime_s": round(time.time() - self.started, 3),
+        }
+
+    def stats(self) -> dict:
+        with self._lock:
+            counters = dict(self.counters)
+            in_flight = len(self._inflight)
+            jobs = {job: q.status() for job, q in self._jobs.items()}
+            last_sweep = dict(self.last_sweep_stats)
+        return {
+            "counters": counters,
+            "in_flight": in_flight,
+            "result_cache": {
+                # refresh() re-scans the directory, so entries written by
+                # sibling workers/processes since startup are counted.
+                "entries": self.cache.refresh(),
+                "hits": self.cache.hits,
+                "misses": self.cache.misses,
+                "adopted": self.cache.adopted,
+            },
+            "expansion_cache": {
+                "size": len(EXPANSION_CACHE),
+                "hits": EXPANSION_CACHE.hits,
+                "misses": EXPANSION_CACHE.misses,
+            },
+            "trace_cache": {
+                "size": len(TRACE_CACHE),
+                "hits": TRACE_CACHE.hits,
+                "misses": TRACE_CACHE.misses,
+                "disk_hits": TRACE_CACHE.disk_hits,
+                "builds": TRACE_CACHE.builds,
+            },
+            "jobs": jobs,
+            "last_sweep": last_sweep,
+            "uptime_s": round(time.time() - self.started, 3),
+        }
+
+
+# ---------------------------------------------------------------------------
+# HTTP layer
+# ---------------------------------------------------------------------------
+
+
+def _encode_results(results: Dict, seeds: Tuple[int, ...]) -> Dict:
+    def _machines(per_m: Dict) -> Dict:
+        return {m: {b: dataclasses.asdict(r) for b, r in per_b.items()}
+                for m, per_b in per_m.items()}
+    if len(seeds) == 1:
+        return _machines(results)
+    return {str(seed): _machines(per_m) for seed, per_m in results.items()}
+
+
+def _decode_results(blob: Dict, seeds: List[int]) -> Dict:
+    def _machines(per_m: Dict) -> Dict:
+        return {m: {b: SimResult(**fields) for b, fields in per_b.items()}
+                for m, per_b in per_m.items()}
+    if len(seeds) == 1:
+        return _machines(blob)
+    return {int(seed): _machines(per_m) for seed, per_m in blob.items()}
+
+
+class SweepRequestHandler(BaseHTTPRequestHandler):
+    """Thin JSON codec over :class:`SweepService` (set as a class attr)."""
+
+    service: SweepService
+    quiet = True
+    protocol_version = "HTTP/1.1"   # keep-alive (Content-Length always set)
+    server_version = "warpsim-sweep/1"
+
+    def log_message(self, fmt, *args):  # noqa: D102 — stdlib signature
+        if not self.quiet:
+            BaseHTTPRequestHandler.log_message(self, fmt, *args)
+
+    def _send(self, obj, code: int = 200) -> None:
+        data = json.dumps(obj).encode()
+        self.send_response(code)
+        self.send_header("Content-Type", "application/json")
+        self.send_header("Content-Length", str(len(data)))
+        self.end_headers()
+        self.wfile.write(data)
+
+    def _try_send(self, obj, code: int) -> None:
+        try:
+            self._send(obj, code)
+        except OSError:
+            pass                         # socket already dead/half-written
+
+    def _route(self, fn) -> None:
+        self.service.bump("requests")
+        try:
+            fn()
+        except (KeyError, ValueError) as e:
+            self.service.bump("errors")
+            self._try_send({"error": f"{e.__class__.__name__}: {e}"}, 400)
+        except ConnectionError:
+            pass             # client went away mid-response (reset or pipe)
+        except Exception as e:           # noqa: BLE001 — report, don't die
+            self.service.bump("errors")
+            self._try_send({"error": f"{e.__class__.__name__}: {e}"}, 500)
+
+    def do_GET(self):  # noqa: N802 — stdlib naming
+        path = urlparse(self.path).path
+        params = {k: v[-1]
+                  for k, v in parse_qs(urlparse(self.path).query).items()}
+        svc = self.service
+
+        def handle():
+            if path == "/healthz":
+                self._send(svc.healthz())
+            elif path == "/stats":
+                self._send(svc.stats())
+            elif path == "/cell":
+                bench = params["bench"]
+                cfg = resolve_machine(params)
+                n_threads = (int(params["n_threads"])
+                             if "n_threads" in params else None)
+                seed = int(params.get("seed", 0))
+                res, src = svc.cell_with_source(
+                    bench, cfg, n_threads, seed, engine=params.get("engine"))
+                self._send({
+                    "key": cell_key(bench, cfg, n_threads, seed),
+                    "machine": cfg.name, "source": src,
+                    "result": dataclasses.asdict(res),
+                })
+            elif path == "/queue/lease":
+                self._send(svc.queue_lease(params["job"],
+                                           params.get("worker", "anon")))
+            elif path == "/queue/renew":
+                self._send(svc.queue_renew(params["job"], params["chunk"],
+                                           params.get("worker", "anon")))
+            elif path == "/queue/status":
+                self._send(svc.queue_status(params["job"]))
+            else:
+                self._send({"error": f"unknown path {path}"}, 404)
+
+        self._route(handle)
+
+    def do_POST(self):  # noqa: N802 — stdlib naming
+        path = urlparse(self.path).path
+        svc = self.service
+
+        def handle():
+            length = int(self.headers.get("Content-Length", 0))
+            body = json.loads(self.rfile.read(length) or b"{}")
+            if path == "/sweep":
+                spec = spec_from_dict(body.get("spec", body))
+                if body.get("enqueue"):
+                    self._send(svc.enqueue(
+                        spec, chunk_size=int(body.get("chunk_size", 16)),
+                        lease_seconds=body.get("lease_seconds")))
+                    return
+                results, stats = svc.sweep(spec, engine=body.get("engine"))
+                self._send({
+                    "results": _encode_results(results, spec.seeds),
+                    "stats": stats,
+                    "seeds": list(spec.seeds),
+                })
+            elif path == "/queue/complete":
+                self._send(svc.queue_complete(
+                    body["job"], body["chunk"], body.get("worker", "anon"),
+                    body.get("results", [])))
+            else:
+                self._send({"error": f"unknown path {path}"}, 404)
+
+        self._route(handle)
+
+
+def serve(service: SweepService, host: str = "127.0.0.1", port: int = 0,
+          quiet: bool = True) -> ThreadingHTTPServer:
+    """Bind the daemon; ``port=0`` picks an ephemeral port. The caller owns
+    the loop: ``serve(svc).serve_forever()`` (or run it in a thread)."""
+    handler = type("BoundSweepHandler", (SweepRequestHandler,),
+                   {"service": service, "quiet": quiet})
+    return ThreadingHTTPServer((host, port), handler)
+
+
+# ---------------------------------------------------------------------------
+# Client
+# ---------------------------------------------------------------------------
+
+
+class SweepClient:
+    """Talk to a running service; mirrors the in-process sweep API shapes.
+
+    ``sweep()`` returns exactly what ``run_sweep`` would (single-seed flat
+    grid, or seed-keyed for multi-seed specs) and stashes the service's
+    per-run stats snapshot in :attr:`last_stats`, so call sites swap
+    between local and remote execution without reshaping anything.
+    """
+
+    def __init__(self, base_url: str, timeout: float = 600.0):
+        self.base_url = base_url.rstrip("/")
+        self.timeout = timeout
+        self.last_stats: Dict = {}
+
+    def _get(self, path: str) -> dict:
+        return _http_json(self.base_url + path, timeout=self.timeout)
+
+    def _post(self, path: str, body: dict) -> dict:
+        return _http_json(self.base_url + path, body, timeout=self.timeout)
+
+    def healthz(self) -> dict:
+        return self._get("/healthz")
+
+    def stats(self) -> dict:
+        return self._get("/stats")
+
+    def cell(self, bench: str, machine: str = "ws32",
+             **params) -> SimResult:
+        q = {"bench": bench, "machine": machine}
+        q.update({k: v for k, v in params.items() if v is not None})
+        resp = self._get("/cell?" + urlencode(q))
+        return SimResult(**resp["result"])
+
+    def sweep(self, spec: SweepSpec, engine: Optional[str] = None) -> Dict:
+        body: Dict = {"spec": spec_to_dict(spec)}
+        if engine:
+            body["engine"] = engine
+        resp = self._post("/sweep", body)
+        self.last_stats = resp.get("stats", {})
+        seeds = [int(s) for s in resp.get("seeds", [0])]
+        return _decode_results(resp["results"], seeds)
+
+    def run_suite(self, machine_set: Optional[Mapping] = None,
+                  benches: Iterable[str] = BENCHMARKS,
+                  n_threads: Optional[int] = None, seed: int = 0,
+                  seeds: Optional[Iterable[int]] = None,
+                  engine: Optional[str] = None) -> Dict:
+        """Signature-compatible with :func:`repro.core.warpsim.runner.run_suite`."""
+        spec = SweepSpec(
+            benches=tuple(benches), machines=machine_set,
+            n_threads=n_threads,
+            seeds=tuple(seeds) if seeds is not None else (seed,))
+        return self.sweep(spec, engine=engine)
+
+    def enqueue(self, spec: SweepSpec, chunk_size: int = 16,
+                lease_seconds: Optional[float] = None) -> dict:
+        body: Dict = {"spec": spec_to_dict(spec), "enqueue": True,
+                      "chunk_size": chunk_size}
+        if lease_seconds is not None:
+            body["lease_seconds"] = lease_seconds
+        return self._post("/sweep", body)
+
+    def queue_status(self, job: str) -> dict:
+        return self._get("/queue/status?" + urlencode({"job": job}))
+
+
+def from_env(var: str = ENV_URL, probe: bool = True
+             ) -> Optional[SweepClient]:
+    """Client for the service named by ``$WARPSIM_SERVICE_URL``, or None.
+
+    With `probe` (the default) a dead or unreachable service degrades to
+    None with a warning — figure generation then falls back to in-process
+    sweeps instead of failing, so the env var can stay exported even when
+    no daemon is up.
+    """
+    url = os.environ.get(var)
+    if not url:
+        return None
+    client = SweepClient(url)
+    if probe:
+        try:
+            client.healthz()
+        except Exception as e:  # noqa: BLE001 — any failure means "no service"
+            warnings.warn(
+                f"{var}={url} set but the service is unreachable "
+                f"({e.__class__.__name__}: {e}); falling back to in-process "
+                "sweeps", RuntimeWarning, stacklevel=2)
+            return None
+    return client
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+def main(argv: Optional[List[str]] = None) -> None:
+    ap = argparse.ArgumentParser(
+        description="long-lived warp-size sweep result service")
+    ap.add_argument("--cache-dir", default=DEFAULT_CACHE_DIR,
+                    help=f"ResultCache root (default: {DEFAULT_CACHE_DIR})")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8321,
+                    help="0 picks an ephemeral port (printed on startup)")
+    ap.add_argument("--engine", default="auto",
+                    choices=("auto", "native", "fast", "fast_nested",
+                             "event"))
+    ap.add_argument("--no-persist-traces", action="store_true",
+                    help="don't snapshot thread traces under the cache dir")
+    ap.add_argument("--lease-seconds", type=float, default=60.0,
+                    help="work-queue lease duration")
+    ap.add_argument("--verbose", action="store_true",
+                    help="log every request to stderr")
+    args = ap.parse_args(argv)
+
+    service = SweepService(
+        args.cache_dir, engine=args.engine,
+        persist_traces=not args.no_persist_traces,
+        lease_seconds=args.lease_seconds)
+    httpd = serve(service, host=args.host, port=args.port,
+                  quiet=not args.verbose)
+    host, port = httpd.server_address[:2]
+    # Machine-parseable startup line (the smoke harness reads the URL).
+    print(f"warpsim-sweep-service listening on http://{host}:{port} "
+          f"(cache={os.path.abspath(args.cache_dir)}, engine={args.engine})",
+          flush=True)
+    try:
+        httpd.serve_forever()
+    except KeyboardInterrupt:
+        pass
+    finally:
+        httpd.server_close()
+
+
+if __name__ == "__main__":
+    main()

@@ -70,6 +70,8 @@ import functools
 import hashlib
 import json
 import os
+import tempfile
+import threading
 from typing import Dict, List, Mapping, Optional, Tuple
 
 import numpy as np
@@ -170,20 +172,29 @@ class ResultCache:
 
     Existence is answered from a one-time directory listing (plus this
     instance's own writes): a cold 90-cell sweep costs one ``scandir``
-    instead of 90 failed ``open`` calls. The negative cache is
-    instance-lifetime — entries written by *other* processes after this
-    instance's first lookup are re-simulated rather than read, which is
-    always correct (results are deterministic) just not maximally shared;
-    create a fresh ResultCache to re-sync with the directory.
+    instead of 90 failed ``open`` calls. The listing is *positive-only*:
+    an index miss falls back to one direct existence probe, and a cell
+    written by another process/worker after this instance's first scan is
+    adopted into the index on first touch — a long-lived process (the
+    sweep service, a work-queue worker) therefore sees every peer's writes
+    instead of permanently re-simulating them. :meth:`refresh` re-scans
+    the directory wholesale (the service's ``/stats`` endpoint uses it to
+    report live entry counts).
+
+    Instances are thread-safe: the index and counters are guarded by a
+    lock, and concurrent ``put`` calls for one key race benignly (results
+    are deterministic, so last-writer-wins is byte-identical).
     """
 
     def __init__(self, root: str):
         self.root = root
         self.hits = 0
         self.misses = 0
+        self.adopted = 0          # index misses rescued by a direct probe
         self._listing: Optional[set] = None
         self._legacy: Dict[str, str] = {}
         self._root_ok = False
+        self._lock = threading.RLock()
 
     def _path(self, key: str) -> str:
         return os.path.join(self.root, key + ".json")
@@ -212,12 +223,50 @@ class ResultCache:
                     pass
         return self._listing
 
+    def refresh(self) -> int:
+        """Re-scan the cache directory, picking up cells written by other
+        processes since the last scan. Returns the number of indexed cells."""
+        with self._lock:
+            self._listing = None
+            self._legacy.clear()
+            return sum(1 for e in self._index() if e.endswith(".json"))
+
+    def count(self) -> int:
+        """Number of cells currently indexed (no directory re-scan)."""
+        with self._lock:
+            return sum(1 for e in self._index() if e.endswith(".json"))
+
+    def _locate(self, name: str) -> Optional[str]:
+        """Path of `name` if present, else None; adopts external writes.
+
+        The one-shot listing is a snapshot: a cell persisted by another
+        process after this instance's first scan is not in it. Treating
+        that as a miss would turn a permanent hit into a permanent
+        re-simulation in long-lived processes, so an index miss is
+        confirmed with a direct existence probe and confirmed entries are
+        adopted into the index.
+        """
+        with self._lock:
+            if name in self._index():
+                return self._legacy.get(name) or os.path.join(self.root, name)
+            path = os.path.join(self.root, name)
+            if os.path.exists(path):
+                self._listing.add(name)
+                self.adopted += 1
+                return path
+            return None
+
+    def contains(self, key: str) -> bool:
+        """Existence check without a read (and without hit/miss counting)."""
+        return self._locate(key + ".json") is not None
+
     def get(self, key: str) -> Optional[SimResult]:
         name = key + ".json"
-        if name not in self._index():
-            self.misses += 1
+        path = self._locate(name)
+        if path is None:
+            with self._lock:
+                self.misses += 1
             return None
-        path = self._legacy.get(name) or os.path.join(self.root, name)
         try:
             with open(path) as f:
                 blob = json.load(f)
@@ -226,7 +275,9 @@ class ResultCache:
                 raise ValueError("schema mismatch")
             res = SimResult(**fields)
         except FileNotFoundError:
-            self.misses += 1
+            with self._lock:
+                self._index().discard(name)
+                self.misses += 1
             return None
         except Exception:
             # Corrupt entry: drop it and treat as a miss.
@@ -234,9 +285,13 @@ class ResultCache:
                 os.remove(path)
             except OSError:
                 pass
-            self.misses += 1
+            with self._lock:
+                self._index().discard(name)
+                self._legacy.pop(name, None)
+                self.misses += 1
             return None
-        self.hits += 1
+        with self._lock:
+            self.hits += 1
         return res
 
     def put(self, key: str, result: SimResult) -> None:
@@ -258,8 +313,9 @@ class ResultCache:
         finally:
             os.close(fd)
         name = key + ".json"
-        self._legacy.pop(name, None)     # flat copy supersedes a legacy one
-        self._index().add(name)
+        with self._lock:
+            self._legacy.pop(name, None)  # flat copy supersedes a legacy one
+            self._index().add(name)
 
 
 # ---------------------------------------------------------------------------
@@ -276,6 +332,14 @@ class ExpansionCache:
     long-lived sweep servers cannot grow without limit; eviction is
     least-recently-used. Each process (sweep parent and every pool worker)
     holds its own instance.
+
+    Thread-safe: the LRU dict and counters are guarded by a lock (the
+    sweep service hits the module-global instance from many request
+    threads; unguarded ``move_to_end``/``popitem`` interleavings corrupt
+    recency order or raise mid-iteration). The lock is *not* held while a
+    missing stream is built, so two threads missing the same key may both
+    build it — a benign duplicate (streams are deterministic, last insert
+    wins); cell-level dedup lives in the service layer.
     """
 
     def __init__(self, maxsize: int = 64):
@@ -286,6 +350,7 @@ class ExpansionCache:
             collections.OrderedDict())
         self.hits = 0
         self.misses = 0
+        self._lock = threading.Lock()
 
     def get(self, workload: Workload, cfg: MachineConfig,
             trace: Optional[ThreadTrace] = None,
@@ -304,16 +369,17 @@ class ExpansionCache:
         """
         key = (workload.name, workload.n_threads, workload.seed,
                cfg.expansion_key())
-        ent = self._streams.get(key)
-        # The program-identity check guards callers that build Workload
-        # objects by hand: two different programs sharing a name must not
-        # alias one cached stream (get_workload-canonical workloads always
-        # pass — the workload itself is memoized).
-        if ent is not None and ent[0].program is workload.program:
-            self._streams.move_to_end(key)
-            self.hits += 1
-            return ent[1]
-        self.misses += 1
+        with self._lock:
+            ent = self._streams.get(key)
+            # The program-identity check guards callers that build Workload
+            # objects by hand: two different programs sharing a name must
+            # not alias one cached stream (get_workload-canonical workloads
+            # always pass — the workload itself is memoized).
+            if ent is not None and ent[0].program is workload.program:
+                self._streams.move_to_end(key)
+                self.hits += 1
+                return ent[1]
+            self.misses += 1
         if trace is None and trace_fn is not None:
             trace = trace_fn()
         if trace is not None:
@@ -322,18 +388,21 @@ class ExpansionCache:
             stream = expand_stream_single(workload, cfg)
         else:
             stream = expand_stream(workload, cfg)
-        self._streams[key] = (workload, stream)
-        while len(self._streams) > self.maxsize:
-            self._streams.popitem(last=False)
+        with self._lock:
+            self._streams[key] = (workload, stream)
+            while len(self._streams) > self.maxsize:
+                self._streams.popitem(last=False)
         return stream
 
     def __len__(self) -> int:
-        return len(self._streams)
+        with self._lock:
+            return len(self._streams)
 
     def clear(self) -> None:
-        self._streams.clear()
-        self.hits = 0
-        self.misses = 0
+        with self._lock:
+            self._streams.clear()
+            self.hits = 0
+            self.misses = 0
 
 
 EXPANSION_CACHE_SIZE = 64
@@ -381,6 +450,10 @@ class TraceCache:
     seed)`` (stable region hashing), so a snapshot written by any process
     is exact. Unreadable or stale snapshots are deleted and rebuilt, the
     same corruption contract as ``ResultCache``.
+
+    Thread-safe with the same locking discipline as
+    :class:`ExpansionCache`: dict and counters under a lock, builds and
+    disk I/O outside it (duplicate concurrent builds are benign).
     """
 
     def __init__(self, maxsize: int = 32):
@@ -393,32 +466,41 @@ class TraceCache:
         self.misses = 0
         self.disk_hits = 0
         self.builds = 0
+        self._lock = threading.Lock()
 
     def get(self, workload: Workload,
             root: Optional[str] = None) -> ThreadTrace:
         key = (workload.name, workload.n_threads, workload.seed)
-        ent = self._traces.get(key)
-        if ent is not None and ent[0].program is workload.program:
-            self._traces.move_to_end(key)
-            self.hits += 1
+        with self._lock:
+            ent = self._traces.get(key)
+            if ent is not None and ent[0].program is workload.program:
+                self._traces.move_to_end(key)
+                self.hits += 1
+                hit = ent[1]
+            else:
+                hit = None
+                self.misses += 1
+        if hit is not None:
             if root and not os.path.exists(self._path(workload, root)):
                 # The LRU entry may predate persistence (built by an
                 # earlier sweep without a root): snapshot it now so the
                 # persist_traces=True promise holds for later processes.
-                self._store(workload, root, ent[1])
-            return ent[1]
-        self.misses += 1
+                self._store(workload, root, hit)
+            return hit
         trace = self._load(workload, root) if root else None
         if trace is None:
             trace = build_thread_trace(workload)
-            self.builds += 1
             if root:
                 self._store(workload, root, trace)
+            with self._lock:
+                self.builds += 1
         else:
-            self.disk_hits += 1
-        self._traces[key] = (workload, trace)
-        while len(self._traces) > self.maxsize:
-            self._traces.popitem(last=False)
+            with self._lock:
+                self.disk_hits += 1
+        with self._lock:
+            self._traces[key] = (workload, trace)
+            while len(self._traces) > self.maxsize:
+                self._traces.popitem(last=False)
         return trace
 
     def _path(self, workload: Workload, root: str) -> str:
@@ -446,35 +528,52 @@ class TraceCache:
 
     def _store(self, workload: Workload, root: str,
                trace: ThreadTrace) -> None:
+        # The tmp file must be unique per *writer*, not per process: two
+        # service threads (same pid) persisting one trace family through a
+        # deterministic `{path}.{pid}.tmp` name would open the same file,
+        # truncate each other mid-write, and os.replace would publish the
+        # torn interleaving. mkstemp in the cache dir gives every writer a
+        # private file (same filesystem, so the rename stays atomic) and
+        # the last complete snapshot wins — byte-identical anyway, traces
+        # are deterministic.
         path = self._path(workload, root)
-        tmp = f"{path}.{os.getpid()}.tmp"
+        tmp = None
         try:
             os.makedirs(root, exist_ok=True)
-            with open(tmp, "wb") as f:
+            fd, tmp = tempfile.mkstemp(
+                dir=root, prefix=os.path.basename(path) + ".", suffix=".tmp")
+            with os.fdopen(fd, "wb") as f:
                 np.savez(f, **{f_: getattr(trace, f_)
                                for f_ in _TRACE_FIELDS})
             os.replace(tmp, path)   # atomic: concurrent writers race benignly
         except OSError:
-            try:
-                os.remove(tmp)
-            except OSError:
-                pass
+            if tmp is not None:
+                try:
+                    os.remove(tmp)
+                except OSError:
+                    pass
 
     def __len__(self) -> int:
-        return len(self._traces)
+        with self._lock:
+            return len(self._traces)
 
     def clear(self) -> None:
-        self._traces.clear()
-        self.hits = self.misses = self.disk_hits = self.builds = 0
+        with self._lock:
+            self._traces.clear()
+            self.hits = self.misses = self.disk_hits = self.builds = 0
 
 
 TRACE_CACHE_SIZE = 32
 TRACE_CACHE = TraceCache(TRACE_CACHE_SIZE)
 
-# Counters of the most recent run_sweep call in this process (the sweep
-# parent: worker-local expansion reuse shows up in `expansions_saved`,
-# which is computed from the grouping itself and is process-independent).
+# Deprecated alias: counters of the most recent run_sweep call in this
+# process. Prefer :func:`run_sweep_with_stats`, which returns each run's
+# private snapshot — concurrent sweeps (service request threads) each get
+# their own dict, while this global only ever holds whichever run
+# published last. Kept as the same mutable object across runs because
+# callers import it by value; updates are atomic under _STATS_LOCK.
 LAST_SWEEP_STATS: Dict[str, int] = {}
+_STATS_LOCK = threading.Lock()
 
 
 # ---------------------------------------------------------------------------
@@ -539,6 +638,63 @@ class SweepSpec:
         return out
 
 
+def spec_to_dict(spec: SweepSpec) -> dict:
+    """JSON-safe encoding of a spec (service POST bodies, queue shards)."""
+    d = {
+        "benches": list(spec.benches),
+        "warp_sizes": list(spec.warp_sizes),
+        "simd_width": spec.simd_width,
+        "n_threads": spec.n_threads,
+        "seeds": list(spec.seeds),
+    }
+    if spec.machines is not None:
+        d["machines"] = {name: dataclasses.asdict(cfg)
+                         for name, cfg in spec.machines.items()}
+    return d
+
+
+def spec_from_dict(d: Mapping) -> SweepSpec:
+    """Inverse of :func:`spec_to_dict`.
+
+    Absent (or null) fields take the spec defaults; a *present but empty*
+    ``benches``/``seeds`` list is honored as an empty grid rather than
+    silently widened to the full default suite — an emptied-out client
+    filter must not trigger a 90-cell sweep.
+    """
+    machines = d.get("machines")
+    if machines is not None:
+        machines = {name: MachineConfig(**fields)
+                    for name, fields in machines.items()}
+    benches = d.get("benches")
+    seeds = d.get("seeds")
+    return SweepSpec(
+        benches=tuple(BENCHMARKS) if benches is None else tuple(benches),
+        machines=machines,
+        warp_sizes=tuple(d.get("warp_sizes") or ()),
+        simd_width=d.get("simd_width", 8),
+        n_threads=d.get("n_threads"),
+        seeds=(0,) if seeds is None else tuple(seeds),
+    )
+
+
+def family_major_cells(cells: List[Cell]) -> List[Cell]:
+    """Reorder cells family-major: trace family ``(bench, n_threads,
+    seed)``, then expansion key within the family, preserving first-seen
+    order of both. Consecutive cells then share traces and aggregated
+    streams through the per-process LRUs — the same locality ``run_sweep``
+    engineers for its worker payloads, reused by the sweep service's
+    cell-at-a-time path and the work queue's chunk sharding."""
+    families: "collections.OrderedDict[tuple, collections.OrderedDict]" = (
+        collections.OrderedDict())
+    for cell in cells:
+        _mname, cfg, bench, n_threads, seed = cell
+        fam = families.setdefault((bench, n_threads, seed),
+                                  collections.OrderedDict())
+        fam.setdefault(cfg.expansion_key(), []).append(cell)
+    return [cell for fam in families.values()
+            for group in fam.values() for cell in group]
+
+
 # ---------------------------------------------------------------------------
 # Execution
 # ---------------------------------------------------------------------------
@@ -585,6 +741,26 @@ def _run_group(args: _GroupPayload) -> List[SimResult]:
     return [simulate(wl.name, ops, cfg, engine=engine) for cfg in cfgs]
 
 
+def compute_cell(bench: str, cfg: MachineConfig,
+                 n_threads: Optional[int] = None, seed: int = 0,
+                 engine: str = "auto",
+                 trace_dir: Optional[str] = None) -> SimResult:
+    """Simulate one grid cell through the per-process trace/expansion LRUs.
+
+    The cell-at-a-time sibling of :func:`_run_group`, used by the sweep
+    service and work-queue workers: the stream comes from
+    :data:`EXPANSION_CACHE` (lazily backed by :data:`TRACE_CACHE`, with
+    on-disk trace snapshots under `trace_dir` when given), so callers that
+    walk cells in :func:`family_major_cells` order get the same trace- and
+    expansion-sharing as a grouped sweep.
+    """
+    wl = get_workload(bench, n_threads=n_threads, seed=seed)
+    stream = EXPANSION_CACHE.get(
+        wl, cfg, trace_fn=lambda: TRACE_CACHE.get(wl, root=trace_dir))
+    ops = stream.to_warp_ops() if engine == "event" else stream
+    return simulate(wl.name, ops, cfg, engine=engine)
+
+
 def run_sweep(
     spec: SweepSpec,
     cache: Optional[ResultCache] = None,
@@ -596,7 +772,40 @@ def run_sweep(
     share_traces: bool = True,
     persist_traces: bool = False,
 ) -> Dict[int, Dict[str, Dict[str, SimResult]]] | Dict[str, Dict[str, SimResult]]:
-    """Run a sweep grid; returns ``results[machine][bench] -> SimResult``.
+    """:func:`run_sweep_with_stats` without the stats snapshot.
+
+    Kept as the primary entry point for callers that only want numbers;
+    the per-run counters remain readable through the deprecated
+    :data:`LAST_SWEEP_STATS` alias this call publishes.
+    """
+    results, _stats = run_sweep_with_stats(
+        spec, cache=cache, parallel=parallel, max_workers=max_workers,
+        engine=engine, group_expansion=group_expansion,
+        reuse_expansion=reuse_expansion, share_traces=share_traces,
+        persist_traces=persist_traces)
+    return results
+
+
+def run_sweep_with_stats(
+    spec: SweepSpec,
+    cache: Optional[ResultCache] = None,
+    parallel: Optional[bool] = None,
+    max_workers: Optional[int] = None,
+    engine: str = "auto",
+    group_expansion: bool = True,
+    reuse_expansion: bool = True,
+    share_traces: bool = True,
+    persist_traces: bool = False,
+) -> Tuple[Dict, Dict[str, int]]:
+    """Run a sweep grid; returns ``(results, stats)``.
+
+    ``results[machine][bench] -> SimResult`` as for :func:`run_sweep`;
+    `stats` is this run's private counter snapshot (cells, cache hits and
+    misses counted per cell actually probed by *this* run, grouping and
+    LRU counters). Unlike the :data:`LAST_SWEEP_STATS` global — which
+    concurrent sweeps overwrite — the snapshot is race-free per run; the
+    LRU deltas it carries still read process-wide caches and are
+    approximate when other threads sweep concurrently.
 
     With multiple seeds the result is keyed ``results[seed][machine][bench]``.
     Cached cells are served from `cache`; uncached cells are bucketed by
@@ -624,8 +833,10 @@ def run_sweep(
     cells = spec.cells(machine_set=mset)
     results: Dict[int, Dict[str, Dict[str, SimResult]]] = {
         seed: {} for seed in spec.seeds}
-    cache_hits0 = cache.hits if cache is not None else 0
-    cache_miss0 = cache.misses if cache is not None else 0
+    # Per-run cache counters are tallied locally (one hit xor miss per cell
+    # probed below) instead of diffing the shared instance counters, so
+    # concurrent sweeps against one cache don't bleed into each other.
+    run_cache_hits = 0
     exp_hits0, exp_miss0 = EXPANSION_CACHE.hits, EXPANSION_CACHE.misses
     trc_hits0, trc_miss0 = TRACE_CACHE.hits, TRACE_CACHE.misses
     trc_disk0 = TRACE_CACHE.disk_hits
@@ -636,6 +847,7 @@ def run_sweep(
                if cache is not None else None)
         cached = cache.get(key) if cache is not None else None
         if cached is not None:
+            run_cache_hits += 1
             results[seed].setdefault(mname, {})[bench] = cached
         else:
             todo.append(((mname, cfg, bench, n_threads, seed), key))
@@ -717,11 +929,10 @@ def run_sweep(
             for members, payload in zip(grp_members, payloads):
                 _scatter(members, _run_group(payload))
 
-    LAST_SWEEP_STATS.clear()
-    LAST_SWEEP_STATS.update(
+    stats = dict(
         cells=len(cells),
-        cache_hits=(cache.hits - cache_hits0) if cache is not None else 0,
-        cache_misses=(cache.misses - cache_miss0) if cache is not None else 0,
+        cache_hits=run_cache_hits,
+        cache_misses=len(todo) if cache is not None else 0,
         simulated=len(todo),
         expansion_groups=n_groups,
         expansions_saved=len(todo) - n_groups,
@@ -735,6 +946,9 @@ def run_sweep(
         trace_cache_misses=TRACE_CACHE.misses - trc_miss0,
         trace_disk_hits=TRACE_CACHE.disk_hits - trc_disk0,
     )
+    with _STATS_LOCK:
+        LAST_SWEEP_STATS.clear()
+        LAST_SWEEP_STATS.update(stats)
 
     # Re-impose the spec's machine/bench ordering (cache hits and parallel
     # completion both fill dicts out of order).
@@ -745,5 +959,5 @@ def run_sweep(
             for mname in mset
         }
     if len(spec.seeds) == 1:
-        return ordered[spec.seeds[0]]
-    return ordered
+        return ordered[spec.seeds[0]], stats
+    return ordered, stats

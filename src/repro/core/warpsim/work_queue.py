@@ -1,0 +1,290 @@
+"""Lease-based work queue: shard one sweep across cooperating workers.
+
+The ROADMAP's multi-host open item: ``SweepSpec.cells()`` is a fixed,
+deterministic grid and cell cache keys are host-independent, so *any*
+worker on *any* host can compute *any* cell and the results are exact.
+What was missing is coordination — this module provides it without any new
+dependency:
+
+* :class:`WorkQueue` — splits a cell list into chunks (family-major, via
+  :func:`~repro.core.warpsim.sweep.family_major_cells`, so one chunk's
+  cells share thread traces and aggregated streams inside a worker) and
+  hands them out under *leases*: a chunk not completed before its lease
+  expires is silently requeued and granted to the next worker, so a
+  crashed or wedged worker can never strand part of a sweep. Completions
+  are idempotent and late completions from a presumed-dead worker are
+  accepted (results are deterministic, so double work is wasted effort,
+  never wrong data).
+* :func:`run_worker` — the matching worker loop for the HTTP front-end the
+  sweep service exposes (``/queue/lease`` + ``/queue/complete``): lease a
+  chunk, simulate its cells through the shared trace/expansion LRUs, POST
+  the results back (the server adopts them into its ResultCache — no
+  shared filesystem required), repeat until the job is drained.
+
+``python -m repro.core.warpsim.work_queue --url http://HOST:PORT --job ID``
+runs a worker process against a remote service; start as many as you have
+cores/hosts.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+import threading
+import time
+import urllib.request
+from typing import Dict, List, Optional
+
+from repro.core.warpsim.config import MachineConfig
+from repro.core.warpsim.sweep import (
+    Cell, cell_key, compute_cell, family_major_cells,
+)
+
+_PENDING, _LEASED, _DONE = "pending", "leased", "done"
+
+
+@dataclasses.dataclass
+class Chunk:
+    """One leaseable unit of sweep work (a family-major run of cells)."""
+
+    chunk_id: int
+    cells: List[Cell]
+    state: str = _PENDING
+    worker: Optional[str] = None
+    deadline: float = 0.0
+    attempts: int = 0
+
+
+class WorkQueue:
+    """Sharded, lease-based distribution of one sweep's cells.
+
+    `cells` are reordered family-major and split into chunks of
+    `chunk_size` cells (default: one chunk per trace family boundary
+    rounded to 16 cells, a balance between lease bookkeeping and
+    requeue-on-death granularity). ``lease()`` grants the oldest pending
+    chunk for `lease_seconds`; a worker that neither completes nor
+    ``renew()``-s in time forfeits the chunk to the next ``lease()``
+    caller (``run_worker`` renews between cells, so only a *single cell*
+    slower than the lease — not a slow chunk — can forfeit work).
+    `clock` is injectable for tests (defaults to ``time.monotonic``).
+
+    Thread-safe: one lock guards all state (the sweep service calls this
+    from concurrent request threads).
+    """
+
+    def __init__(self, cells: List[Cell], chunk_size: int = 16,
+                 lease_seconds: float = 60.0, clock=time.monotonic):
+        if chunk_size < 1:
+            raise ValueError("chunk_size must be >= 1")
+        ordered = family_major_cells(list(cells))
+        self.chunks: List[Chunk] = [
+            Chunk(i, ordered[off:off + chunk_size])
+            for i, off in enumerate(range(0, len(ordered), chunk_size))
+        ]
+        self.total_cells = len(ordered)
+        self.lease_seconds = lease_seconds
+        self._clock = clock
+        self._lock = threading.Lock()
+        self.leases_granted = 0
+        self.leases_expired = 0
+        self.stale_completions = 0
+
+    def _reclaim_expired(self, now: float) -> None:
+        for c in self.chunks:
+            if c.state == _LEASED and c.deadline <= now:
+                c.state = _PENDING
+                c.worker = None
+                self.leases_expired += 1
+
+    def lease(self, worker_id: str) -> Optional[Chunk]:
+        """Grant the next pending chunk to `worker_id`, or None if no chunk
+        is currently pending (the job may still have live leases — check
+        :attr:`done` before concluding the sweep is finished)."""
+        with self._lock:
+            now = self._clock()
+            self._reclaim_expired(now)
+            for c in self.chunks:
+                if c.state == _PENDING:
+                    c.state = _LEASED
+                    c.worker = worker_id
+                    c.deadline = now + self.lease_seconds
+                    c.attempts += 1
+                    self.leases_granted += 1
+                    return c
+            return None
+
+    def renew(self, chunk_id: int, worker_id: str) -> bool:
+        """Extend a live lease by another `lease_seconds`.
+
+        False when the chunk is no longer leased to `worker_id` — its
+        lease expired and was (or can be) re-granted, or it was completed
+        — in which case the worker should abandon the chunk rather than
+        race a sibling on it.
+        """
+        with self._lock:
+            if not 0 <= chunk_id < len(self.chunks):
+                return False
+            now = self._clock()
+            self._reclaim_expired(now)
+            c = self.chunks[chunk_id]
+            if c.state != _LEASED or c.worker != worker_id:
+                return False
+            c.deadline = now + self.lease_seconds
+            return True
+
+    def complete(self, chunk_id: int, worker_id: str) -> bool:
+        """Mark a chunk done. Returns False only for an unknown chunk.
+
+        Idempotent, and deliberately accepts completions from a worker
+        whose lease already expired (or was re-granted): its results are
+        byte-identical to any other worker's, so discarding them would
+        only waste the work. ``stale_completions`` counts those arrivals.
+        """
+        with self._lock:
+            if not 0 <= chunk_id < len(self.chunks):
+                return False
+            c = self.chunks[chunk_id]
+            if c.state == _DONE:
+                return True
+            if c.worker != worker_id:
+                self.stale_completions += 1
+            c.state = _DONE
+            c.worker = worker_id
+            if all(ch.state == _DONE for ch in self.chunks):
+                # The job is drained; the cell payloads (config dicts per
+                # cell) are dead weight in a long-lived daemon — drop them
+                # (status() reports total_cells, captured at init).
+                for ch in self.chunks:
+                    ch.cells = []
+            return True
+
+    @property
+    def done(self) -> bool:
+        with self._lock:
+            return all(c.state == _DONE for c in self.chunks)
+
+    def status(self) -> Dict[str, int]:
+        with self._lock:
+            self._reclaim_expired(self._clock())
+            by_state = {_PENDING: 0, _LEASED: 0, _DONE: 0}
+            for c in self.chunks:
+                by_state[c.state] += 1
+            return {
+                "chunks": len(self.chunks),
+                "cells": self.total_cells,
+                "pending": by_state[_PENDING],
+                "leased": by_state[_LEASED],
+                "completed": by_state[_DONE],
+                "leases_granted": self.leases_granted,
+                "leases_expired": self.leases_expired,
+                "stale_completions": self.stale_completions,
+            }
+
+
+# ---------------------------------------------------------------------------
+# Wire encoding (shared by the service handler and the worker loop)
+# ---------------------------------------------------------------------------
+
+
+def cell_to_wire(cell: Cell) -> dict:
+    mname, cfg, bench, n_threads, seed = cell
+    return {"machine": mname, "config": dataclasses.asdict(cfg),
+            "bench": bench, "n_threads": n_threads, "seed": seed}
+
+
+def cell_from_wire(d: dict) -> Cell:
+    return (d["machine"], MachineConfig(**d["config"]), d["bench"],
+            d.get("n_threads"), d.get("seed", 0))
+
+
+# ---------------------------------------------------------------------------
+# HTTP worker loop
+# ---------------------------------------------------------------------------
+
+
+def _http_json(url: str, body: Optional[dict] = None,
+               timeout: float = 60.0) -> dict:
+    data = json.dumps(body).encode() if body is not None else None
+    req = urllib.request.Request(
+        url, data=data,
+        headers={"Content-Type": "application/json"} if data else {})
+    with urllib.request.urlopen(req, timeout=timeout) as resp:
+        return json.loads(resp.read().decode())
+
+
+def run_worker(base_url: str, job: str, worker_id: Optional[str] = None,
+               engine: str = "auto", poll_seconds: float = 0.5,
+               max_chunks: Optional[int] = None,
+               timeout: float = 300.0) -> int:
+    """Drain chunks of `job` from a sweep service until it is done.
+
+    Computes every leased cell locally (through the per-process
+    trace/expansion LRUs — chunks are family-major, so one chunk usually
+    needs a single thread trace) and POSTs the results back for the
+    server to adopt into its cache. Returns the number of cells computed.
+    `max_chunks` bounds the number of chunks processed (tests use it to
+    simulate a worker dying mid-job).
+    """
+    base = base_url.rstrip("/")
+    wid = worker_id or f"{os.uname().nodename}:{os.getpid()}"
+    computed = 0
+    chunks_done = 0
+    while True:
+        if max_chunks is not None and chunks_done >= max_chunks:
+            return computed
+        got = _http_json(
+            f"{base}/queue/lease?job={job}&worker={wid}", timeout=timeout)
+        if got.get("chunk") is None:
+            if got.get("done"):
+                return computed
+            time.sleep(poll_seconds)    # live leases elsewhere: wait them out
+            continue
+        results = []
+        abandoned = False
+        cells = got["cells"]
+        for i, wire in enumerate(cells):
+            mname, cfg, bench, n_threads, seed = cell_from_wire(wire)
+            res = compute_cell(bench, cfg, n_threads=n_threads, seed=seed,
+                               engine=engine)
+            results.append({
+                "key": cell_key(bench, cfg, n_threads, seed),
+                "result": dataclasses.asdict(res),
+            })
+            computed += 1
+            if i + 1 < len(cells):
+                # Heartbeat between cells so a slow chunk keeps its lease
+                # (only a single cell slower than the lease can forfeit).
+                renewed = _http_json(
+                    f"{base}/queue/renew?job={job}"
+                    f"&chunk={got['chunk']}&worker={wid}", timeout=timeout)
+                if not renewed.get("ok"):
+                    abandoned = True    # lease lost: someone else owns it
+                    break
+        if not abandoned:
+            _http_json(f"{base}/queue/complete", {
+                "job": job, "chunk": got["chunk"], "worker": wid,
+                "results": results,
+            }, timeout=timeout)
+        chunks_done += 1
+
+
+def main(argv: Optional[List[str]] = None) -> None:
+    ap = argparse.ArgumentParser(
+        description="warpsim sweep worker: drain a job from a sweep service")
+    ap.add_argument("--url", required=True,
+                    help="service base URL, e.g. http://127.0.0.1:8321")
+    ap.add_argument("--job", required=True, help="job id from POST /sweep")
+    ap.add_argument("--worker-id", default=None)
+    ap.add_argument("--engine", default="auto")
+    ap.add_argument("--poll-seconds", type=float, default=0.5)
+    args = ap.parse_args(argv)
+    n = run_worker(args.url, args.job, worker_id=args.worker_id,
+                   engine=args.engine, poll_seconds=args.poll_seconds)
+    print(f"worker drained: {n} cells computed", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

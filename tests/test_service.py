@@ -1,0 +1,490 @@
+"""Sweep service + work queue tests: in-flight dedup, HTTP endpoints,
+lease/requeue semantics, cross-instance cache adoption, native-engine
+health reporting."""
+
+import dataclasses
+import json
+import threading
+import time
+import urllib.error
+import urllib.request
+import warnings
+
+import pytest
+
+from repro.core.warpsim import _native, machines, runner
+from repro.core.warpsim import service as service_mod
+from repro.core.warpsim import sweep as sweep_mod
+from repro.core.warpsim import work_queue as wq_mod
+from repro.core.warpsim.config import MachineConfig
+from repro.core.warpsim.service import (
+    SweepClient, SweepService, resolve_machine, serve,
+)
+from repro.core.warpsim.sweep import (
+    ResultCache, SweepSpec, cell_key, family_major_cells, run_sweep,
+)
+from repro.core.warpsim.work_queue import WorkQueue, run_worker
+
+SMALL = dict(benches=("BFS", "DYN"), n_threads=128)
+
+
+def _spec(**kw):
+    base = dict(machines={"ws8": machines.baseline(8),
+                          "SW+": machines.sw_plus()}, **SMALL)
+    base.update(kw)
+    return SweepSpec(**base)
+
+
+def _wait(predicate, timeout=10.0):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if predicate():
+            return True
+        time.sleep(0.005)
+    return False
+
+
+@pytest.fixture()
+def live(tmp_path):
+    """A SweepService bound to an ephemeral HTTP port."""
+    svc = SweepService(str(tmp_path / "cache"), lease_seconds=30.0)
+    httpd = serve(svc)
+    thread = threading.Thread(target=httpd.serve_forever, daemon=True)
+    thread.start()
+    url = "http://%s:%d" % httpd.server_address[:2]
+    try:
+        yield svc, url
+    finally:
+        httpd.shutdown()
+        httpd.server_close()
+
+
+# ------------------------------------------------------- in-flight dedup
+
+def test_concurrent_cold_requests_simulate_once(tmp_path, monkeypatch):
+    """Two clients asking for the same uncomputed cell -> one simulation.
+
+    The owner is held inside compute_cell until the second requester has
+    demonstrably parked on the in-flight future, so the overlap the dedup
+    table exists for is exercised deterministically, not by timing luck.
+    """
+    svc = SweepService(str(tmp_path), persist_traces=False)
+    release = threading.Event()
+    orig_compute = service_mod.compute_cell
+    calls = []
+
+    def slow_compute(*args, **kwargs):
+        calls.append(threading.current_thread().name)
+        assert release.wait(10)
+        return orig_compute(*args, **kwargs)
+
+    monkeypatch.setattr(service_mod, "compute_cell", slow_compute)
+    cfg = machines.baseline(8)
+    results = {}
+
+    def request(tag):
+        results[tag] = svc.cell_with_source("DYN", cfg, 128, 0)
+
+    t1 = threading.Thread(target=request, args=("a",), name="req-a")
+    t1.start()
+    assert _wait(lambda: calls)                 # owner entered the compute
+    t2 = threading.Thread(target=request, args=("b",), name="req-b")
+    t2.start()
+    assert _wait(lambda: svc.counters["dedup_waits"] == 1)
+    release.set()
+    t1.join(10)
+    t2.join(10)
+
+    assert len(calls) == 1                      # exactly one simulation
+    assert svc.counters["simulated"] == 1
+    assert svc.counters["dedup_waits"] == 1
+    assert sorted(src for _, src in results.values()) == [
+        "dedup", "simulated"]
+    (res_a, _), (res_b, _) = results["a"], results["b"]
+    assert dataclasses.asdict(res_a) == dataclasses.asdict(res_b)
+    # A third request is a plain cache hit — no future, no simulation.
+    res_c, src_c = svc.cell_with_source("DYN", cfg, 128, 0)
+    assert src_c == "cache" and svc.counters["simulated"] == 1
+    assert dataclasses.asdict(res_c) == dataclasses.asdict(res_a)
+
+
+def test_cell_counts_one_miss_per_cold_cell(tmp_path):
+    """Regression: the under-lock cache re-probe must not double-count
+    the optimistic probe's miss (it skewed /stats hit rates ~2x low)."""
+    svc = SweepService(str(tmp_path), persist_traces=False)
+    svc.cell("DYN", machines.baseline(8), 128, 0)
+    assert svc.cache.misses == 1 and svc.cache.hits == 0
+    svc.cell("DYN", machines.baseline(8), 128, 0)
+    assert svc.cache.misses == 1 and svc.cache.hits == 1
+
+
+def test_sweep_empty_spec_is_empty_not_default_suite(live):
+    """Regression: POST /sweep with explicit empty benches/seeds must run
+    zero cells, not silently widen to the full default suite."""
+    _svc, url = live
+    client = SweepClient(url)
+    res = client.sweep(SweepSpec(benches=(),
+                                 machines={"ws8": machines.baseline(8)}))
+    assert client.last_stats["cells"] == 0 and client.last_stats["simulated"] == 0
+    assert all(per_b == {} for per_b in res.values())
+    from repro.core.warpsim.sweep import spec_from_dict
+    assert spec_from_dict({"benches": []}).cells() == []
+    assert spec_from_dict({"seeds": []}).cells() == []
+    assert len(spec_from_dict({}).benches) == 15    # absent -> defaults
+
+
+def test_cell_after_sweep_is_cache_hit(tmp_path):
+    svc = SweepService(str(tmp_path), persist_traces=False)
+    spec = _spec()
+    _res, stats = svc.sweep(spec)
+    assert stats["simulated"] == len(spec.cells())
+    res, src = svc.cell_with_source("BFS", machines.sw_plus(), 128, 0)
+    assert src == "cache" and res.cycles > 0
+    # Warm re-sweep: zero simulations, zero cache misses.
+    _res, warm = svc.sweep(spec)
+    assert warm["simulated"] == 0 and warm["cache_misses"] == 0
+    assert warm["cache_hits"] == len(spec.cells())
+
+
+# ---------------------------------------------------------- HTTP surface
+
+def test_http_healthz_reports_live_engine(live):
+    _svc, url = live
+    with urllib.request.urlopen(url + "/healthz", timeout=10) as resp:
+        h = json.loads(resp.read())
+    assert h["ok"] is True and h["model"] == sweep_mod.MODEL_VERSION
+    native = h["native"]
+    assert set(native) >= {"enabled", "loaded", "attempted", "error",
+                           "engine"}
+    # healthz resolves "auto" to whichever engine is actually live.
+    assert h["engine"] == ("native" if native["engine"] == "native"
+                           else "fast")
+
+
+def test_http_cell_matches_in_process(live):
+    _svc, url = live
+    client = SweepClient(url)
+    got = client.cell("BFS", machine="SW+", n_threads=128, seed=0)
+    ref = runner.run_one("BFS", machines.sw_plus(), n_threads=128, seed=0)
+    assert dataclasses.asdict(got) == dataclasses.asdict(ref)
+
+
+def test_http_cell_field_overrides(live):
+    _svc, url = live
+    client = SweepClient(url)
+    base = client.cell("DYN", machine="ws32", n_threads=128)
+    tweaked = client.cell("DYN", machine="ws32", n_threads=128,
+                          dram_latency_cycles=40, mimd="true")
+    assert tweaked.cycles != base.cycles
+    # Overrides relabel the machine "custom" (the result's machine column
+    # must not claim ws32 for a non-ws32 point); otherwise bit-identical.
+    ref = runner.run_one(
+        "DYN", dataclasses.replace(machines.baseline(32), name="custom",
+                                   dram_latency_cycles=40, mimd=True),
+        n_threads=128)
+    assert dataclasses.asdict(tweaked) == dataclasses.asdict(ref)
+
+
+def test_http_errors(live):
+    _svc, url = live
+    with pytest.raises(urllib.error.HTTPError) as e:
+        urllib.request.urlopen(url + "/cell?bench=BFS&machine=nope",
+                               timeout=10)
+    assert e.value.code == 400
+    with pytest.raises(urllib.error.HTTPError) as e:
+        urllib.request.urlopen(url + "/cell", timeout=10)  # missing bench
+    assert e.value.code == 400
+    with pytest.raises(urllib.error.HTTPError) as e:
+        urllib.request.urlopen(url + "/nope", timeout=10)
+    assert e.value.code == 404
+
+
+def test_http_sweep_matches_run_sweep(live):
+    _svc, url = live
+    client = SweepClient(url)
+    spec = _spec()
+    got = client.sweep(spec)
+    assert client.last_stats["simulated"] == len(spec.cells())
+    ref = run_sweep(spec, parallel=False)
+    assert list(got) == list(ref)
+    for m in ref:
+        assert list(got[m]) == list(ref[m])
+        for b in ref[m]:
+            assert (dataclasses.asdict(got[m][b])
+                    == dataclasses.asdict(ref[m][b]))
+    # Warm: the service's stats snapshot reports zero re-simulation.
+    client.sweep(spec)
+    assert client.last_stats["simulated"] == 0
+    assert client.last_stats["cache_misses"] == 0
+
+
+def test_http_multi_seed_shape_and_runner_delegation(live):
+    _svc, url = live
+    spec = _spec(benches=("BFS",), seeds=(0, 1))
+    got = SweepClient(url).sweep(spec)
+    assert set(got) == {0, 1}           # seed keys decoded back to ints
+    assert got[0]["ws8"]["BFS"].cycles != got[1]["ws8"]["BFS"].cycles
+    # runner.run_suite(service_url=...) is the drop-in remote path.
+    via_runner = runner.run_suite(
+        machine_set={"ws8": machines.baseline(8)}, benches=("BFS",),
+        n_threads=128, service_url=url)
+    assert (dataclasses.asdict(via_runner["ws8"]["BFS"])
+            == dataclasses.asdict(got[0]["ws8"]["BFS"]))
+
+
+def test_stats_endpoint_counts_external_cache_writes(live, tmp_path):
+    svc, url = live
+    client = SweepClient(url)
+    assert client.stats()["result_cache"]["entries"] == 0
+    # Another "worker" writes into the same directory behind the daemon's
+    # back; /stats re-scans (ResultCache.refresh) and reports it, and the
+    # daemon serves it as a hit instead of re-simulating (adoption).
+    spec = _spec(benches=("DYN",))
+    run_sweep(spec, cache=ResultCache(svc.cache.root), parallel=False)
+    assert client.stats()["result_cache"]["entries"] == len(spec.cells())
+    _res, stats = svc.sweep(spec)
+    assert stats["simulated"] == 0 and stats["cache_hits"] == len(spec.cells())
+
+
+def test_from_env_probe_and_fallback(live, monkeypatch):
+    _svc, url = live
+    monkeypatch.delenv("WARPSIM_SERVICE_URL", raising=False)
+    assert service_mod.from_env() is None
+    monkeypatch.setenv("WARPSIM_SERVICE_URL", url)
+    client = service_mod.from_env()
+    assert client is not None and client.healthz()["ok"] is True
+    # A dead service degrades to None with a warning, not a failure.
+    monkeypatch.setenv("WARPSIM_SERVICE_URL", "http://127.0.0.1:9")
+    with pytest.warns(RuntimeWarning, match="unreachable"):
+        assert service_mod.from_env() is None
+
+
+def test_resolve_machine_params():
+    assert resolve_machine({"machine": "SW+"}) == machines.sw_plus()
+    assert resolve_machine({"machine": "ws64"}) == machines.baseline(64)
+    assert (resolve_machine({"machine": "ws32", "simd_width": "16"})
+            == machines.baseline(32, 16))
+    cfg = resolve_machine({"warp_size": "16", "mimd": "1",
+                           "dram_bw_gbps": "100.0"})
+    assert cfg == dataclasses.replace(MachineConfig(), name="custom",
+                                      warp_size=16, mimd=True,
+                                      dram_bw_gbps=100.0)
+    # A preset's display name must not survive onto a config it no longer
+    # describes (it is part of the cell cache key and the /cell label).
+    assert resolve_machine({"machine": "ws32", "warp_size": "64"}).name == \
+        "custom"
+    assert resolve_machine({"machine": "ws32", "warp_size": "64",
+                            "name": "mine"}).name == "mine"
+    with pytest.raises(ValueError):
+        resolve_machine({"machine": "warp9000"})
+    with pytest.raises(ValueError):
+        resolve_machine({"mimd": "maybe"})
+
+
+# ------------------------------------------------------------ work queue
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def _cells(spec):
+    return spec.cells()
+
+
+def test_family_major_cells_groups_families():
+    spec = _spec(benches=("BFS", "DYN"),
+                 machines={"ws8": machines.baseline(8),
+                           "ws16": machines.baseline(16),
+                           "SW+": machines.sw_plus()})
+    ordered = family_major_cells(spec.cells())
+    assert sorted(map(repr, ordered)) == sorted(map(repr, spec.cells()))
+    fams = [(b, nt, s) for _, _, b, nt, s in ordered]
+    # Each family is one contiguous run ...
+    positions = {}
+    for i, f in enumerate(fams):
+        positions.setdefault(f, []).append(i)
+    assert len(positions) == 2
+    for f, idx in positions.items():
+        assert idx == list(range(idx[0], idx[-1] + 1)), f
+    # ... and within a family, shared expansion keys are adjacent
+    # (ws8 and SW+ collide; ws16 does not).
+    first_fam = ordered[:3]
+    assert {c[0] for c in first_fam[:2]} == {"ws8", "SW+"}
+    assert first_fam[2][0] == "ws16"
+
+
+def test_work_queue_lease_complete_drain():
+    clock = FakeClock()
+    q = WorkQueue(_cells(_spec()), chunk_size=1, lease_seconds=10,
+                  clock=clock)
+    assert q.status()["chunks"] == 4 and not q.done
+    seen = []
+    while True:
+        chunk = q.lease("w1")
+        if chunk is None:
+            break
+        seen.extend(chunk.cells)
+        assert q.complete(chunk.chunk_id, "w1")
+    assert q.done and len(seen) == 4
+    assert q.status()["completed"] == 4
+    assert q.complete(0, "w1")          # idempotent
+    assert not q.complete(99, "w1")     # unknown chunk
+
+
+def test_work_queue_requeues_on_worker_death():
+    clock = FakeClock()
+    q = WorkQueue(_cells(_spec(benches=("BFS",))), chunk_size=1,
+                  lease_seconds=10, clock=clock)
+    dead = q.lease("w-dead")            # leases chunk 0, then dies
+    assert dead.chunk_id == 0
+    # Before expiry the chunk is not re-granted — w2 gets the next one.
+    nxt = q.lease("w2")
+    assert nxt.chunk_id == 1
+    assert q.lease("w2") is None and not q.done
+    q.complete(1, "w2")
+    # After the lease expires the dead worker's chunk is re-granted.
+    clock.t = 11.0
+    reclaimed = q.lease("w2")
+    assert reclaimed.chunk_id == 0 and reclaimed.attempts == 2
+    assert q.status()["leases_expired"] == 1
+    q.complete(0, "w2")
+    assert q.done
+    # A late completion from the presumed-dead worker is accepted
+    # (deterministic results) and counted, never an error.
+    assert q.complete(0, "w-dead")
+    assert q.status()["stale_completions"] == 0  # already done: no-op
+
+
+def test_work_queue_renew_keeps_slow_chunk():
+    """A renewing worker holds its lease past the nominal expiry; a
+    worker whose lease lapsed gets renew() == False and must abandon."""
+    clock = FakeClock()
+    q = WorkQueue(_cells(_spec(benches=("BFS",))), chunk_size=1,
+                  lease_seconds=10, clock=clock)
+    slow = q.lease("w-slow")
+    clock.t = 8.0
+    assert q.renew(slow.chunk_id, "w-slow")     # extends to t=18
+    clock.t = 15.0
+    assert q.lease("w2").chunk_id != slow.chunk_id  # still held
+    clock.t = 19.0                              # renewed lease lapsed now
+    reclaimed = q.lease("w2")
+    assert reclaimed.chunk_id == slow.chunk_id
+    assert not q.renew(slow.chunk_id, "w-slow")     # lost: abandon signal
+    assert q.renew(slow.chunk_id, "w2")
+    assert not q.renew(99, "w2")                    # unknown chunk
+
+
+def test_work_queue_compacts_after_drain():
+    q = WorkQueue(_cells(_spec(benches=("BFS",))), chunk_size=2,
+                  lease_seconds=10, clock=FakeClock())
+    chunk = q.lease("w1")
+    assert len(chunk.cells) == 2
+    q.complete(chunk.chunk_id, "w1")
+    assert q.done
+    # Payloads are dropped once drained (daemon memory), but status still
+    # reports the job's true size.
+    assert q.chunks[0].cells == []
+    assert q.status()["cells"] == 2
+
+
+def test_work_queue_stale_completion_counted():
+    clock = FakeClock()
+    q = WorkQueue(_cells(_spec(benches=("BFS",))), chunk_size=2,
+                  lease_seconds=10, clock=clock)
+    first = q.lease("w1")
+    clock.t = 11.0
+    again = q.lease("w2")               # re-granted after expiry
+    assert again.chunk_id == first.chunk_id
+    assert q.complete(first.chunk_id, "w1")   # the "dead" worker returns
+    assert q.status()["stale_completions"] == 1
+    assert q.done
+
+
+def test_queue_end_to_end_with_worker_death(live):
+    """Two workers drain one job over HTTP; one leases a chunk and dies.
+
+    The lease expires, the surviving worker picks the chunk up, and the
+    job finishes with every cell adopted into the service cache — a sweep
+    afterwards is 100% cache hits.
+    """
+    svc, url = live
+    spec = _spec()
+    client = SweepClient(url)
+    job = client.enqueue(spec, chunk_size=1, lease_seconds=0.3)
+    assert job["chunks"] == 4 and job["cells"] == len(spec.cells())
+
+    # Worker that leases one chunk and never completes it.
+    with urllib.request.urlopen(
+            url + f"/queue/lease?job={job['job']}&worker=w-dead",
+            timeout=10) as resp:
+        dead_lease = json.loads(resp.read())
+    assert dead_lease["chunk"] is not None
+
+    n = run_worker(url, job["job"], worker_id="w-live", poll_seconds=0.05)
+    assert n == len(spec.cells())       # the survivor computed everything
+    status = client.queue_status(job["job"])
+    assert status["completed"] == 4 and status["leases_expired"] >= 1
+
+    _res, stats = svc.sweep(spec)
+    assert stats["simulated"] == 0
+    assert stats["cache_hits"] == len(spec.cells())
+    assert svc.counters["queue_cells_adopted"] == len(spec.cells())
+
+
+def test_enqueue_evicts_old_jobs(tmp_path):
+    """Neither finished nor abandoned jobs may accumulate without bound
+    in a long-lived daemon."""
+    svc = SweepService(str(tmp_path), persist_traces=False)
+    empty = SweepSpec(benches=(), machines={"ws8": machines.baseline(8)})
+    for _ in range(SweepService.MAX_FINISHED_JOBS + 20):
+        svc.enqueue(empty)              # zero cells -> done immediately
+    assert len(svc._jobs) <= SweepService.MAX_FINISHED_JOBS + 1
+    # Live (undrained) jobs survive until the hard MAX_JOBS ceiling.
+    live_spec = _spec(benches=("BFS",))
+    for _ in range(SweepService.MAX_JOBS + 10):
+        svc.enqueue(live_spec)
+    assert len(svc._jobs) <= SweepService.MAX_JOBS
+
+
+# ------------------------------------------------------- native reporting
+
+def test_native_status_rereads_env(monkeypatch):
+    st = _native.status()
+    assert {"enabled", "loaded", "attempted", "error", "engine"} <= set(st)
+    monkeypatch.setenv("WARPSIM_NATIVE", "0")
+    off = _native.status()
+    assert off["enabled"] is False and off["engine"] == "python"
+    assert _native.available() is False   # the load gate re-reads too
+    monkeypatch.delenv("WARPSIM_NATIVE")
+    assert _native.status()["enabled"] is True
+
+
+def test_native_failed_compile_warns_once_with_diagnostic(
+        monkeypatch, tmp_path):
+    """Regression: a failed compile used to be cached silently for the
+    life of the process; it must surface the compiler error once."""
+    monkeypatch.setattr(_native, "_lib", None)
+    monkeypatch.setattr(_native, "_load_attempted", False)
+    monkeypatch.setattr(_native, "_load_error", None)
+    monkeypatch.setattr(_native, "_warned", False)
+    monkeypatch.setenv("WARPSIM_NATIVE_DIR", str(tmp_path / "build"))
+    monkeypatch.delenv("WARPSIM_NATIVE", raising=False)
+
+    def broken_compiler(cmd, **kwargs):
+        raise FileNotFoundError(f"{cmd[0]}: simulated missing compiler")
+
+    monkeypatch.setattr(_native.subprocess, "run", broken_compiler)
+    with pytest.warns(RuntimeWarning, match="native core unavailable"):
+        assert _native.available() is False
+    st = _native.status()
+    assert st["loaded"] is False and st["attempted"] is True
+    assert "simulated missing compiler" in st["error"]
+    assert st["engine"] == "python"
+    # The failure result stays cached, but the warning fires only once.
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert _native.available() is False

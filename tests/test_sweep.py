@@ -1,10 +1,15 @@
 """Sweep engine unit tests: cache keys, hit/miss, corruption recovery,
-spec enumeration, and serial/parallel equivalence."""
+spec enumeration, serial/parallel equivalence, and the concurrency-safety
+contracts of the cache stack (stale-index adoption, atomic trace
+persistence, locked LRUs, per-run stats snapshots)."""
 
 import dataclasses
+import io
 import json
 import os
+import threading
 
+import numpy as np
 import pytest
 
 from repro.core.warpsim import machines
@@ -12,6 +17,7 @@ from repro.core.warpsim import sweep as sweep_mod
 from repro.core.warpsim.config import MachineConfig
 from repro.core.warpsim.sweep import (
     ResultCache, SweepSpec, cell_key, machine_key, run_sweep,
+    run_sweep_with_stats,
 )
 
 SMALL = dict(benches=("BFS", "BKP", "DYN"), n_threads=256)
@@ -470,3 +476,182 @@ def test_sweep_persist_traces_writes_beside_result_cache(tmp_path):
     assert sorted(f.name for f in tmp_path.iterdir() if f.is_dir()) == [
         "traces"]
     del ref
+
+
+# ------------------------------------------- cross-process index adoption
+
+def test_result_cache_sees_external_writes(tmp_path):
+    """Regression: the one-shot scandir index must not turn cells written
+    by *other* processes after startup into permanent misses.
+
+    A long-lived reader (service, queue worker) and a writer are stood in
+    for by two instances over one directory: the reader snapshots its
+    index first, the writer persists a cell afterwards, and the reader
+    must serve it (fallback existence probe + adoption), not re-simulate.
+    """
+    spec = _spec(benches=("DYN",))
+    (mname, cfg, bench, n_threads, seed) = spec.cells()[0]
+    key = cell_key(bench, cfg, n_threads, seed)
+
+    reader = ResultCache(str(tmp_path))
+    assert reader.get(key) is None          # forces the index snapshot
+    writer = ResultCache(str(tmp_path))     # the "other worker"
+    ref = run_sweep(spec, cache=writer, parallel=False)
+
+    got = reader.get(key)
+    assert got is not None, "externally written cell must be adopted"
+    assert reader.adopted >= 1
+    assert (dataclasses.asdict(got)
+            == dataclasses.asdict(ref[mname][bench]))
+    # Adopted entries are indexed: the next probe is a plain index hit.
+    adopted0 = reader.adopted
+    assert reader.get(key) is not None and reader.adopted == adopted0
+
+
+def test_result_cache_contains_and_refresh(tmp_path):
+    spec = _spec(benches=("DYN",))
+    cells = spec.cells()
+    keys = [cell_key(b, c, nt, s) for _, c, b, nt, s in cells]
+
+    reader = ResultCache(str(tmp_path))
+    assert not reader.contains(keys[0]) and reader.misses == 0
+    assert reader.count() == 0
+    run_sweep(spec, cache=ResultCache(str(tmp_path)), parallel=False)
+    # refresh() re-scans wholesale (the service /stats path) ...
+    assert reader.refresh() == len(cells)
+    # ... and contains() answers without touching hit/miss counters.
+    assert all(reader.contains(k) for k in keys)
+    assert reader.hits == reader.misses == 0
+
+
+# --------------------------------------------- atomic trace persistence
+
+def test_trace_store_concurrent_writers_publish_complete_snapshots(
+        tmp_path, monkeypatch):
+    """Regression: two same-process writers persisting one trace family
+    must never publish a torn ``.npz``.
+
+    The pre-fix code derived the tmp name from the pid alone, so two
+    *threads* (the sweep service) shared one tmp file: the orchestration
+    below holds writer A between its completed write and its atomic
+    rename while writer B re-opens and half-fills "A's" tmp file — with a
+    shared name, A then publishes B's torn prefix. With per-writer tmp
+    files (mkstemp) every published snapshot is complete at all times.
+    """
+    from repro.core.warpsim.sweep import TraceCache, _TRACE_FIELDS
+    from repro.core.warpsim.trace import get_workload
+    from repro.core.warpsim.divergence import build_thread_trace
+
+    root = str(tmp_path / "traces")
+    wl = get_workload("DYN", n_threads=128)
+    trace = build_thread_trace(wl)
+    cache = TraceCache()
+    path = cache._path(wl, root)
+
+    a_ready = threading.Event()       # A wrote + closed, about to rename
+    b_half = threading.Event()        # B flushed a partial write
+    published = threading.Event()     # A's rename happened
+    reader_done = threading.Event()   # main thread inspected the file
+
+    orig_savez, orig_replace = np.savez, os.replace
+
+    def savez(f, **arrays):
+        if threading.current_thread().name == "writer-b":
+            buf = io.BytesIO()
+            orig_savez(buf, **arrays)
+            data = buf.getvalue()
+            f.write(data[:100])
+            f.flush()
+            b_half.set()
+            assert reader_done.wait(10)
+            f.write(data[100:])
+        else:
+            orig_savez(f, **arrays)
+
+    def replace(src, dst):
+        if threading.current_thread().name == "writer-a":
+            a_ready.set()
+            assert b_half.wait(10)
+            orig_replace(src, dst)
+            published.set()
+        else:
+            orig_replace(src, dst)
+
+    monkeypatch.setattr(np, "savez", savez)
+    monkeypatch.setattr(os, "replace", replace)
+
+    ta = threading.Thread(target=cache._store, args=(wl, root, trace),
+                          name="writer-a")
+    ta.start()
+    assert a_ready.wait(10)
+    tb = threading.Thread(target=cache._store, args=(wl, root, trace),
+                          name="writer-b")
+    tb.start()
+    assert published.wait(10)
+    try:
+        with np.load(path) as data:
+            assert set(data.files) == set(_TRACE_FIELDS)
+    finally:
+        reader_done.set()
+        ta.join(10)
+        tb.join(10)
+
+
+# -------------------------------------------------- per-run stats snapshot
+
+def test_run_sweep_with_stats_snapshot(tmp_path):
+    spec = _spec(benches=("DYN",))
+    res, stats = run_sweep_with_stats(
+        spec, cache=ResultCache(str(tmp_path)), parallel=False)
+    assert res["SW+"]["DYN"].cycles > 0
+    assert stats["cells"] == 2 and stats["simulated"] == 2
+    assert stats["cache_hits"] == 0 and stats["cache_misses"] == 2
+    # The deprecated global alias carries the same numbers ...
+    assert dict(sweep_mod.LAST_SWEEP_STATS) == stats
+    # ... but the snapshot is private: a later sweep rewrites the global
+    # while earlier callers' dicts are untouched.
+    first = stats
+    _res2, stats2 = run_sweep_with_stats(
+        spec, cache=ResultCache(str(tmp_path)), parallel=False)
+    assert stats2["cache_hits"] == 2 and stats2["simulated"] == 0
+    assert first["simulated"] == 2
+    assert dict(sweep_mod.LAST_SWEEP_STATS) == stats2
+
+
+# ------------------------------------------------------- locked LRU smoke
+
+@pytest.mark.parametrize("cache_cls", ["expansion", "trace"])
+def test_lru_caches_thread_safe_under_contention(cache_cls):
+    """Hammer one LRU from many threads; pre-fix the unlocked OrderedDict
+    interleavings corrupt recency state (KeyError from move_to_end racing
+    popitem) and overshoot maxsize."""
+    from repro.core.warpsim.sweep import ExpansionCache, TraceCache
+    from repro.core.warpsim.trace import get_workload
+
+    wls = [get_workload(b, n_threads=128)
+           for b in ("BFS", "BKP", "DYN", "MTM", "NQU")]
+    if cache_cls == "expansion":
+        lru = ExpansionCache(maxsize=2)
+        cfg = machines.baseline(8)
+        probe = lambda wl: lru.get(wl, cfg)             # noqa: E731
+    else:
+        lru = TraceCache(maxsize=2)
+        probe = lambda wl: lru.get(wl)                  # noqa: E731
+    for wl in wls:                                      # pre-warm builds
+        probe(wl)
+    errors = []
+
+    def worker(i):
+        try:
+            for j in range(100):
+                probe(wls[(i + j) % len(wls)])
+        except Exception as e:        # noqa: BLE001 — the assertion target
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(30)
+    assert errors == []
+    assert len(lru) <= 2
