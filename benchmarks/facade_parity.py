@@ -1,0 +1,90 @@
+"""Facade-parity smoke: the three api backends return bit-identical records.
+
+The CI `facade-parity` job's driver (also runnable locally). One quick
+grid (2 benches x 3 machines x 2 seeds, 128 threads) is executed through
+every :class:`repro.core.warpsim.api.Backend` implementation:
+
+1. ``QueueBackend`` against a freshly booted daemon — the grid is sharded
+   onto the lease-based work queue and drained by this process acting as
+   a worker (asserted to have actually computed cells: the daemon is
+   cold);
+2. ``ServiceBackend`` against the same daemon — asserted to be served
+   entirely from the daemon's cache (zero new simulations);
+3. ``InProcessBackend`` in a fresh :class:`~repro.core.warpsim.api.Session`
+   over a throwaway cache dir — a cold local run with session-owned LRUs.
+
+Every :class:`~repro.core.warpsim.api.RunRecord` — coordinates and every
+``SimResult`` field — must be identical across the three. Results are
+deterministic and content-addressed, so *where* a cell was computed can
+never change *what* it is; this driver enforces that contract end to end
+over HTTP, the queue wire format, and the in-process path at once.
+
+Exit code 0 iff every assertion holds.
+
+  PYTHONPATH=src python -m benchmarks.facade_parity
+"""
+
+from __future__ import annotations
+
+import tempfile
+
+from benchmarks.service_smoke import _get, boot_daemon
+
+
+def main(argv=None) -> None:
+    from repro.core.warpsim import api, machines
+
+    study = api.Study(
+        benches=("BFS", "DYN"),
+        machines={"ws8": machines.baseline(8), "SW+": machines.sw_plus(),
+                  "ws16": machines.baseline(16)},
+        n_threads=128, seeds=(0, 1))
+    n_cells = len(study.cells())
+
+    cache_dir = tempfile.mkdtemp(prefix="warpsim-facade-parity-")
+    with boot_daemon(cache_dir) as url:
+        print(f"facade-parity: daemon at {url}, grid of {n_cells} cells")
+
+        # 1. Queue backend against the cold daemon: this process drains
+        # the job as a worker, so it must have computed real cells.
+        queue_res = api.Session(
+            backend=api.QueueBackend(url, chunk_size=2)).run(study)
+        assert len(queue_res.records) == n_cells, queue_res.stats
+        assert queue_res.stats["queue_cells_computed"] == n_cells, \
+            queue_res.stats
+        print(f"facade-parity: queue backend drained "
+              f"{queue_res.stats['queue_cells_computed']} cells "
+              f"(job {queue_res.stats['queue_job']})")
+
+        # 2. Service backend, warm daemon: zero new simulations.
+        sim_before = _get(url + "/stats")["counters"]["simulated"]
+        service_res = api.Session(
+            backend=api.ServiceBackend(url)).run(study)
+        sim_after = _get(url + "/stats")["counters"]["simulated"]
+        assert len(service_res.records) == n_cells
+        assert sim_after == sim_before, (
+            f"service pass re-simulated {sim_after - sim_before} cells "
+            f"after the queue drain")
+        print("facade-parity: service backend served the grid from cache")
+
+        # 3. In-process backend, fresh session + throwaway cache: a cold
+        # local run through the session-owned LRUs.
+        local_dir = tempfile.mkdtemp(prefix="warpsim-facade-local-")
+        local = api.Session(cache_dir=local_dir)
+        inproc_res = local.run(study)
+        assert inproc_res.stats["simulated"] == n_cells, inproc_res.stats
+        print(f"facade-parity: in-process backend simulated "
+              f"{inproc_res.stats['simulated']} cells")
+
+        # The contract: bit-identical records, in the same order.
+        wires = {res.backend: [r.to_wire() for r in res.records]
+                 for res in (queue_res, service_res, inproc_res)}
+        assert wires["queue"] == wires["service"] == wires["inprocess"], \
+            "backends disagree on records"
+        print(f"facade-parity: {n_cells} records bit-identical across "
+              f"queue / service / inprocess")
+        print("facade-parity OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -5,10 +5,13 @@ where `us_per_call` is the simulator wall time for the cell and `derived`
 is the figure's metric (normalized performance / coalescing rate / idle
 share). Figure data is also dumped to benchmarks/results/.
 
-With ``WARPSIM_SERVICE_URL`` set, all grids are fetched from that running
-sweep service (``repro.core.warpsim.service``) so figure generation never
-re-simulates anything any process has already computed; otherwise sweeps
-run in-process against the shared on-disk cache below.
+All grids run through one ``repro.core.warpsim.api.Session`` built from
+the environment: with ``WARPSIM_SERVICE_URL`` naming a live sweep daemon
+the session's backend is the service (figure generation then never
+re-simulates anything any process has already computed; a dead URL warns
+once and falls back), otherwise sweeps run in-process against the shared
+on-disk cache below. ``WARPSIM_BACKEND`` forces the choice
+(``inprocess`` | ``service`` | ``queue``).
 """
 
 from __future__ import annotations
@@ -17,11 +20,11 @@ import functools
 import json
 import os
 import time
-from typing import Dict, List, Tuple
+from typing import List, Tuple
 
 import numpy as np
 
-from repro.core.warpsim import machines, runner, sweep
+from repro.core.warpsim import api, machines, runner
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
 SWEEP_CACHE_DIR = os.path.join(RESULTS_DIR, "sweep_cache")
@@ -34,32 +37,19 @@ def _save(name: str, obj) -> None:
         json.dump(obj, f, indent=1)
 
 
-def _cache() -> sweep.ResultCache:
-    """Shared on-disk cell cache: repeated figure runs are near-free."""
-    return sweep.ResultCache(SWEEP_CACHE_DIR)
-
-
 @functools.lru_cache(maxsize=None)
-def _client():
-    """Sweep-service client when ``WARPSIM_SERVICE_URL`` names a live
-    daemon, else None (probed once per process; a dead service degrades
-    to the in-process path with a warning, never a failure)."""
-    from repro.core.warpsim import service
-    return service.from_env()
+def _session() -> api.Session:
+    """One environment-driven session per process: service backend when
+    ``WARPSIM_SERVICE_URL`` names a live daemon (probed once; a dead URL
+    warns once per process), else in-process over the shared on-disk
+    cache — either way cells are never re-simulated across figure runs."""
+    return api.Session.from_env(cache_dir=SWEEP_CACHE_DIR)
 
 
-def _run_suite(machine_set, seeds=None):
-    """Prefer a running sweep service; fall back to in-process sweeps.
-
-    Either way cells are never re-simulated across figure runs — the
-    service owns a long-lived cache (and dedups concurrent figure
-    processes against each other); the fallback shares the on-disk cache
-    under benchmarks/results.
-    """
-    client = _client()
-    if client is not None:
-        return client.run_suite(machine_set, seeds=seeds)
-    return runner.run_suite(machine_set, cache=_cache(), seeds=seeds)
+def _run_suite(machine_set, seeds=None) -> api.StudyResult:
+    return _session().run(api.Study(
+        machines=machine_set,
+        seeds=tuple(seeds) if seeds is not None else (0,)))
 
 
 @functools.lru_cache(maxsize=None)
@@ -93,12 +83,12 @@ def fig1_warpsize_simd() -> List[Row]:
     8-wide SIMD with 4x warp size (=warp 32)."""
     rows, dump = [], {}
     base_res, _ = _simd_sweep(8)
-    base = runner.mean_ipc(base_res["simd8_ws32"])
+    base = runner.mean_ipc(base_res.per_bench("simd8_ws32"))
     for simd in (8, 16, 32):
         res, us = _simd_sweep(simd)
-        for name, per_bench in res.items():
-            norm = runner.mean_ipc(per_bench) / base
-            rows.append((f"fig1/{name}", us / len(res), norm))
+        for name in res.machines:
+            norm = runner.mean_ipc(res.per_bench(name)) / base
+            rows.append((f"fig1/{name}", us / len(res.machines), norm))
             dump[name] = norm
     _save("fig1_warpsize_simd.json", dump)
     return rows
@@ -107,10 +97,11 @@ def fig1_warpsize_simd() -> List[Row]:
 def _per_bench_metric(metric: str, mnames) -> List[Row]:
     res, us = _suite()
     rows, dump = [], {}
+    per_cell_us = us / (len(res.machines) * len(res.benches))
     for m in mnames:
-        for b, r in res[m].items():
+        for b, r in res.per_bench(m).items():
             val = getattr(r, metric)
-            rows.append((f"{m}/{b}", us / (len(res) * len(res[m])), val))
+            rows.append((f"{m}/{b}", per_cell_us, val))
             dump[f"{m}/{b}"] = val
     return rows, dump
 
@@ -120,10 +111,10 @@ def fig2_coalescing() -> List[Row]:
     normalized to ws32."""
     res, us = _suite()
     rows, dump = [], {}
+    ws32 = res.per_bench("ws32")
     for m in ("ws8", "ws16", "ws32", "ws64"):
-        for b, r in res[m].items():
-            norm = r.coalescing_rate / max(res["ws32"][b].coalescing_rate,
-                                           1e-12)
+        for b, r in res.per_bench(m).items():
+            norm = r.coalescing_rate / max(ws32[b].coalescing_rate, 1e-12)
             rows.append((f"fig2/{m}/{b}", us / 60, norm))
             dump[f"{m}/{b}"] = norm
     _save("fig2_coalescing.json", dump)
@@ -146,7 +137,8 @@ def fig4_perf() -> List[Row]:
     rows = [(f"fig4/{n}", u, v) for n, u, v in rows]
     seeded, us = _suite_seeds()
     for m in ("ws8", "ws16", "ws32", "ws64"):
-        vals = [runner.mean_ipc(seeded[s][m]) for s in BAND_SEEDS]
+        vals = [runner.mean_ipc(seeded.per_bench(m, seed=s))
+                for s in BAND_SEEDS]
         band = {"mean": float(np.mean(vals)),
                 "min": float(min(vals)), "max": float(max(vals))}
         for stat, v in band.items():
@@ -180,14 +172,14 @@ def fig7_swlw_perf() -> List[Row]:
         "ipc", ("ws8", "ws16", "ws32", "ws64", "SW+", "LW+"))
     rows = [(f"fig7/{n}", u, v) for n, u, v in rows]
     res, us = _suite()
-    summary = runner.suite_summary(res)
+    summary = res.summary()
     for k, v in summary.items():
         rows.append((f"fig7/summary/{k}", us, v))
     dump["summary"] = summary
-    # Multi-seed variance bands: suite_summary over the seed-keyed grid
-    # returns mean + min/max per headline metric.
+    # Multi-seed variance bands: StudyResult.bands() (suite_summary over
+    # the seed axis) returns mean + min/max per headline metric.
     seeded, us_b = _suite_seeds()
-    bands = runner.suite_summary(seeded)
+    bands = seeded.bands()
     for k, band in bands.items():
         for stat in ("mean", "min", "max"):
             rows.append((f"fig7/band/{k}/{stat}", us_b, band[stat]))

@@ -12,10 +12,14 @@ ResultCache hit/miss counters and the shared-expansion grouping counters
 cold and warm runs, and which asserts the cold-sweep speedup floors
 (see ``benchmarks/sweep_bench.py``).
 
-The ``fig*`` harnesses fetch their grids from a running sweep service when
+The ``fig*`` harnesses run their grids through one
+``repro.core.warpsim.api.Session`` built from the environment
+(``api.Session.from_env``): a running sweep service when
 ``WARPSIM_SERVICE_URL`` is set (see ``repro.core.warpsim.service`` and
-``benchmarks/service_smoke.py``); otherwise they sweep in-process against
-the shared cache under benchmarks/results/.
+``benchmarks/service_smoke.py``), else in-process against the shared
+cache under benchmarks/results/. ``WARPSIM_BACKEND`` forces the backend
+(``inprocess`` | ``service`` | ``queue``); backend parity is asserted by
+``benchmarks/facade_parity.py``.
 """
 
 from __future__ import annotations

@@ -5,7 +5,8 @@ The CI `service-smoke` job's driver (also runnable locally):
 1. start `python -m repro.core.warpsim.service` on an ephemeral port with
    a throwaway cache dir;
 2. run figure generation against it **cold** (``WARPSIM_SERVICE_URL`` set
-   in the child env) — everything simulates, on the daemon;
+   in the child env, picked up by ``api.Session.from_env`` inside
+   ``benchmarks/figs.py``) — everything simulates, on the daemon;
 3. run the same figures **warm** and assert via ``GET /stats`` that the
    pass simulated **zero** cells and took **zero** result-cache misses —
    the ROADMAP "figure generation never re-simulates" contract, enforced;
@@ -22,6 +23,7 @@ from __future__ import annotations
 
 import argparse
 import concurrent.futures
+import contextlib
 import json
 import os
 import re
@@ -48,6 +50,39 @@ def _child_env(url: str) -> dict:
     return env
 
 
+@contextlib.contextmanager
+def boot_daemon(cache_dir: str):
+    """Subprocess sweep daemon on an ephemeral port; yields its URL.
+
+    Shared by this driver and ``benchmarks/facade_parity.py``: scans
+    stdout for the machine-parseable listening banner (skipping any
+    warnings before it) and tears the daemon down on exit.
+    """
+    daemon = subprocess.Popen(
+        [sys.executable, "-m", "repro.core.warpsim.service",
+         "--port", "0", "--cache-dir", cache_dir],
+        env=_child_env(""), cwd=REPO,
+        stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True)
+    try:
+        url = None
+        for _ in range(50):
+            line = daemon.stdout.readline()
+            if not line:
+                break
+            m = re.search(r"http://[0-9.]+:\d+", line)
+            if m:
+                url = m.group(0)
+                break
+        assert url, "daemon never printed its listening URL"
+        yield url
+    finally:
+        daemon.terminate()
+        try:
+            daemon.wait(10)
+        except subprocess.TimeoutExpired:
+            daemon.kill()
+
+
 def _run_figs(url: str, figs: list) -> None:
     code = "from benchmarks import figs\n" + "".join(
         f"figs.{name}()\n" for name in figs)
@@ -67,22 +102,7 @@ def main(argv=None) -> None:
     assert figs, f"no figure functions match {args.figs!r}"
 
     cache_dir = tempfile.mkdtemp(prefix="warpsim-service-smoke-")
-    daemon = subprocess.Popen(
-        [sys.executable, "-m", "repro.core.warpsim.service",
-         "--port", "0", "--cache-dir", cache_dir],
-        env=_child_env(""), cwd=REPO,
-        stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True)
-    try:
-        url = None
-        for _ in range(50):             # skip any warnings before the banner
-            line = daemon.stdout.readline()
-            if not line:
-                break
-            m = re.search(r"http://[0-9.]+:\d+", line)
-            if m:
-                url = m.group(0)
-                break
-        assert url, "daemon never printed its listening URL"
+    with boot_daemon(cache_dir) as url:
         health = _get(url + "/healthz")
         assert health["ok"], health
         print(f"service-smoke: daemon at {url}, engine={health['engine']}")
@@ -124,12 +144,6 @@ def main(argv=None) -> None:
               f"(served as {sorted(served)}, "
               f"dedup_waits={after['dedup_waits'] - before['dedup_waits']})")
         print("service-smoke OK")
-    finally:
-        daemon.terminate()
-        try:
-            daemon.wait(10)
-        except subprocess.TimeoutExpired:
-            daemon.kill()
 
 
 if __name__ == "__main__":

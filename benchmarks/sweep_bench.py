@@ -100,6 +100,11 @@ def run(quick: bool = False,
     n_threads = QUICK_N_THREADS if quick else None
     kw = (dict(benches=QUICK_BENCHES, n_threads=QUICK_N_THREADS)
           if quick else {})
+    # The cold/warm phases read per-run stats, so they go through the
+    # sweep engine's stats-returning entry point with an explicit spec
+    # (equivalent grid to the run_suite calls of the baseline phases).
+    spec = sweep.SweepSpec(machines=suite, benches=tuple(benches),
+                           n_threads=n_threads)
 
     # Compile the native core (if possible) outside the timed regions: it
     # is a once-per-machine cost, not a per-sweep cost.
@@ -175,16 +180,17 @@ def run(quick: bool = False,
             sweep.TRACE_CACHE.clear()
             cold_cache = sweep.ResultCache(cache_dir)
             t0 = time.time()
-            cold = runner.run_suite(suite, cache=cold_cache, **kw)
+            # run_sweep_with_stats (not run_suite): this phase needs the
+            # run's private counter snapshot, not the deprecated global.
+            cold, cold_stats = sweep.run_sweep_with_stats(
+                spec, cache=cold_cache)
             t_cold = min(t_cold, time.time() - t0)
-            cold_stats = dict(sweep.LAST_SWEEP_STATS)
 
         # Warm sweep over the surviving (fully populated) cold cache.
         warm_cache = sweep.ResultCache(cache_dir)
         t0 = time.time()
-        warm = runner.run_suite(suite, cache=warm_cache, **kw)
+        warm, warm_stats = sweep.run_sweep_with_stats(spec, cache=warm_cache)
         t_warm = time.time() - t0
-        warm_stats = dict(sweep.LAST_SWEEP_STATS)
     finally:
         if cache_dir is not None:
             shutil.rmtree(cache_dir, ignore_errors=True)

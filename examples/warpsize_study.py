@@ -1,43 +1,47 @@
 """Full warp-size study: every benchmark x machine, the paper's headline
-claims, and a dense 4..128 warp-size scaling sweep — all driven through the
-cached, process-parallel sweep engine (``repro.core.warpsim.sweep``).
+claims, and a dense 4..128 warp-size scaling sweep — all driven through
+the unified ``repro.core.warpsim.api`` facade.
 
 Run:  PYTHONPATH=src python examples/warpsize_study.py
 
+Which entry point do I use?
+
+* ``api.Session(cache_dir=...).run(api.Study(...))`` — one grid in this
+  process, cells cached on disk. The default. Returns a typed
+  ``StudyResult``: flat records plus accessors (``per_bench``, ``by``,
+  ``summary``, ``bands``) instead of nested dicts.
+* ``api.Session.from_env(cache_dir=...)`` — what this script (and figure
+  generation) uses: prefers a live sweep daemon named by
+  ``WARPSIM_SERVICE_URL`` (``python -m repro.core.warpsim.service``; its
+  cache is shared by every client, so nothing is ever simulated twice
+  across the whole fleet) and falls back to the in-process session.
+  ``WARPSIM_BACKEND=inprocess|service|queue`` forces the choice.
+* ``api.Session(backend=api.QueueBackend(url))`` — shard a big grid onto
+  the daemon's lease-based work queue and drain it as one of possibly
+  many workers (other hosts can run
+  ``python -m repro.core.warpsim.work_queue --url ... --job ...``).
+* ``sweep.run_sweep`` / ``runner.run_suite`` — the low-level engine and
+  its deprecated nested-dict shim; only for code that predates the
+  facade.
+
 Re-running is near-instant: every grid cell is served from the
-content-addressed cache under benchmarks/results/sweep_cache. With
-``WARPSIM_SERVICE_URL`` pointing at a running sweep service
-(``python -m repro.core.warpsim.service``), the grids are fetched from the
-daemon instead — its cache is shared by every client, so nothing is ever
-simulated twice across the whole fleet.
+content-addressed cache under benchmarks/results/sweep_cache.
 """
 import sys
 import time
 
 sys.path.insert(0, "src")
 
-from repro.core.warpsim import machines, runner, service
-from repro.core.warpsim.sweep import (
-    ResultCache, SweepSpec, run_sweep_with_stats,
-)
+from repro.core.warpsim import api, machines
 
 CACHE_DIR = "benchmarks/results/sweep_cache"
 
 
 def main():
-    client = service.from_env()
-    cache = None if client is not None else ResultCache(CACHE_DIR)
-
-    def sweep(spec):
-        """Grid + per-run stats snapshot, remote or local."""
-        if client is not None:
-            res = client.sweep(spec)
-            return res, client.last_stats
-        return run_sweep_with_stats(spec, cache=cache, persist_traces=True)
-
-    if client is not None:
-        h = client.healthz()
-        print(f"using sweep service at {client.base_url} "
+    session = api.Session.from_env(cache_dir=CACHE_DIR, persist_traces=True)
+    if isinstance(session.backend, api.ServiceBackend):
+        h = session.backend.client().healthz()
+        print(f"using sweep service at {session.backend.url} "
               f"(engine={h['engine']}, model={h['model']})")
 
     print("running 15 benchmarks x 6 machines (paper Figs. 2-7)...")
@@ -46,13 +50,15 @@ def main():
         if len(names) > 1:
             print(f"  {'+'.join(names)} share one expansion "
                   f"(warp={ekey[0]}, simd={ekey[1]})")
-    spec = SweepSpec(machines=machines.paper_suite())
+    study = api.Study(machines=machines.paper_suite())
     t0 = time.time()
-    res, stats = sweep(spec)
-    print(f"  {len(spec.cells())} cells in {time.time() - t0:.2f}s "
+    res = session.run(study)
+    stats = res.stats
+    print(f"  {len(res)} cells in {time.time() - t0:.2f}s "
           f"({stats['cache_hits']} cached, {stats['simulated']} simulated, "
           f"{stats['expansion_groups']} aggregations from "
-          f"{stats['trace_families']} thread traces)")
+          f"{stats['trace_families']} thread traces) "
+          f"via the {res.backend} backend")
     print(f"  trace cache: {stats['trace_cache_hits']} hits / "
           f"{stats['trace_cache_misses']} misses "
           f"({stats['trace_disk_hits']} from disk, "
@@ -61,13 +67,14 @@ def main():
           f"{stats['expansion_cache_hits']} hits / "
           f"{stats['expansion_cache_misses']} misses")
 
-    benches = list(next(iter(res.values())))
-    print(f"\n{'':6s}" + " ".join(f"{b:>6s}" for b in benches))
-    for m in res:
-        print(f"{m:6s}" + " ".join(f"{res[m][b].ipc:6.2f}" for b in benches))
+    print(f"\n{'':6s}" + " ".join(f"{b:>6s}" for b in res.benches))
+    for m in res.machines:
+        per_b = res.per_bench(m)
+        print(f"{m:6s}" + " ".join(f"{per_b[b].ipc:6.2f}"
+                                   for b in res.benches))
 
     print("\nheadline comparisons (paper Fig. 7 / Secs. 6.2-6.3):")
-    s = runner.suite_summary(res)
+    s = res.summary()
     paper = {
         "swplus_over_lwplus": 1.11, "swplus_over_ws8": 1.16,
         "swplus_over_ws16": 1.12, "swplus_over_ws32": 1.19,
@@ -80,17 +87,21 @@ def main():
         print(f"  {k:40s} {v:6.3f} {ref_s}")
 
     print("\ndense warp-size scaling sweep, 4..128 threads/warp:")
-    dense = SweepSpec.warp_size_range(4, 128)
+    dense = api.Study.warp_size_range(4, 128)
     t0 = time.time()
-    dres, dstats = sweep(dense)
-    print(f"  {len(dense.cells())} cells in {time.time() - t0:.2f}s "
+    dres = session.run(dense)
+    dstats = dres.stats
+    print(f"  {len(dres)} cells in {time.time() - t0:.2f}s "
           f"(trace cache: {dstats['trace_cache_hits']}h/"
           f"{dstats['trace_cache_misses']}m, "
           f"{dstats['trace_disk_hits']} from disk)")
-    for m, per_bench in dres.items():
-        print(f"  {m:6s} geomean IPC {runner.mean_ipc(per_bench):6.3f}")
+    from repro.core.warpsim import runner
+    for m in dres.machines:
+        print(f"  {m:6s} geomean IPC "
+              f"{runner.mean_ipc(dres.per_bench(m)):6.3f}")
 
-    runner.save_results(res, "benchmarks/results/warpsim_suite.json")
+    runner.save_results(res.legacy_grid(),
+                        "benchmarks/results/warpsim_suite.json")
     print("\nsaved benchmarks/results/warpsim_suite.json")
 
 

@@ -2,17 +2,23 @@
 *Investigating Warp Size Impact in GPUs* (Lashgar, Baniasadi, Khonsari 2012).
 
 Public API:
+    api.Session / api.Study / api.StudyResult / api.{InProcessBackend,
+    ServiceBackend, QueueBackend}   <- the facade; start here
     MachineConfig, machines.{baseline,sw_plus,lw_plus,paper_suite}
     trace.get_workload / trace.BENCHMARKS
-    runner.run_one / run_suite / suite_summary
+    runner.run_one / run_suite / suite_summary   (run_suite: deprecated
+    nested-dict shim over api)
     sweep.SweepSpec / sweep.ResultCache / sweep.run_sweep /
-    sweep.run_sweep_with_stats
+    sweep.run_sweep_with_stats   (the low-level engine under api)
     service.SweepService / service.SweepClient / service.from_env
     work_queue.WorkQueue / work_queue.run_worker
 """
 
 from repro.core.warpsim.config import MachineConfig
-from repro.core.warpsim import machines, runner, sweep, trace
+from repro.core.warpsim import api, machines, runner, sweep, trace
+from repro.core.warpsim.api import (
+    Session, Study, StudyResult,
+)
 from repro.core.warpsim.divergence import (
     WarpStream, expand_stream, expand_workload, simd_efficiency,
 )
@@ -27,7 +33,8 @@ from repro.core.warpsim.timing import SimResult, simulate
 # import service` still works (plain submodule import).
 
 __all__ = [
-    "MachineConfig", "machines", "runner", "sweep", "trace",
+    "MachineConfig", "api", "machines", "runner", "sweep", "trace",
+    "Session", "Study", "StudyResult",
     "WarpStream", "expand_stream", "expand_workload", "simd_efficiency",
     "SimResult", "simulate",
     "ResultCache", "SweepSpec", "expansion_key", "run_sweep",

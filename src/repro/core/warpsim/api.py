@@ -1,0 +1,617 @@
+"""Unified facade over the warp-size study stack: Session, Study, backends.
+
+Four PRs grew four ways to run a grid — ``run_sweep`` /
+``run_sweep_with_stats`` in-process, ``SweepClient.sweep`` against a
+daemon, and the ``/queue`` enqueue/drain flow — each with its own result
+shape and env-var branching. This module is the single entry point the
+ROADMAP's multi-backend north star needs:
+
+* :class:`Study` — a declarative, typed grid (bench x machine x seed,
+  plus the timing `engine`), a superset of
+  :class:`~repro.core.warpsim.sweep.SweepSpec` which it absorbs via
+  :meth:`Study.from_spec` / :meth:`Study.to_spec`. JSON-safe via
+  :meth:`Study.to_dict` / :meth:`Study.from_dict` (the service's
+  ``POST /study`` wire format).
+* :class:`StudyResult` — the one result shape: a flat tuple of
+  :class:`RunRecord` (machine, bench, seed, n_threads, SimResult) in the
+  study's deterministic cell order, plus the run's private stats
+  snapshot. Accessors (:meth:`~StudyResult.by`,
+  :meth:`~StudyResult.per_bench`, :meth:`~StudyResult.summary`,
+  :meth:`~StudyResult.bands`, :meth:`~StudyResult.to_json`) replace both
+  legacy nested-dict shapes (``results[machine][bench]`` and
+  ``results[seed][machine][bench]``, still reachable via
+  :meth:`~StudyResult.legacy_grid` for the deprecated shims).
+* :class:`Backend` — the pluggable execution protocol, three
+  implementations: :class:`InProcessBackend` (the grouped ``run_sweep``
+  cold path), :class:`ServiceBackend` (a running
+  :mod:`~repro.core.warpsim.service` daemon), :class:`QueueBackend`
+  (enqueue on a daemon + drain through the
+  :mod:`~repro.core.warpsim.work_queue` worker loop). All three return
+  bit-identical records for the same study (CI-enforced by
+  ``benchmarks/facade_parity.py``).
+* :class:`Session` — owns the cache stack: a
+  :class:`~repro.core.warpsim.sweep.ResultCache` (optional) plus
+  *instance-state* trace/expansion LRUs, so concurrent sessions (tests,
+  services, notebooks) stop sharing mutable module globals. The
+  module-global ``sweep.TRACE_CACHE`` / ``sweep.EXPANSION_CACHE`` now
+  back a single deprecated :func:`default_session` that keeps the legacy
+  entry points' behavior.
+
+Which entry point do I use?
+
+* One grid, my process, my cache dir::
+
+      from repro.core.warpsim import api
+      session = api.Session(cache_dir="benchmarks/results/sweep_cache")
+      res = session.run(api.Study(machines=machines.paper_suite()))
+      res.per_bench("SW+")["BFS"].ipc
+
+* Whatever the environment says (figure generation, examples)::
+
+      session = api.Session.from_env(cache_dir=...)   # service if
+      res = session.run(study)                        # $WARPSIM_SERVICE_URL
+                                                      # is live, else local
+
+* Explicit backend::
+
+      api.Session(backend=api.ServiceBackend("http://127.0.0.1:8321"))
+      api.Session(backend=api.QueueBackend("http://127.0.0.1:8321"))
+
+``WARPSIM_BACKEND`` (``inprocess`` | ``service`` | ``queue``) forces the
+:meth:`Session.from_env` choice; unset, it prefers a live
+``WARPSIM_SERVICE_URL`` daemon and falls back in-process.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import threading
+from typing import Dict, Iterator, Mapping, Optional, Tuple
+
+from repro.core.warpsim import machines as machines_mod
+from repro.core.warpsim import sweep as sweep_mod
+from repro.core.warpsim.config import MachineConfig
+from repro.core.warpsim.timing import SimResult
+from repro.core.warpsim.trace import BENCHMARKS
+
+ENV_BACKEND = "WARPSIM_BACKEND"
+
+
+def resolve_machine_name(name: str, simd_width: int = 8) -> MachineConfig:
+    """Preset config for a suite name (``SW+``, ``LW+``) or ``ws<N>``."""
+    suite = machines_mod.paper_suite(simd_width)
+    if name in suite:
+        return suite[name]
+    if name.startswith("ws") and name[2:].isdigit():
+        return machines_mod.baseline(int(name[2:]), simd_width)
+    raise ValueError(f"unknown machine {name!r} (suite names: "
+                     f"{', '.join(suite)}, or ws<N>)")
+
+
+# ---------------------------------------------------------------------------
+# Study: the declarative grid
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Study:
+    """A declarative bench x machine x seed grid plus the timing engine.
+
+    Field-for-field superset of :class:`~repro.core.warpsim.sweep.SweepSpec`
+    (same defaults, same fixed machines-major / benches / seeds-innermost
+    cell order) with the execution-relevant `engine` added, so one object
+    describes a run completely for every backend. ``engine="auto"`` lets
+    each backend pick (native when compiled, else the fast engine) — all
+    engines are bit-identical, so it never changes the numbers.
+    """
+
+    benches: Tuple[str, ...] = tuple(BENCHMARKS)
+    machines: Optional[Mapping[str, MachineConfig]] = None
+    warp_sizes: Tuple[int, ...] = ()
+    simd_width: int = 8
+    n_threads: Optional[int] = None
+    seeds: Tuple[int, ...] = (0,)
+    engine: str = "auto"
+
+    @classmethod
+    def from_spec(cls, spec: sweep_mod.SweepSpec,
+                  engine: str = "auto") -> "Study":
+        """Absorb a legacy :class:`SweepSpec` (adapter for the shims)."""
+        return cls(benches=spec.benches, machines=spec.machines,
+                   warp_sizes=spec.warp_sizes, simd_width=spec.simd_width,
+                   n_threads=spec.n_threads, seeds=spec.seeds,
+                   engine=engine or "auto")
+
+    @classmethod
+    def warp_size_range(cls, lo: int = 4, hi: int = 128,
+                        simd_width: int = 8, engine: str = "auto",
+                        **kw) -> "Study":
+        """Dense power-of-two warp-size scaling study, `lo`..`hi`."""
+        return cls.from_spec(
+            sweep_mod.SweepSpec.warp_size_range(lo, hi,
+                                                simd_width=simd_width, **kw),
+            engine=engine)
+
+    def to_spec(self) -> sweep_mod.SweepSpec:
+        return sweep_mod.SweepSpec(
+            benches=self.benches, machines=self.machines,
+            warp_sizes=self.warp_sizes, simd_width=self.simd_width,
+            n_threads=self.n_threads, seeds=self.seeds)
+
+    def machine_set(self) -> Dict[str, MachineConfig]:
+        return self.to_spec().machine_set()
+
+    def cells(self, machine_set=None):
+        return self.to_spec().cells(machine_set=machine_set)
+
+    def to_dict(self) -> dict:
+        """JSON-safe encoding (``POST /study`` bodies)."""
+        d = sweep_mod.spec_to_dict(self.to_spec())
+        d["engine"] = self.engine
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "Study":
+        return cls.from_spec(sweep_mod.spec_from_dict(d),
+                             engine=d.get("engine") or "auto")
+
+
+# ---------------------------------------------------------------------------
+# StudyResult: the one result shape
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RunRecord:
+    """One executed grid cell: coordinates + its :class:`SimResult`."""
+
+    machine: str
+    bench: str
+    seed: int
+    n_threads: Optional[int]
+    result: SimResult
+
+    def to_wire(self) -> dict:
+        return {"machine": self.machine, "bench": self.bench,
+                "seed": self.seed, "n_threads": self.n_threads,
+                "result": dataclasses.asdict(self.result)}
+
+    @classmethod
+    def from_wire(cls, d: Mapping) -> "RunRecord":
+        return cls(machine=d["machine"], bench=d["bench"],
+                   seed=int(d["seed"]), n_threads=d.get("n_threads"),
+                   result=SimResult(**d["result"]))
+
+
+@dataclasses.dataclass(frozen=True)
+class StudyResult:
+    """Flat, typed study output: records in the study's fixed cell order.
+
+    `stats` is the producing run's private counter snapshot (the
+    ``run_sweep_with_stats`` keys, plus backend-specific extras);
+    `backend` names the backend that produced it. Records — not stats —
+    are the bit-identical-across-backends contract.
+    """
+
+    records: Tuple[RunRecord, ...]
+    stats: Dict[str, float] = dataclasses.field(default_factory=dict)
+    backend: str = ""
+
+    # -------------------------------------------------------- coordinates
+
+    @property
+    def machines(self) -> Tuple[str, ...]:
+        return self._uniq("machine")
+
+    @property
+    def benches(self) -> Tuple[str, ...]:
+        return self._uniq("bench")
+
+    @property
+    def seeds(self) -> Tuple[int, ...]:
+        return self._uniq("seed")
+
+    def _uniq(self, field: str) -> tuple:
+        out, seen = [], set()
+        for r in self.records:
+            v = getattr(r, field)
+            if v not in seen:
+                seen.add(v)
+                out.append(v)
+        return tuple(out)
+
+    def __len__(self) -> int:
+        return len(self.records)
+
+    def __iter__(self) -> Iterator[RunRecord]:
+        return iter(self.records)
+
+    # ---------------------------------------------------------- accessors
+
+    def by(self, machine: Optional[str] = None, bench: Optional[str] = None,
+           seed: Optional[int] = None) -> "StudyResult":
+        """Filtered view (record order preserved); chainable."""
+        recs = tuple(
+            r for r in self.records
+            if (machine is None or r.machine == machine)
+            and (bench is None or r.bench == bench)
+            and (seed is None or r.seed == seed))
+        return StudyResult(records=recs, stats=self.stats,
+                           backend=self.backend)
+
+    def one(self) -> SimResult:
+        """The sole record's result (raises unless exactly one matches)."""
+        if len(self.records) != 1:
+            raise ValueError(f"expected exactly one record, have "
+                             f"{len(self.records)}")
+        return self.records[0].result
+
+    def per_bench(self, machine: str,
+                  seed: Optional[int] = None) -> Dict[str, SimResult]:
+        """``{bench: SimResult}`` for one machine (and seed, when multi-seed).
+
+        The shape ``runner.mean_ipc`` / ``mean_speedup`` consume.
+        """
+        if seed is None:
+            seeds = self.seeds
+            if len(seeds) > 1:
+                raise ValueError(f"multi-seed result ({seeds}): pass seed=")
+            seed = seeds[0]
+        out = {r.bench: r.result for r in self.records
+               if r.machine == machine and r.seed == seed}
+        if not out:
+            raise KeyError(f"no records for machine {machine!r} "
+                           f"seed {seed}")
+        return out
+
+    def grid(self) -> Dict[int, Dict[str, Dict[str, SimResult]]]:
+        """Seed-keyed nested dict ``results[seed][machine][bench]``."""
+        out: Dict[int, Dict[str, Dict[str, SimResult]]] = {
+            s: {} for s in self.seeds}
+        for r in self.records:
+            out[r.seed].setdefault(r.machine, {})[r.bench] = r.result
+        return out
+
+    def legacy_grid(self):
+        """The deprecated ``run_sweep`` dual shape, for the compat shims:
+        flat ``results[machine][bench]`` when single-seed, else the
+        seed-keyed :meth:`grid`. New code should stay on records."""
+        g = self.grid()
+        if len(g) == 1:
+            return next(iter(g.values()))
+        return g
+
+    def summary(self) -> dict:
+        """Paper-headline numbers (``runner.suite_summary`` over this grid:
+        plain floats single-seed, mean/min/max bands multi-seed)."""
+        from repro.core.warpsim import runner
+        return runner.suite_summary(self.legacy_grid())
+
+    def bands(self) -> dict:
+        """Per-metric ``{"mean", "min", "max"}`` variance bands over seeds
+        (degenerate — mean == min == max — for a single-seed study)."""
+        from repro.core.warpsim import runner
+        return runner.suite_summary(self.grid())
+
+    # --------------------------------------------------------------- wire
+
+    def to_json(self) -> dict:
+        """JSON-safe encoding (the ``POST /study`` response body)."""
+        return {"records": [r.to_wire() for r in self.records],
+                "stats": dict(self.stats), "backend": self.backend}
+
+    @classmethod
+    def from_json(cls, blob: Mapping,
+                  backend: Optional[str] = None) -> "StudyResult":
+        return cls(
+            records=tuple(RunRecord.from_wire(r) for r in blob["records"]),
+            stats=dict(blob.get("stats") or {}),
+            backend=backend if backend is not None
+            else blob.get("backend", ""))
+
+
+def records_from_grid(spec: sweep_mod.SweepSpec,
+                      results: Mapping) -> Tuple[RunRecord, ...]:
+    """Flatten a legacy ``run_sweep`` result into spec-cell-ordered records
+    (adapter for the in-process backend and the legacy service shape)."""
+    multi = len(spec.seeds) > 1
+    recs = []
+    for mname, _cfg, bench, n_threads, seed in spec.cells():
+        per_m = results[seed] if multi else results
+        recs.append(RunRecord(machine=mname, bench=bench, seed=seed,
+                              n_threads=n_threads,
+                              result=per_m[mname][bench]))
+    return tuple(recs)
+
+
+# ---------------------------------------------------------------------------
+# Backends
+# ---------------------------------------------------------------------------
+
+
+class Backend:
+    """Execution protocol: turn a :class:`Study` into a :class:`StudyResult`.
+
+    Implementations receive the owning :class:`Session` so they can use
+    its cache stack (the in-process backend does; the remote backends
+    delegate caching to the daemon they talk to). Records must be
+    bit-identical across backends for the same study — results are
+    deterministic and content-addressed, so *where* a cell was computed
+    can never change *what* it is.
+    """
+
+    name = "abstract"
+
+    def run(self, study: Study, session: "Session") -> StudyResult:
+        raise NotImplementedError
+
+
+class InProcessBackend(Backend):
+    """The grouped ``run_sweep`` cold path, session-owned caches.
+
+    `result_cache` (when given) overrides the session's — the legacy
+    ``run_suite(cache=...)`` per-call contract rides through here.
+    """
+
+    name = "inprocess"
+
+    def __init__(self, parallel: Optional[bool] = None,
+                 max_workers: Optional[int] = None,
+                 group_expansion: bool = True,
+                 reuse_expansion: bool = True,
+                 share_traces: bool = True,
+                 result_cache: Optional[sweep_mod.ResultCache] = None):
+        self.parallel = parallel
+        self.max_workers = max_workers
+        self.group_expansion = group_expansion
+        self.reuse_expansion = reuse_expansion
+        self.share_traces = share_traces
+        self.result_cache = result_cache
+
+    def run(self, study: Study, session: "Session") -> StudyResult:
+        spec = study.to_spec()
+        cache = (self.result_cache if self.result_cache is not None
+                 else session.result_cache)
+        results, stats = sweep_mod.run_sweep_with_stats(
+            spec, cache=cache, parallel=self.parallel,
+            max_workers=self.max_workers, engine=study.engine,
+            group_expansion=self.group_expansion,
+            reuse_expansion=self.reuse_expansion,
+            share_traces=self.share_traces,
+            persist_traces=session.persist_traces,
+            trace_cache=session.trace_cache,
+            expansion_cache=session.expansion_cache)
+        return StudyResult(records=records_from_grid(spec, results),
+                           stats=stats, backend=self.name)
+
+
+class ServiceBackend(Backend):
+    """A running sweep daemon (``POST /study``); its cache, its LRUs."""
+
+    name = "service"
+
+    def __init__(self, url: Optional[str] = None, client=None,
+                 timeout: float = 600.0):
+        if client is None and not url:
+            raise ValueError("ServiceBackend needs a url or a client")
+        self._client = client
+        self.url = url if url else client.base_url
+        self.timeout = timeout
+
+    def client(self):
+        if self._client is None:
+            from repro.core.warpsim import service as service_mod
+            self._client = service_mod.SweepClient(self.url,
+                                                   timeout=self.timeout)
+        return self._client
+
+    def run(self, study: Study, session: "Session") -> StudyResult:
+        res = self.client().study(study)
+        return dataclasses.replace(res, backend=self.name)
+
+
+class QueueBackend(Backend):
+    """Enqueue on a daemon, drain through the work-queue worker loop.
+
+    The sharded path for grids too big for one request/response: the
+    daemon shards the study's *uncached* cells onto a lease-based job,
+    this process drains it as a worker (other workers on other hosts may
+    drain it concurrently — leases keep them from colliding), and the
+    finished study is then fetched from the daemon's cache. Records are
+    bit-identical to the other backends; `stats` additionally carries
+    ``queue_job`` and ``queue_cells_computed`` (cells *this* worker
+    simulated).
+    """
+
+    name = "queue"
+
+    def __init__(self, url: str, chunk_size: int = 16,
+                 lease_seconds: Optional[float] = None,
+                 worker_id: Optional[str] = None,
+                 poll_seconds: float = 0.05, timeout: float = 600.0):
+        self.url = url
+        self.chunk_size = chunk_size
+        self.lease_seconds = lease_seconds
+        self.worker_id = worker_id
+        self.poll_seconds = poll_seconds
+        self.timeout = timeout
+
+    def run(self, study: Study, session: "Session") -> StudyResult:
+        from repro.core.warpsim import service as service_mod
+        from repro.core.warpsim import work_queue as wq_mod
+        client = service_mod.SweepClient(self.url, timeout=self.timeout)
+        job = client.enqueue(study.to_spec(), chunk_size=self.chunk_size,
+                             lease_seconds=self.lease_seconds)
+        computed = wq_mod.run_worker(
+            self.url, job["job"], worker_id=self.worker_id,
+            engine=study.engine, poll_seconds=self.poll_seconds,
+            timeout=self.timeout)
+        res = client.study(study)       # every cell now a daemon cache hit
+        stats = dict(res.stats, queue_job=job["job"],
+                     queue_cells_computed=computed)
+        return StudyResult(records=res.records, stats=stats,
+                           backend=self.name)
+
+
+# ---------------------------------------------------------------------------
+# Session: owns the cache stack, runs studies
+# ---------------------------------------------------------------------------
+
+
+class Session:
+    """One study-running context: a backend plus an owned cache stack.
+
+    The trace and expansion LRUs are *instance* state (fresh, bounded
+    caches per session) instead of the module globals the legacy entry
+    points share — two sessions never contend on recency order or bleed
+    counters into each other. `cache_dir` (or an explicit `result_cache`)
+    adds the content-addressed on-disk cell cache; with `persist_traces`
+    thread-trace snapshots land under ``<cache root>/traces/`` like
+    ``run_sweep(persist_traces=True)``.
+
+    The legacy module-global caches survive as :func:`default_session`,
+    which the deprecated shims (``runner.run_suite``, ``run_sweep``
+    callers) route through so their cross-call LRU reuse is unchanged.
+    """
+
+    def __init__(self, backend: Optional[Backend] = None,
+                 cache_dir: Optional[str] = None,
+                 result_cache: Optional[sweep_mod.ResultCache] = None,
+                 trace_cache: Optional[sweep_mod.TraceCache] = None,
+                 expansion_cache: Optional[sweep_mod.ExpansionCache] = None,
+                 persist_traces: bool = False):
+        if result_cache is None and cache_dir:
+            result_cache = sweep_mod.ResultCache(cache_dir)
+        self.result_cache = result_cache
+        self.trace_cache = (trace_cache if trace_cache is not None
+                            else sweep_mod.TraceCache())
+        self.expansion_cache = (expansion_cache if expansion_cache is not None
+                                else sweep_mod.ExpansionCache())
+        self.persist_traces = persist_traces
+        self.backend = backend if backend is not None else InProcessBackend()
+
+    @property
+    def trace_dir(self) -> Optional[str]:
+        if self.persist_traces and self.result_cache is not None:
+            return os.path.join(self.result_cache.root, "traces")
+        return None
+
+    def run(self, study, backend: Optional[Backend] = None) -> StudyResult:
+        """Execute a :class:`Study` (or legacy :class:`SweepSpec`) through
+        `backend` (default: the session's)."""
+        if isinstance(study, sweep_mod.SweepSpec):
+            study = Study.from_spec(study)
+        return (backend if backend is not None else self.backend).run(
+            study, self)
+
+    def cell(self, bench: str, machine, n_threads: Optional[int] = None,
+             seed: int = 0, engine: str = "auto") -> SimResult:
+        """One grid cell through the session's cache stack. `machine` is a
+        :class:`MachineConfig` or a preset name (``SW+``, ``ws32``...)."""
+        cfg = (machine if isinstance(machine, MachineConfig)
+               else resolve_machine_name(machine))
+        key = sweep_mod.cell_key(bench, cfg, n_threads, seed)
+        if self.result_cache is not None:
+            hit = self.result_cache.get(key)
+            if hit is not None:
+                return hit
+        res = sweep_mod.compute_cell(
+            bench, cfg, n_threads=n_threads, seed=seed, engine=engine,
+            trace_dir=self.trace_dir, trace_cache=self.trace_cache,
+            expansion_cache=self.expansion_cache)
+        if self.result_cache is not None:
+            self.result_cache.put(key, res)
+        return res
+
+    def cache_stats(self) -> dict:
+        """Live counters of the session-owned cache stack."""
+        out = {
+            "trace_cache": {
+                "size": len(self.trace_cache),
+                "hits": self.trace_cache.hits,
+                "misses": self.trace_cache.misses,
+                "disk_hits": self.trace_cache.disk_hits,
+                "builds": self.trace_cache.builds,
+            },
+            "expansion_cache": {
+                "size": len(self.expansion_cache),
+                "hits": self.expansion_cache.hits,
+                "misses": self.expansion_cache.misses,
+            },
+        }
+        if self.result_cache is not None:
+            out["result_cache"] = {
+                "entries": self.result_cache.count(),
+                "hits": self.result_cache.hits,
+                "misses": self.result_cache.misses,
+                "adopted": self.result_cache.adopted,
+            }
+        return out
+
+    @classmethod
+    def from_env(cls, cache_dir: Optional[str] = None,
+                 persist_traces: bool = False) -> "Session":
+        """The environment-driven session (figure generation, examples).
+
+        ``WARPSIM_BACKEND`` forces a backend (``inprocess`` | ``service``
+        | ``queue``; the remote two require ``WARPSIM_SERVICE_URL`` and
+        raise when it is absent/dead — an *explicit* choice failing
+        silently would hide misconfiguration). Unset, a live
+        ``WARPSIM_SERVICE_URL`` daemon is preferred (probed via
+        ``service.from_env``, which warns once per process on a dead URL)
+        with a silent fall back to an in-process session over
+        `cache_dir`.
+        """
+        from repro.core.warpsim import service as service_mod
+        choice = (os.environ.get(ENV_BACKEND) or "").strip().lower() or None
+        if choice in ("inprocess", "in-process", "local"):
+            return cls(cache_dir=cache_dir, persist_traces=persist_traces)
+        if choice == "queue":
+            url = os.environ.get(service_mod.ENV_URL)
+            if not url:
+                raise ValueError(
+                    f"{ENV_BACKEND}=queue requires {service_mod.ENV_URL}")
+            try:
+                service_mod.SweepClient(url).healthz()
+            except Exception as e:      # noqa: BLE001 — any failure = dead
+                raise RuntimeError(
+                    f"{ENV_BACKEND}=queue but no live daemon at "
+                    f"{service_mod.ENV_URL}={url!r} "
+                    f"({e.__class__.__name__}: {e})") from e
+            return cls(backend=QueueBackend(url))
+        if choice not in (None, "service"):
+            raise ValueError(
+                f"{ENV_BACKEND}={choice!r}: expected inprocess | service "
+                f"| queue")
+        client = service_mod.from_env()
+        if client is not None:
+            return cls(backend=ServiceBackend(client=client))
+        if choice == "service":
+            raise RuntimeError(
+                f"{ENV_BACKEND}=service but no live daemon at "
+                f"{service_mod.ENV_URL}="
+                f"{os.environ.get(service_mod.ENV_URL)!r}")
+        return cls(cache_dir=cache_dir, persist_traces=persist_traces)
+
+
+_DEFAULT_SESSION: Optional[Session] = None
+_DEFAULT_LOCK = threading.Lock()
+
+
+def default_session() -> Session:
+    """The deprecated process-wide session over the module-global LRUs.
+
+    Exists so the legacy entry points (``runner.run_suite`` and direct
+    ``run_sweep`` callers) keep their historical cross-call sharing
+    through ``sweep.TRACE_CACHE`` / ``sweep.EXPANSION_CACHE``. New code
+    should construct its own :class:`Session` (or
+    :meth:`Session.from_env`) instead of leaning on process globals.
+    """
+    global _DEFAULT_SESSION
+    with _DEFAULT_LOCK:
+        if _DEFAULT_SESSION is None:
+            _DEFAULT_SESSION = Session(
+                trace_cache=sweep_mod.TRACE_CACHE,
+                expansion_cache=sweep_mod.EXPANSION_CACHE)
+        return _DEFAULT_SESSION

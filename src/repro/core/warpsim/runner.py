@@ -1,4 +1,5 @@
-"""Benchmark x machine suite driver (thin veneer over the sweep engine)."""
+"""Benchmark x machine suite driver (deprecated shims over the
+``repro.core.warpsim.api`` facade, plus the paper's aggregation helpers)."""
 
 from __future__ import annotations
 
@@ -8,6 +9,7 @@ from typing import Dict, Iterable, Mapping, Optional
 
 import numpy as np
 
+from repro.core.warpsim import api
 from repro.core.warpsim import sweep as sweep_mod
 from repro.core.warpsim.config import MachineConfig
 from repro.core.warpsim.divergence import expand_stream
@@ -38,34 +40,40 @@ def run_suite(
 ) -> Dict[str, Dict[str, SimResult]] | Dict[int, Dict[str, Dict[str, SimResult]]]:
     """results[machine][bench] -> SimResult.
 
-    Delegates to :func:`repro.core.warpsim.sweep.run_sweep`: pass `cache`
-    for on-disk result reuse across runs and `parallel` to force or forbid
-    process-parallel grid execution (default auto). Pass `seeds` (overrides
-    `seed`) to run the grid per workload seed; with more than one seed the
-    result is keyed ``results[seed][machine][bench]`` — feed it to
-    :func:`suite_summary` for mean + min/max variance bands.
-    ``share_traces=False`` disables the two-phase trace sharing (one
-    single-phase expansion per expansion-key group, the PR 2 cold path).
+    Deprecated shim over the :mod:`repro.core.warpsim.api` facade, kept
+    for its legacy nested-dict result shape (new code should hold the
+    typed ``StudyResult``): builds a :class:`~repro.core.warpsim.api.Study`
+    and runs it through the default session (module-global LRUs, so
+    repeated calls keep their historical cross-call sharing) on an
+    :class:`~repro.core.warpsim.api.InProcessBackend` — or an
+    :class:`~repro.core.warpsim.api.ServiceBackend` when `service_url`
+    names a daemon (the daemon owns the cache then, so
+    `cache`/`parallel`/grouping flags are ignored and a dead URL raises;
+    callers that want env-driven silent fallback use
+    ``api.Session.from_env()``, as ``benchmarks/figs.py`` does).
 
-    With `service_url` the grid is fetched from a running sweep service
-    (:mod:`repro.core.warpsim.service`) instead of simulated in-process —
-    the service owns the cache, so `cache`/`parallel`/grouping flags are
-    ignored and a dead URL raises (callers that want silent fallback use
-    ``service.from_env()`` and only pass a probed URL, as
-    ``benchmarks/figs.py`` does).
+    Pass `cache` for on-disk result reuse across runs and `parallel` to
+    force or forbid process-parallel grid execution (default auto). Pass
+    `seeds` (overrides `seed`) to run the grid per workload seed; with
+    more than one seed the result is keyed
+    ``results[seed][machine][bench]`` — feed it to :func:`suite_summary`
+    for mean + min/max variance bands. ``share_traces=False`` disables
+    the two-phase trace sharing (one single-phase expansion per
+    expansion-key group, the PR 2 cold path).
     """
-    spec = sweep_mod.SweepSpec(
+    study = api.Study(
         benches=tuple(benches), machines=machine_set,
         n_threads=n_threads,
-        seeds=tuple(seeds) if seeds is not None else (seed,))
+        seeds=tuple(seeds) if seeds is not None else (seed,),
+        engine=engine)
     if service_url:
-        from repro.core.warpsim import service as service_mod
-        return service_mod.SweepClient(service_url).sweep(
-            spec, engine=None if engine == "auto" else engine)
-    return sweep_mod.run_sweep(spec, cache=cache, parallel=parallel,
-                               engine=engine, group_expansion=group_expansion,
-                               reuse_expansion=reuse_expansion,
-                               share_traces=share_traces)
+        backend: api.Backend = api.ServiceBackend(service_url)
+    else:
+        backend = api.InProcessBackend(
+            parallel=parallel, group_expansion=group_expansion,
+            reuse_expansion=reuse_expansion, share_traces=share_traces,
+            result_cache=cache)
+    return api.default_session().run(study, backend=backend).legacy_grid()
 
 
 # ---------------------------------------------------------------------------

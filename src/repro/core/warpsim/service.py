@@ -10,13 +10,23 @@ trace/expansion LRUs, and serves:
 * ``GET /cell?bench=BFS&machine=SW%2B[&seed=..&n_threads=..&field=..]`` —
   one grid cell. Machine is a suite name (``ws8``…, ``SW+``, ``LW+``) or
   any :class:`MachineConfig` assembled from query-param field overrides.
-* ``POST /sweep`` — a full grid (JSON-encoded
+* ``POST /study`` — a typed :class:`~repro.core.warpsim.api.Study`
+  (JSON body ``{"study": study.to_dict()}``); returns the
+  :class:`~repro.core.warpsim.api.StudyResult` wire shape (flat records
+  in the study's cell order + the run's private stats snapshot). The
+  endpoint behind ``api.ServiceBackend``.
+* ``POST /sweep`` — the legacy grid shape (JSON-encoded
   :class:`~repro.core.warpsim.sweep.SweepSpec`); returns results in
-  ``run_sweep``'s shape plus that run's private stats snapshot. With
+  ``run_sweep``'s shape plus that run's private stats snapshot — a thin
+  shim over the same :meth:`SweepService.study` core. With
   ``"enqueue": true`` the grid is instead sharded onto a lease-based
   :class:`~repro.core.warpsim.work_queue.WorkQueue` for remote workers to
   drain (``/queue/lease`` / ``/queue/complete`` / ``/queue/status``; see
-  :mod:`repro.core.warpsim.work_queue`).
+  :mod:`repro.core.warpsim.work_queue`). Queue job state is persisted
+  under ``<cache root>/queue/`` — one JSON snapshot per job plus a
+  job-id-sequence ``meta.json``, atomically rewritten on every
+  enqueue/lease/complete of that job — and reloaded on boot, so a
+  daemon restart never forgets a half-drained sweep.
 * ``GET /stats`` — service counters, live cache-stack counters (the
   result-cache entry count re-scans the directory via
   ``ResultCache.refresh()``, so cells written by sibling workers show up),
@@ -50,6 +60,7 @@ import concurrent.futures
 import dataclasses
 import json
 import os
+import tempfile
 import threading
 import time
 import warnings
@@ -58,11 +69,14 @@ from typing import Dict, Iterable, List, Mapping, Optional, Tuple
 from urllib.parse import parse_qs, urlencode, urlparse
 
 from repro.core.warpsim import _native
-from repro.core.warpsim import machines as machines_mod
+from repro.core.warpsim import api as api_mod
+from repro.core.warpsim.api import (
+    RunRecord, Session, Study, StudyResult,
+)
 from repro.core.warpsim.config import MachineConfig
 from repro.core.warpsim.sweep import (
-    EXPANSION_CACHE, MODEL_VERSION, TRACE_CACHE, ResultCache, SweepSpec,
-    cell_key, compute_cell, family_major_cells, spec_from_dict, spec_to_dict,
+    MODEL_VERSION, SweepSpec, cell_key, compute_cell, family_major_cells,
+    spec_from_dict, spec_to_dict,
 )
 from repro.core.warpsim.timing import SimResult
 from repro.core.warpsim.trace import BENCHMARKS
@@ -109,17 +123,8 @@ def resolve_machine(params: Mapping[str, str]) -> MachineConfig:
     """
     simd = int(params.get("simd_width", 8))
     name = params.get("machine")
-    if name:
-        suite = machines_mod.paper_suite(simd)
-        if name in suite:
-            base = suite[name]
-        elif name.startswith("ws") and name[2:].isdigit():
-            base = machines_mod.baseline(int(name[2:]), simd)
-        else:
-            raise ValueError(f"unknown machine {name!r} (suite names: "
-                             f"{', '.join(suite)}, or ws<N>)")
-    else:
-        base = MachineConfig()
+    base = (api_mod.resolve_machine_name(name, simd) if name
+            else MachineConfig())
     overrides = {fname: _coerce(params[fname], proto)
                  for fname, proto in _CONFIG_FIELDS.items() if fname in params}
     if not overrides:
@@ -146,22 +151,142 @@ class SweepService:
 
     def __init__(self, cache_dir: str, engine: str = "auto",
                  persist_traces: bool = True, lease_seconds: float = 60.0):
-        self.cache = ResultCache(cache_dir)
+        # The daemon's cache stack is a Session: its own ResultCache plus
+        # *instance* trace/expansion LRUs (not the module globals — a
+        # daemon embedded in a larger process must not contend with that
+        # process's own sweeps on recency order or counters).
+        self.session = Session(cache_dir=cache_dir,
+                               persist_traces=persist_traces)
+        self.cache = self.session.result_cache
         self.engine = engine
-        self.trace_dir = (os.path.join(cache_dir, "traces")
-                          if persist_traces else None)
+        self.trace_dir = self.session.trace_dir
         self.lease_seconds = lease_seconds
         self.started = time.time()
         self._lock = threading.Lock()
         self._inflight: Dict[str, concurrent.futures.Future] = {}
         self._jobs: Dict[str, WorkQueue] = {}
         self._job_seq = 0
+        self._queue_dir = os.path.join(cache_dir, "queue")
+        self._persist_lock = threading.Lock()
         self.counters: Dict[str, int] = {
             "requests": 0, "errors": 0, "cells_served": 0, "cache_hits": 0,
             "simulated": 0, "dedup_waits": 0, "sweeps": 0, "sweep_cells": 0,
             "queue_cells_adopted": 0,
         }
         self.last_sweep_stats: Dict[str, float] = {}
+        self._load_jobs()
+
+    # -------------------------------------------------- queue persistence
+    #
+    # Layout under <cache root>/queue/: one `<job>.json` snapshot per job
+    # (rewritten on enqueue/lease/complete of *that* job only — a lease
+    # never pays for serializing its neighbors' cell payloads) plus
+    # `meta.json` holding the job-id sequence (rewritten on enqueue). The
+    # queue dir assumes a single daemon per cache root — two daemons
+    # sharing one root cooperate on result *cells* (index adoption) but
+    # would clobber each other's same-named job files; see the
+    # federation open item in ROADMAP.md.
+
+    _META = "meta.json"
+
+    def _job_path(self, job: str) -> str:
+        return os.path.join(self._queue_dir, job + ".json")
+
+    def _load_jobs(self) -> None:
+        """Re-adopt queue jobs persisted by a previous daemon over this
+        cache root, so a restart doesn't forget half-drained sweeps
+        (in-flight workers keep renewing/completing against the same job
+        and chunk ids; lease clocks restart with their remaining time).
+
+        *Corrupt* job files (bad JSON, wrong shape) are deleted and
+        forgotten — the same degrade-to-cold contract as the result
+        cache. *Unreadable* ones (transient EIO/EACCES, not corruption)
+        are skipped but left on disk for the next boot to retry: a
+        backup tool holding the file briefly must not destroy valid
+        half-drained state. The job-id sequence floor is re-derived from
+        the surviving job names as well as meta.json, so a lost meta can
+        never recycle a live job id.
+        """
+        try:
+            names = os.listdir(self._queue_dir)
+        except OSError:
+            return
+        jobs: Dict[str, WorkQueue] = {}
+        seq = 0
+        for name in sorted(names):
+            if not name.endswith(".json"):
+                continue
+            path = os.path.join(self._queue_dir, name)
+            if name == self._META:
+                try:
+                    with open(path) as f:
+                        seq = max(seq, int(json.load(f)["job_seq"]))
+                except OSError:
+                    pass                    # transient: names floor below
+                except Exception:
+                    self._remove_file(path)
+                continue
+            job = name[:-len(".json")]
+            try:
+                with open(path) as f:
+                    jobs[job] = WorkQueue.from_dict(json.load(f))
+            except OSError:
+                continue                    # transient: keep for next boot
+            except Exception:
+                self._remove_file(path)
+                continue
+            if job.startswith("job-") and job[4:].isdigit():
+                seq = max(seq, int(job[4:]))
+        with self._lock:
+            self._jobs = jobs
+            self._job_seq = seq
+
+    @staticmethod
+    def _remove_file(path: str) -> None:
+        try:
+            os.remove(path)
+        except OSError:
+            pass
+
+    def _atomic_write(self, path: str, blob: dict) -> None:
+        data = json.dumps(blob).encode()
+        tmp = None
+        try:
+            os.makedirs(self._queue_dir, exist_ok=True)
+            fd, tmp = tempfile.mkstemp(
+                dir=self._queue_dir,
+                prefix=os.path.basename(path) + ".", suffix=".tmp")
+            with os.fdopen(fd, "wb") as f:
+                f.write(data)
+            os.replace(tmp, path)
+        except OSError:
+            if tmp is not None:
+                self._remove_file(tmp)
+
+    def _persist_job(self, job: str) -> None:
+        """Atomically rewrite one job's snapshot (load-on-boot twin).
+
+        Called after enqueue/lease/complete of that job. The persist lock
+        spans snapshot *and* rename: two concurrent mutators of one job
+        must publish in snapshot order, or the earlier writer's rename
+        could land last and roll the on-disk state back past the later
+        mutation. A mkstemp+rename publish means a crash mid-write leaves
+        the previous complete snapshot, never a torn one.
+        """
+        with self._persist_lock:
+            with self._lock:
+                q = self._jobs.get(job)
+            if q is None:
+                self._remove_file(self._job_path(job))
+                return
+            self._atomic_write(self._job_path(job), q.to_dict())
+
+    def _persist_meta(self) -> None:
+        with self._persist_lock:
+            with self._lock:
+                blob = {"job_seq": self._job_seq}
+            self._atomic_write(
+                os.path.join(self._queue_dir, self._META), blob)
 
     def bump(self, counter: str, n: int = 1) -> None:
         with self._lock:
@@ -210,7 +335,9 @@ class SweepService:
         try:
             res = compute_cell(bench, cfg, n_threads=n_threads, seed=seed,
                                engine=engine or self.engine,
-                               trace_dir=self.trace_dir)
+                               trace_dir=self.trace_dir,
+                               trace_cache=self.session.trace_cache,
+                               expansion_cache=self.session.expansion_cache)
             self.cache.put(key, res)
             with self._lock:
                 self.counters["simulated"] += 1
@@ -225,28 +352,33 @@ class SweepService:
 
     # ------------------------------------------------------------ sweeps
 
-    def sweep(self, spec: SweepSpec,
-              engine: Optional[str] = None) -> Tuple[Dict, Dict]:
-        """Serve a whole grid; returns ``(results, stats)``.
+    def study(self, study: Study) -> StudyResult:
+        """Serve a whole :class:`~repro.core.warpsim.api.Study`.
 
-        Cells run through :meth:`cell_with_source` in family-major order,
-        so uncached runs get the sweep engine's trace/expansion sharing
-        through the process-wide LRUs, and every cell dedups against
-        concurrent ``/cell`` and ``/sweep`` requests. Trace families are
+        The facade core of the daemon (``POST /study``; the legacy
+        ``POST /sweep`` shape is a shim over it). Cells run through
+        :meth:`cell_with_source` in family-major order, so uncached runs
+        get the sweep engine's trace/expansion sharing through the
+        session-owned LRUs, and every cell dedups against concurrent
+        ``/cell`` and ``/sweep``/``/study`` requests. Trace families are
         fanned across a small thread pool (one family per task keeps its
         cells' trace/stream locality) so a cold grid uses the host's
         cores — the native engine releases the GIL inside its C call, and
         the cache stack is lock-guarded, so threads are both safe and
-        effective here. `stats` mirrors ``run_sweep_with_stats``'s
-        snapshot keys (plus ``dedup_waits``).
+        effective here. The result's `stats` mirrors
+        ``run_sweep_with_stats``'s snapshot keys (plus ``dedup_waits``).
         """
         t0 = time.time()
+        engine = (None if study.engine in (None, "auto", "")
+                  else study.engine)
+        spec = study.to_spec()
         mset = spec.machine_set()
         cells = family_major_cells(spec.cells(machine_set=mset))
-        exp0 = (EXPANSION_CACHE.hits, EXPANSION_CACHE.misses)
-        trc0 = (TRACE_CACHE.hits, TRACE_CACHE.misses, TRACE_CACHE.disk_hits)
-        results: Dict[int, Dict[str, Dict[str, SimResult]]] = {
-            seed: {} for seed in spec.seeds}
+        ecache = self.session.expansion_cache
+        tcache = self.session.trace_cache
+        exp0 = (ecache.hits, ecache.misses)
+        trc0 = (tcache.hits, tcache.misses, tcache.disk_hits)
+        by_cell: Dict[tuple, SimResult] = {}
         counts = {"cache": 0, "simulated": 0, "dedup": 0}
         sim_groups, sim_families = set(), set()
 
@@ -280,7 +412,7 @@ class SweepService:
                 fam = (bench, n_threads, seed)
                 sim_families.add(fam)
                 sim_groups.add(fam + (cfg.expansion_key(),))
-            results[seed].setdefault(mname, {})[bench] = res
+            by_cell[(mname, bench, seed)] = res
         uncached = counts["simulated"] + counts["dedup"]
         stats = dict(
             cells=len(cells),
@@ -292,24 +424,33 @@ class SweepService:
             expansions_saved=uncached - len(sim_groups),
             trace_families=len(sim_families),
             traces_shared=len(sim_groups) - len(sim_families),
-            expansion_cache_hits=EXPANSION_CACHE.hits - exp0[0],
-            expansion_cache_misses=EXPANSION_CACHE.misses - exp0[1],
-            trace_cache_hits=TRACE_CACHE.hits - trc0[0],
-            trace_cache_misses=TRACE_CACHE.misses - trc0[1],
-            trace_disk_hits=TRACE_CACHE.disk_hits - trc0[2],
+            expansion_cache_hits=ecache.hits - exp0[0],
+            expansion_cache_misses=ecache.misses - exp0[1],
+            trace_cache_hits=tcache.hits - trc0[0],
+            trace_cache_misses=tcache.misses - trc0[1],
+            trace_disk_hits=tcache.disk_hits - trc0[2],
             elapsed_s=round(time.time() - t0, 6),
         )
         with self._lock:
             self.counters["sweeps"] += 1
             self.counters["sweep_cells"] += len(cells)
             self.last_sweep_stats = stats
-        ordered: Dict[int, Dict[str, Dict[str, SimResult]]] = {
-            seed: {m: {b: results[seed][m][b] for b in spec.benches}
-                   for m in mset}
-            for seed in spec.seeds}
-        if len(spec.seeds) == 1:
-            return ordered[spec.seeds[0]], stats
-        return ordered, stats
+        # Records in the study's fixed cell order, independent of the
+        # family-major execution order above.
+        records = tuple(
+            RunRecord(machine=mname, bench=bench, seed=seed,
+                      n_threads=n_threads,
+                      result=by_cell[(mname, bench, seed)])
+            for mname, _cfg, bench, n_threads, seed
+            in spec.cells(machine_set=mset))
+        return StudyResult(records=records, stats=stats, backend="service")
+
+    def sweep(self, spec: SweepSpec,
+              engine: Optional[str] = None) -> Tuple[Dict, Dict]:
+        """Deprecated shim over :meth:`study` for the legacy ``POST
+        /sweep`` shape: ``(run_sweep-shaped results, stats)``."""
+        res = self.study(Study.from_spec(spec, engine=engine or "auto"))
+        return res.legacy_grid(), res.stats
 
     # ------------------------------------------------------------- queue
 
@@ -327,6 +468,7 @@ class SweepService:
                 if not self.cache.contains(cell_key(c[2], c[1], c[3], c[4]))]
         q = WorkQueue(todo, chunk_size=chunk_size,
                       lease_seconds=lease_seconds or self.lease_seconds)
+        evicted = []
         with self._lock:
             self._job_seq += 1
             job = f"job-{self._job_seq}"
@@ -336,9 +478,15 @@ class SweepService:
             for j in finished[:max(0, len(finished)
                                    - self.MAX_FINISHED_JOBS)]:
                 del self._jobs[j]
+                evicted.append(j)
             stale = [j for j, jq in self._jobs.items() if jq is not q]
             for j in stale[:max(0, len(self._jobs) - self.MAX_JOBS)]:
                 del self._jobs[j]       # abandoned jobs: oldest first
+                evicted.append(j)
+        self._persist_meta()
+        self._persist_job(job)
+        for j in evicted:
+            self._persist_job(j)        # job gone -> snapshot removed
         return {"job": job, **q.status()}
 
     def _job(self, job: str) -> WorkQueue:
@@ -353,11 +501,18 @@ class SweepService:
         chunk = q.lease(worker)
         if chunk is None:
             return {"job": job, "chunk": None, "done": q.done}
+        self._persist_job(job)
         return {"job": job, "chunk": chunk.chunk_id,
                 "cells": [cell_to_wire(c) for c in chunk.cells],
                 "lease_seconds": q.lease_seconds, "done": False}
 
     def queue_renew(self, job: str, chunk: int, worker: str) -> dict:
+        # Deliberately not persisted: workers renew between every cell, so
+        # persisting here would rewrite the whole table O(cells) times per
+        # worker for no correctness gain — an unpersisted renewal only
+        # means the lease restarts with less remaining time after a daemon
+        # restart and the chunk requeues sooner (the documented safe
+        # degrade; completions are idempotent and stale-tolerant).
         return {"ok": self._job(job).renew(int(chunk), worker),
                 "job": job, "chunk": int(chunk)}
 
@@ -378,6 +533,7 @@ class SweepService:
         if n:
             self.bump("queue_cells_adopted", n)
         ok = q.complete(int(chunk), worker)
+        self._persist_job(job)
         return {"ok": ok, "job": job, "chunk": int(chunk), "done": q.done}
 
     def queue_status(self, job: str) -> dict:
@@ -417,16 +573,16 @@ class SweepService:
                 "adopted": self.cache.adopted,
             },
             "expansion_cache": {
-                "size": len(EXPANSION_CACHE),
-                "hits": EXPANSION_CACHE.hits,
-                "misses": EXPANSION_CACHE.misses,
+                "size": len(self.session.expansion_cache),
+                "hits": self.session.expansion_cache.hits,
+                "misses": self.session.expansion_cache.misses,
             },
             "trace_cache": {
-                "size": len(TRACE_CACHE),
-                "hits": TRACE_CACHE.hits,
-                "misses": TRACE_CACHE.misses,
-                "disk_hits": TRACE_CACHE.disk_hits,
-                "builds": TRACE_CACHE.builds,
+                "size": len(self.session.trace_cache),
+                "hits": self.session.trace_cache.hits,
+                "misses": self.session.trace_cache.misses,
+                "disk_hits": self.session.trace_cache.disk_hits,
+                "builds": self.session.trace_cache.builds,
             },
             "jobs": jobs,
             "last_sweep": last_sweep,
@@ -540,7 +696,10 @@ class SweepRequestHandler(BaseHTTPRequestHandler):
         def handle():
             length = int(self.headers.get("Content-Length", 0))
             body = json.loads(self.rfile.read(length) or b"{}")
-            if path == "/sweep":
+            if path == "/study":
+                study = Study.from_dict(body.get("study", body))
+                self._send(svc.study(study).to_json())
+            elif path == "/sweep":
                 spec = spec_from_dict(body.get("spec", body))
                 if body.get("enqueue"):
                     self._send(svc.enqueue(
@@ -619,6 +778,16 @@ class SweepClient:
         seeds = [int(s) for s in resp.get("seeds", [0])]
         return _decode_results(resp["results"], seeds)
 
+    def study(self, study: Study) -> StudyResult:
+        """Run a typed :class:`~repro.core.warpsim.api.Study` on the
+        daemon (``POST /study``); returns the typed
+        :class:`~repro.core.warpsim.api.StudyResult` (records + stats,
+        also stashed in :attr:`last_stats`)."""
+        resp = self._post("/study", {"study": study.to_dict()})
+        res = StudyResult.from_json(resp, backend="service")
+        self.last_stats = res.stats
+        return res
+
     def run_suite(self, machine_set: Optional[Mapping] = None,
                   benches: Iterable[str] = BENCHMARKS,
                   n_threads: Optional[int] = None, seed: int = 0,
@@ -643,6 +812,13 @@ class SweepClient:
         return self._get("/queue/status?" + urlencode({"job": job}))
 
 
+# Dead URLs already warned about (once per (env var, url) per process):
+# every sweep of a figure run probing the same dead daemon must not emit
+# its own copy of the identical warning.
+_WARNED_DEAD_URLS: set = set()
+_WARNED_LOCK = threading.Lock()
+
+
 def from_env(var: str = ENV_URL, probe: bool = True
              ) -> Optional[SweepClient]:
     """Client for the service named by ``$WARPSIM_SERVICE_URL``, or None.
@@ -650,7 +826,8 @@ def from_env(var: str = ENV_URL, probe: bool = True
     With `probe` (the default) a dead or unreachable service degrades to
     None with a warning — figure generation then falls back to in-process
     sweeps instead of failing, so the env var can stay exported even when
-    no daemon is up.
+    no daemon is up. The warning fires exactly once per process for a
+    given (env var, URL): repeat callers get the silent fallback.
     """
     url = os.environ.get(var)
     if not url:
@@ -660,10 +837,14 @@ def from_env(var: str = ENV_URL, probe: bool = True
         try:
             client.healthz()
         except Exception as e:  # noqa: BLE001 — any failure means "no service"
-            warnings.warn(
-                f"{var}={url} set but the service is unreachable "
-                f"({e.__class__.__name__}: {e}); falling back to in-process "
-                "sweeps", RuntimeWarning, stacklevel=2)
+            with _WARNED_LOCK:
+                first = (var, url) not in _WARNED_DEAD_URLS
+                _WARNED_DEAD_URLS.add((var, url))
+            if first:
+                warnings.warn(
+                    f"{var}={url} set but the service is unreachable "
+                    f"({e.__class__.__name__}: {e}); falling back to "
+                    "in-process sweeps", RuntimeWarning, stacklevel=2)
             return None
     return client
 

@@ -56,9 +56,14 @@ Usage (see ``examples/warpsize_study.py``)::
 Simulation results are bit-deterministic across processes (workload
 expansion draws everything from the workload seed and stable hashes), so a
 cache entry computed by any worker — or any earlier run — is exact.
-:data:`LAST_SWEEP_STATS` records cell/cache/grouping counters of the most
-recent ``run_sweep`` call in this process, surfaced by
-``benchmarks/sweep_bench.py``.
+:func:`run_sweep_with_stats` returns each run's private cell/cache/grouping
+counter snapshot (surfaced by ``benchmarks/sweep_bench.py``); the old
+``LAST_SWEEP_STATS`` global survives only as a deprecated alias behind a
+DeprecationWarning.
+
+This module is the low-level engine; ``repro.core.warpsim.api`` is the
+facade over it (typed ``Study``/``StudyResult``, pluggable backends,
+session-owned cache stack).
 """
 
 from __future__ import annotations
@@ -72,6 +77,7 @@ import json
 import os
 import tempfile
 import threading
+import warnings
 from typing import Dict, List, Mapping, Optional, Tuple
 
 import numpy as np
@@ -572,8 +578,21 @@ TRACE_CACHE = TraceCache(TRACE_CACHE_SIZE)
 # their own dict, while this global only ever holds whichever run
 # published last. Kept as the same mutable object across runs because
 # callers import it by value; updates are atomic under _STATS_LOCK.
-LAST_SWEEP_STATS: Dict[str, int] = {}
+# Reads go through the module ``__getattr__`` below, which emits a
+# DeprecationWarning — no in-repo caller reads it anymore.
+_LAST_SWEEP_STATS: Dict[str, int] = {}
 _STATS_LOCK = threading.Lock()
+
+
+def __getattr__(name: str):
+    if name == "LAST_SWEEP_STATS":
+        warnings.warn(
+            "sweep.LAST_SWEEP_STATS is deprecated: it is overwritten by "
+            "every concurrent sweep in the process. Use "
+            "run_sweep_with_stats() (or api.Session.run(...).stats) for a "
+            "per-run snapshot.", DeprecationWarning, stacklevel=2)
+        return _LAST_SWEEP_STATS
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 # ---------------------------------------------------------------------------
@@ -709,31 +728,41 @@ _GroupPayload = Tuple[str, Optional[int], int, List[MachineConfig], str,
                       bool, bool, Optional[str]]
 
 
-def _run_group(args: _GroupPayload) -> List[SimResult]:
+def _run_group(args: _GroupPayload,
+               trace_cache: Optional[TraceCache] = None,
+               expansion_cache: Optional[ExpansionCache] = None
+               ) -> List[SimResult]:
     """Worker: aggregate one expansion key's stream, simulate every member.
 
     Top-level for pickling. With `share_trace` the workload's ThreadTrace
-    comes from the per-process trace LRU (or its on-disk snapshot under
-    `trace_dir`), resolved lazily on an expansion-LRU miss — so every
-    expansion-key group of one workload handled by this process shares a
-    single trace build, and a worker that sees the same (bench, n_threads,
-    seed, expansion_key) bucket again — across chunks, or across run_sweep
+    comes from the trace LRU (or its on-disk snapshot under `trace_dir`),
+    resolved lazily on an expansion-LRU miss — so every expansion-key
+    group of one workload handled by this process shares a single trace
+    build, and a worker that sees the same (bench, n_threads, seed,
+    expansion_key) bucket again — across chunks, or across run_sweep
     calls in serial mode — skips re-aggregation entirely.
     `share_trace=False` keeps per-group single-phase expansion (the PR 2
     cold path, re-measured by ``benchmarks/sweep_bench.py``), and
     `reuse_expansion=False` bypasses every cache and expands from scratch
     (the PR 1 baseline); riding in the payload means the flags reach pool
     workers under any multiprocessing start method.
+
+    `trace_cache`/`expansion_cache` default to the module-global LRUs —
+    a serial sweep run through an :class:`api.Session` passes the
+    session-owned instances instead; pool workers always use their own
+    process's globals (cache objects hold locks and don't pickle).
     """
+    tcache = TRACE_CACHE if trace_cache is None else trace_cache
+    ecache = EXPANSION_CACHE if expansion_cache is None else expansion_cache
     bench, n_threads, seed, cfgs, engine, reuse, share, tdir = args
     wl = get_workload(bench, n_threads=n_threads, seed=seed)
     if reuse:
         if share:
-            stream = EXPANSION_CACHE.get(
+            stream = ecache.get(
                 wl, cfgs[0],
-                trace_fn=lambda: TRACE_CACHE.get(wl, root=tdir))
+                trace_fn=lambda: tcache.get(wl, root=tdir))
         else:
-            stream = EXPANSION_CACHE.get(wl, cfgs[0], single_phase=True)
+            stream = ecache.get(wl, cfgs[0], single_phase=True)
     else:
         stream = (expand_stream(wl, cfgs[0]) if share
                   else expand_stream_single(wl, cfgs[0]))
@@ -744,19 +773,26 @@ def _run_group(args: _GroupPayload) -> List[SimResult]:
 def compute_cell(bench: str, cfg: MachineConfig,
                  n_threads: Optional[int] = None, seed: int = 0,
                  engine: str = "auto",
-                 trace_dir: Optional[str] = None) -> SimResult:
-    """Simulate one grid cell through the per-process trace/expansion LRUs.
+                 trace_dir: Optional[str] = None,
+                 trace_cache: Optional[TraceCache] = None,
+                 expansion_cache: Optional[ExpansionCache] = None
+                 ) -> SimResult:
+    """Simulate one grid cell through the trace/expansion LRUs.
 
     The cell-at-a-time sibling of :func:`_run_group`, used by the sweep
-    service and work-queue workers: the stream comes from
-    :data:`EXPANSION_CACHE` (lazily backed by :data:`TRACE_CACHE`, with
+    service, work-queue workers and ``api.Session.cell``: the stream
+    comes from the expansion LRU (lazily backed by the trace LRU, with
     on-disk trace snapshots under `trace_dir` when given), so callers that
     walk cells in :func:`family_major_cells` order get the same trace- and
-    expansion-sharing as a grouped sweep.
+    expansion-sharing as a grouped sweep. The LRUs default to the
+    module-global instances; pass session-owned ones to keep the state
+    off the process globals.
     """
+    tcache = TRACE_CACHE if trace_cache is None else trace_cache
+    ecache = EXPANSION_CACHE if expansion_cache is None else expansion_cache
     wl = get_workload(bench, n_threads=n_threads, seed=seed)
-    stream = EXPANSION_CACHE.get(
-        wl, cfg, trace_fn=lambda: TRACE_CACHE.get(wl, root=trace_dir))
+    stream = ecache.get(
+        wl, cfg, trace_fn=lambda: tcache.get(wl, root=trace_dir))
     ops = stream.to_warp_ops() if engine == "event" else stream
     return simulate(wl.name, ops, cfg, engine=engine)
 
@@ -771,18 +807,20 @@ def run_sweep(
     reuse_expansion: bool = True,
     share_traces: bool = True,
     persist_traces: bool = False,
+    trace_cache: Optional[TraceCache] = None,
+    expansion_cache: Optional[ExpansionCache] = None,
 ) -> Dict[int, Dict[str, Dict[str, SimResult]]] | Dict[str, Dict[str, SimResult]]:
     """:func:`run_sweep_with_stats` without the stats snapshot.
 
-    Kept as the primary entry point for callers that only want numbers;
-    the per-run counters remain readable through the deprecated
-    :data:`LAST_SWEEP_STATS` alias this call publishes.
+    Kept as the primary low-level entry point for callers that only want
+    numbers (``repro.core.warpsim.api.Session`` is the facade above it).
     """
     results, _stats = run_sweep_with_stats(
         spec, cache=cache, parallel=parallel, max_workers=max_workers,
         engine=engine, group_expansion=group_expansion,
         reuse_expansion=reuse_expansion, share_traces=share_traces,
-        persist_traces=persist_traces)
+        persist_traces=persist_traces, trace_cache=trace_cache,
+        expansion_cache=expansion_cache)
     return results
 
 
@@ -796,16 +834,25 @@ def run_sweep_with_stats(
     reuse_expansion: bool = True,
     share_traces: bool = True,
     persist_traces: bool = False,
+    trace_cache: Optional[TraceCache] = None,
+    expansion_cache: Optional[ExpansionCache] = None,
 ) -> Tuple[Dict, Dict[str, int]]:
     """Run a sweep grid; returns ``(results, stats)``.
 
     ``results[machine][bench] -> SimResult`` as for :func:`run_sweep`;
     `stats` is this run's private counter snapshot (cells, cache hits and
     misses counted per cell actually probed by *this* run, grouping and
-    LRU counters). Unlike the :data:`LAST_SWEEP_STATS` global — which
-    concurrent sweeps overwrite — the snapshot is race-free per run; the
-    LRU deltas it carries still read process-wide caches and are
-    approximate when other threads sweep concurrently.
+    LRU counters). Unlike the deprecated ``LAST_SWEEP_STATS`` global —
+    which concurrent sweeps overwrite — the snapshot is race-free per
+    run; the LRU deltas it carries still read shared caches and are
+    approximate when other threads sweep through the same LRUs
+    concurrently.
+
+    `trace_cache`/`expansion_cache` select the LRU instances (default:
+    the module globals). An :class:`api.Session` passes its own — serial
+    sweeps then keep all LRU state session-local; pool workers always use
+    their own process's globals either way (the instances hold locks and
+    do not pickle).
 
     With multiple seeds the result is keyed ``results[seed][machine][bench]``.
     Cached cells are served from `cache`; uncached cells are bucketed by
@@ -829,6 +876,8 @@ def run_sweep_with_stats(
     the snapshot writes). Result ordering is deterministic — the spec's
     cell order — independent of worker completion order.
     """
+    tcache = TRACE_CACHE if trace_cache is None else trace_cache
+    ecache = EXPANSION_CACHE if expansion_cache is None else expansion_cache
     mset = spec.machine_set()
     cells = spec.cells(machine_set=mset)
     results: Dict[int, Dict[str, Dict[str, SimResult]]] = {
@@ -837,9 +886,9 @@ def run_sweep_with_stats(
     # probed below) instead of diffing the shared instance counters, so
     # concurrent sweeps against one cache don't bleed into each other.
     run_cache_hits = 0
-    exp_hits0, exp_miss0 = EXPANSION_CACHE.hits, EXPANSION_CACHE.misses
-    trc_hits0, trc_miss0 = TRACE_CACHE.hits, TRACE_CACHE.misses
-    trc_disk0 = TRACE_CACHE.disk_hits
+    exp_hits0, exp_miss0 = ecache.hits, ecache.misses
+    trc_hits0, trc_miss0 = tcache.hits, tcache.misses
+    trc_disk0 = tcache.disk_hits
 
     todo: List[Tuple[Cell, Optional[str]]] = []
     for mname, cfg, bench, n_threads, seed in cells:
@@ -927,7 +976,8 @@ def run_sweep_with_stats(
                     _scatter(members, group_res)
         else:
             for members, payload in zip(grp_members, payloads):
-                _scatter(members, _run_group(payload))
+                _scatter(members, _run_group(payload, trace_cache=tcache,
+                                             expansion_cache=ecache))
 
     stats = dict(
         cells=len(cells),
@@ -940,15 +990,15 @@ def run_sweep_with_stats(
         traces_shared=(n_groups - n_families if share_traces else 0),
         # LRU counter deltas of the sweep parent (serial sweeps; pool
         # workers keep their own caches, like the expansion LRU).
-        expansion_cache_hits=EXPANSION_CACHE.hits - exp_hits0,
-        expansion_cache_misses=EXPANSION_CACHE.misses - exp_miss0,
-        trace_cache_hits=TRACE_CACHE.hits - trc_hits0,
-        trace_cache_misses=TRACE_CACHE.misses - trc_miss0,
-        trace_disk_hits=TRACE_CACHE.disk_hits - trc_disk0,
+        expansion_cache_hits=ecache.hits - exp_hits0,
+        expansion_cache_misses=ecache.misses - exp_miss0,
+        trace_cache_hits=tcache.hits - trc_hits0,
+        trace_cache_misses=tcache.misses - trc_miss0,
+        trace_disk_hits=tcache.disk_hits - trc_disk0,
     )
     with _STATS_LOCK:
-        LAST_SWEEP_STATS.clear()
-        LAST_SWEEP_STATS.update(stats)
+        _LAST_SWEEP_STATS.clear()
+        _LAST_SWEEP_STATS.update(stats)
 
     # Re-impose the spec's machine/bench ordering (cache hits and parallel
     # completion both fill dicts out of order).

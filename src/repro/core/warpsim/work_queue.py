@@ -36,7 +36,7 @@ import sys
 import threading
 import time
 import urllib.request
-from typing import Dict, List, Optional
+from typing import Dict, List, Mapping, Optional
 
 from repro.core.warpsim.config import MachineConfig
 from repro.core.warpsim.sweep import (
@@ -165,6 +165,62 @@ class WorkQueue:
     def done(self) -> bool:
         with self._lock:
             return all(c.state == _DONE for c in self.chunks)
+
+    # ------------------------------------------------------- persistence
+
+    def to_dict(self) -> dict:
+        """JSON-safe snapshot of the whole queue (sweep service crash
+        recovery: jobs are rewritten under the cache root on every
+        enqueue/lease/complete).
+
+        Lease deadlines are monotonic-clock values, meaningless to another
+        process — they are stored as *remaining* seconds and re-anchored
+        to the loader's clock, so a lease keeps (at most) its remaining
+        time across a daemon restart and then expires/requeues normally.
+        """
+        with self._lock:
+            now = self._clock()
+            return {
+                "total_cells": self.total_cells,
+                "lease_seconds": self.lease_seconds,
+                "leases_granted": self.leases_granted,
+                "leases_expired": self.leases_expired,
+                "stale_completions": self.stale_completions,
+                "chunks": [{
+                    "chunk_id": c.chunk_id,
+                    "cells": [cell_to_wire(cell) for cell in c.cells],
+                    "state": c.state,
+                    "worker": c.worker,
+                    "attempts": c.attempts,
+                    "lease_remaining": (max(0.0, c.deadline - now)
+                                        if c.state == _LEASED else 0.0),
+                } for c in self.chunks],
+            }
+
+    @classmethod
+    def from_dict(cls, d: Mapping, clock=time.monotonic) -> "WorkQueue":
+        """Inverse of :meth:`to_dict` — restores chunk boundaries, states,
+        workers and counters verbatim (no re-sharding: chunk ids must stay
+        stable so in-flight workers' renew/complete calls keep landing)."""
+        q = cls.__new__(cls)
+        q.total_cells = int(d["total_cells"])
+        q.lease_seconds = float(d["lease_seconds"])
+        q._clock = clock
+        q._lock = threading.Lock()
+        q.leases_granted = int(d.get("leases_granted", 0))
+        q.leases_expired = int(d.get("leases_expired", 0))
+        q.stale_completions = int(d.get("stale_completions", 0))
+        now = clock()
+        q.chunks = [
+            Chunk(int(cd["chunk_id"]),
+                  [cell_from_wire(w) for w in cd["cells"]],
+                  state=cd["state"], worker=cd.get("worker"),
+                  deadline=(now + float(cd.get("lease_remaining", 0.0))
+                            if cd["state"] == _LEASED else 0.0),
+                  attempts=int(cd.get("attempts", 0)))
+            for cd in d["chunks"]
+        ]
+        return q
 
     def status(self) -> Dict[str, int]:
         with self._lock:

@@ -1,0 +1,365 @@
+"""Facade tests: Study/StudyResult typing and serialization, the Session
+cache-stack ownership contract, backend parity (in-process vs service vs
+queue), and environment-driven backend selection."""
+
+import dataclasses
+import json
+import threading
+
+import pytest
+
+from repro.core.warpsim import api, machines
+from repro.core.warpsim import service as service_mod
+from repro.core.warpsim import sweep as sweep_mod
+from repro.core.warpsim.api import (
+    InProcessBackend, QueueBackend, RunRecord, ServiceBackend, Session,
+    Study, StudyResult,
+)
+from repro.core.warpsim.service import SweepService, resolve_machine, serve
+from repro.core.warpsim.sweep import (
+    ResultCache, SweepSpec, run_sweep, spec_from_dict, spec_to_dict,
+)
+
+SMALL = dict(benches=("BFS", "DYN"), n_threads=128)
+
+
+def _study(**kw):
+    base = dict(machines={"ws8": machines.baseline(8),
+                          "SW+": machines.sw_plus()}, **SMALL)
+    base.update(kw)
+    return Study(**base)
+
+
+@pytest.fixture()
+def live(tmp_path):
+    """A SweepService bound to an ephemeral HTTP port."""
+    svc = SweepService(str(tmp_path / "cache"), lease_seconds=30.0)
+    httpd = serve(svc)
+    thread = threading.Thread(target=httpd.serve_forever, daemon=True)
+    thread.start()
+    url = "http://%s:%d" % httpd.server_address[:2]
+    try:
+        yield svc, url
+    finally:
+        httpd.shutdown()
+        httpd.server_close()
+
+
+# ------------------------------------------------------------------- Study
+
+def test_study_spec_adapters_roundtrip():
+    spec = SweepSpec(machines={"ws8": machines.baseline(8)},
+                     benches=("BFS",), n_threads=256, seeds=(0, 1))
+    study = Study.from_spec(spec, engine="fast")
+    assert study.engine == "fast"
+    assert study.to_spec() == spec
+    assert study.cells() == spec.cells()
+    # warp_size_range parity with the spec classmethod.
+    dense = Study.warp_size_range(4, 32, benches=("DYN",))
+    assert dense.to_spec() == SweepSpec.warp_size_range(4, 32,
+                                                        benches=("DYN",))
+
+
+def test_study_dict_roundtrip_through_json():
+    study = _study(seeds=(0, 2), engine="native")
+    blob = json.loads(json.dumps(study.to_dict()))
+    assert Study.from_dict(blob) == study
+    # engine defaults to auto when absent (old clients' spec dicts).
+    spec_only = spec_to_dict(study.to_spec())
+    assert Study.from_dict(spec_only).engine == "auto"
+
+
+# --------------------------------------------- serialization property test
+
+def test_custom_machine_spec_roundtrip():
+    """Always-run sibling of the property test below: one query-param-
+    assembled "custom" config survives the spec and Study wire trips."""
+    cfg = resolve_machine({"machine": "ws16", "warp_size": "32",
+                           "mimd": "1", "dram_bw_gbps": "123.45"})
+    assert cfg.name == "custom"
+    spec = SweepSpec(machines={"custom": cfg}, benches=("DYN",),
+                     n_threads=128, seeds=(0, 3))
+    assert spec_from_dict(json.loads(json.dumps(spec_to_dict(spec)))) == spec
+    study = Study.from_spec(spec, engine="fast")
+    assert Study.from_dict(json.loads(json.dumps(study.to_dict()))) == study
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # CI installs hypothesis; bare hosts skip
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    _BENCH_POOL = ("BFS", "BKP", "DYN", "MTM", "NQU", "SR1")
+
+    @st.composite
+    def _query_param_machines(draw):
+        """A MachineConfig assembled exactly the way ``GET /cell`` does
+        it: a preset plus query-param string field overrides through
+        ``resolve_machine`` (the satellite's "custom" config shape)."""
+        simd = draw(st.sampled_from((4, 8)))
+        warp = simd * draw(st.sampled_from((1, 2, 4, 8)))
+        params = {"machine": f"ws{warp}", "simd_width": str(simd)}
+        if draw(st.booleans()):
+            params["warp_size"] = str(
+                simd * draw(st.sampled_from((1, 2, 4, 8))))
+            params["threads_per_sm"] = str(1024)
+        if draw(st.booleans()):
+            params["mimd"] = draw(st.sampled_from(("1", "true", "0", "off")))
+        if draw(st.booleans()):
+            params["dram_latency_cycles"] = str(draw(st.integers(1, 1000)))
+        if draw(st.booleans()):
+            params["dram_bw_gbps"] = str(draw(st.floats(
+                1.0, 500.0, allow_nan=False, allow_infinity=False)))
+        if draw(st.booleans()):
+            params["transaction_bytes"] = str(draw(st.sampled_from((32,
+                                                                    64))))
+        if draw(st.booleans()):
+            params["name"] = draw(st.text(
+                alphabet="abcdefgh+_0123456789", min_size=1, max_size=12))
+        return resolve_machine(params)
+
+    _grids = st.builds(
+        dict,
+        benches=st.lists(st.sampled_from(_BENCH_POOL), unique=True,
+                         max_size=4).map(tuple),
+        machines=st.one_of(
+            st.none(),
+            st.dictionaries(
+                st.text(alphabet="abcdefgh+_0123456789", min_size=1,
+                        max_size=8),
+                _query_param_machines(), min_size=1, max_size=3)),
+        warp_sizes=st.lists(st.sampled_from((4, 8, 16, 32, 64)),
+                            unique=True, max_size=3).map(tuple),
+        simd_width=st.sampled_from((4, 8)),
+        n_threads=st.one_of(st.none(), st.sampled_from((128, 256, 512))),
+        seeds=st.lists(st.integers(0, 9), unique=True, min_size=1,
+                       max_size=3).map(tuple),
+    )
+
+    @settings(max_examples=60, deadline=None)
+    @given(grid=_grids, engine=st.sampled_from(("auto", "native", "fast",
+                                                "event")))
+    def test_spec_and_study_serialization_roundtrip(grid, engine):
+        """spec_to_dict/spec_from_dict and Study.to_dict/from_dict invert
+        each other through an actual JSON wire trip for arbitrary grids,
+        including query-param-assembled "custom" machine configs."""
+        spec = SweepSpec(**grid)
+        wire = json.loads(json.dumps(spec_to_dict(spec)))
+        back = spec_from_dict(wire)
+        assert back == spec
+        assert back.cells() == spec.cells()
+
+        study = Study(engine=engine, **grid)
+        sblob = json.loads(json.dumps(study.to_dict()))
+        assert Study.from_dict(sblob) == study
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_spec_and_study_serialization_roundtrip():
+        pass
+
+
+# ------------------------------------------------------------- StudyResult
+
+def test_study_result_accessors(tmp_path):
+    study = _study(seeds=(0, 1))
+    res = Session(cache_dir=str(tmp_path)).run(study)
+    assert res.backend == "inprocess"
+    assert len(res) == len(study.cells())
+    assert res.machines == ("ws8", "SW+")
+    assert res.benches == ("BFS", "DYN")
+    assert res.seeds == (0, 1)
+    # by() filters chainably; one() demands a unique record.
+    sub = res.by(machine="SW+", bench="DYN")
+    assert [r.seed for r in sub] == [0, 1]
+    cell = sub.by(seed=1).one()
+    assert cell.cycles > 0
+    with pytest.raises(ValueError):
+        sub.one()
+    # per_bench needs an explicit seed on multi-seed results.
+    with pytest.raises(ValueError):
+        res.per_bench("ws8")
+    per_b = res.per_bench("ws8", seed=0)
+    assert list(per_b) == ["BFS", "DYN"]
+    with pytest.raises(KeyError):
+        res.per_bench("nope", seed=0)
+    # legacy grids reproduce both historical shapes exactly.
+    legacy = res.legacy_grid()
+    assert set(legacy) == {0, 1}
+    assert legacy[0]["ws8"]["BFS"] is res.by(machine="ws8", bench="BFS",
+                                             seed=0).one()
+    single = Session().run(_study(benches=("DYN",)))
+    assert list(single.legacy_grid()) == ["ws8", "SW+"]
+    # bands() has the mean/min/max shape even single-seed.
+    b = single.bands()
+    for v in b.values():
+        assert v["min"] <= v["mean"] <= v["max"]
+
+
+def test_study_result_json_roundtrip(tmp_path):
+    res = Session(cache_dir=str(tmp_path)).run(_study())
+    blob = json.loads(json.dumps(res.to_json()))
+    back = StudyResult.from_json(blob)
+    assert back.records == res.records
+    assert back.stats == res.stats and back.backend == res.backend
+
+
+def test_in_process_backend_matches_run_sweep(tmp_path):
+    study = _study(seeds=(0, 1))
+    ref = run_sweep(study.to_spec(), parallel=False)
+    res = Session().run(study, backend=InProcessBackend(parallel=False))
+    for rec in res.records:
+        assert (dataclasses.asdict(rec.result)
+                == dataclasses.asdict(ref[rec.seed][rec.machine][rec.bench]))
+    # records_from_grid ordering is the spec's fixed cell order.
+    assert [(r.machine, r.bench, r.seed) for r in res.records] == \
+        [(m, b, s) for m, _c, b, _n, s in study.cells()]
+
+
+# ----------------------------------------------------- session cache stack
+
+def test_session_owns_cache_stack(tmp_path):
+    """A session's sweeps must fill the session-owned LRUs and leave the
+    module globals untouched (the instance-state-behind-globals tentpole
+    contract); a second session is equally isolated."""
+    sweep_mod.TRACE_CACHE.clear()
+    sweep_mod.EXPANSION_CACHE.clear()
+    s1 = Session(cache_dir=str(tmp_path / "a"))
+    s2 = Session(cache_dir=str(tmp_path / "b"))
+    res = s1.run(_study(benches=("DYN",)))
+    assert res.stats["simulated"] == 2
+    assert sweep_mod.TRACE_CACHE.misses == 0
+    assert sweep_mod.EXPANSION_CACHE.misses == 0
+    assert s1.trace_cache.misses == 1 and len(s1.trace_cache) == 1
+    assert s2.trace_cache.misses == 0 and len(s2.trace_cache) == 0
+    # Re-running in the same session rides its expansion LRU...
+    res2 = s1.run(_study(benches=("DYN",)))
+    assert res2.stats["cache_hits"] == 2       # served from s1's disk cache
+    # ...and cache_stats surfaces the owned stack's counters.
+    cs = s1.cache_stats()
+    assert cs["trace_cache"]["misses"] == 1
+    assert cs["result_cache"]["entries"] == 2
+
+
+def test_default_session_wraps_module_globals():
+    ds = api.default_session()
+    assert ds is api.default_session()
+    assert ds.trace_cache is sweep_mod.TRACE_CACHE
+    assert ds.expansion_cache is sweep_mod.EXPANSION_CACHE
+
+
+def test_session_cell_uses_result_cache(tmp_path):
+    s = Session(cache_dir=str(tmp_path))
+    a = s.cell("DYN", "ws8", n_threads=128)
+    assert s.result_cache.count() == 1
+    b = s.cell("DYN", machines.baseline(8), n_threads=128)
+    assert s.result_cache.hits == 1
+    assert dataclasses.asdict(a) == dataclasses.asdict(b)
+    with pytest.raises(ValueError):
+        s.cell("DYN", "warp9000")
+
+
+# --------------------------------------------------------- backend parity
+
+def test_three_backends_bit_identical_records(live, tmp_path):
+    """The acceptance contract: Session(backend=...).run(study) returns
+    bit-identical StudyResult records across in-process, service and
+    queue backends (the CI facade-parity job runs the same assertion over
+    a subprocess daemon)."""
+    svc, url = live
+    study = _study(seeds=(0, 1))
+    queue_res = Session(backend=QueueBackend(url, chunk_size=2)).run(study)
+    assert queue_res.stats["queue_cells_computed"] == len(study.cells())
+    service_res = Session(backend=ServiceBackend(url)).run(study)
+    assert service_res.stats["simulated"] == 0      # daemon cache is warm
+    inproc_res = Session(cache_dir=str(tmp_path / "local")).run(study)
+    assert inproc_res.stats["simulated"] == len(study.cells())
+    assert (queue_res.records == service_res.records
+            == inproc_res.records)
+    assert {queue_res.backend, service_res.backend, inproc_res.backend} \
+        == {"queue", "service", "inprocess"}
+
+
+def test_service_backend_multi_seed_and_stats(live):
+    _svc, url = live
+    res = Session(backend=ServiceBackend(url)).run(
+        _study(benches=("BFS",), seeds=(0, 1)))
+    assert res.seeds == (0, 1)
+    assert (res.by(machine="ws8", seed=0).one().cycles
+            != res.by(machine="ws8", seed=1).one().cycles)
+    assert res.stats["cells"] == 4
+    assert res.stats["simulated"] + res.stats["dedup_waits"] == 4
+
+
+# ------------------------------------------------------- backend selection
+
+def test_from_env_prefers_live_service(live, monkeypatch):
+    _svc, url = live
+    monkeypatch.setenv("WARPSIM_SERVICE_URL", url)
+    monkeypatch.delenv("WARPSIM_BACKEND", raising=False)
+    session = Session.from_env()
+    assert isinstance(session.backend, ServiceBackend)
+    assert session.backend.url == url
+
+
+def test_from_env_falls_back_in_process(tmp_path, monkeypatch):
+    monkeypatch.delenv("WARPSIM_SERVICE_URL", raising=False)
+    monkeypatch.delenv("WARPSIM_BACKEND", raising=False)
+    session = Session.from_env(cache_dir=str(tmp_path))
+    assert isinstance(session.backend, InProcessBackend)
+    assert session.result_cache.root == str(tmp_path)
+    # Dead URL: silent-once fallback handled by service.from_env.
+    monkeypatch.setattr(service_mod, "_WARNED_DEAD_URLS", set())
+    monkeypatch.setenv("WARPSIM_SERVICE_URL", "http://127.0.0.1:9")
+    with pytest.warns(RuntimeWarning, match="unreachable"):
+        session = Session.from_env(cache_dir=str(tmp_path))
+    assert isinstance(session.backend, InProcessBackend)
+
+
+def test_from_env_explicit_backend_choices(live, tmp_path, monkeypatch):
+    svc, url = live
+    monkeypatch.setenv("WARPSIM_BACKEND", "inprocess")
+    monkeypatch.setenv("WARPSIM_SERVICE_URL", url)
+    assert isinstance(Session.from_env().backend, InProcessBackend)
+    monkeypatch.setenv("WARPSIM_BACKEND", "queue")
+    assert isinstance(Session.from_env().backend, QueueBackend)
+    monkeypatch.setenv("WARPSIM_BACKEND", "service")
+    assert isinstance(Session.from_env().backend, ServiceBackend)
+    # Explicit remote choices fail loudly when the URL is absent/dead.
+    monkeypatch.delenv("WARPSIM_SERVICE_URL", raising=False)
+    with pytest.raises(ValueError):
+        monkeypatch.setenv("WARPSIM_BACKEND", "queue")
+        Session.from_env()
+    monkeypatch.setenv("WARPSIM_SERVICE_URL", "http://127.0.0.1:9")
+    with pytest.raises(RuntimeError):
+        Session.from_env()              # dead daemon: probed, not deferred
+    monkeypatch.setattr(service_mod, "_WARNED_DEAD_URLS", set())
+    monkeypatch.setenv("WARPSIM_BACKEND", "service")
+    monkeypatch.setenv("WARPSIM_SERVICE_URL", "http://127.0.0.1:9")
+    with pytest.warns(RuntimeWarning, match="unreachable"):
+        with pytest.raises(RuntimeError):
+            Session.from_env()
+    monkeypatch.setenv("WARPSIM_BACKEND", "bogus")
+    with pytest.raises(ValueError):
+        Session.from_env()
+
+
+# ------------------------------------------------- legacy-shim equivalence
+
+def test_run_suite_shim_unchanged_shapes(tmp_path):
+    """The deprecated runner.run_suite keeps its exact legacy shapes on
+    top of the facade (goldens and callers must not notice the rewrite)."""
+    from repro.core.warpsim import runner
+    mset = {"ws8": machines.baseline(8), "SW+": machines.sw_plus()}
+    flat = runner.run_suite(mset, benches=("DYN",), n_threads=128,
+                            cache=ResultCache(str(tmp_path)),
+                            parallel=False)
+    assert list(flat) == ["ws8", "SW+"] and list(flat["ws8"]) == ["DYN"]
+    seeded = runner.run_suite(mset, benches=("DYN",), n_threads=128,
+                              seeds=(0, 1), parallel=False)
+    assert set(seeded) == {0, 1}
+    ref = run_sweep(SweepSpec(machines=mset, benches=("DYN",),
+                              n_threads=128), parallel=False)
+    assert (dataclasses.asdict(flat["SW+"]["DYN"])
+            == dataclasses.asdict(ref["SW+"]["DYN"]))

@@ -4,6 +4,7 @@ health reporting."""
 
 import dataclasses
 import json
+import os
 import threading
 import time
 import urllib.error
@@ -254,7 +255,25 @@ def test_from_env_probe_and_fallback(live, monkeypatch):
     client = service_mod.from_env()
     assert client is not None and client.healthz()["ok"] is True
     # A dead service degrades to None with a warning, not a failure.
+    monkeypatch.setattr(service_mod, "_WARNED_DEAD_URLS", set())
     monkeypatch.setenv("WARPSIM_SERVICE_URL", "http://127.0.0.1:9")
+    with pytest.warns(RuntimeWarning, match="unreachable"):
+        assert service_mod.from_env() is None
+
+
+def test_from_env_dead_url_warns_exactly_once(monkeypatch):
+    """Regression: every sweep of a figure run used to emit its own copy
+    of the dead-URL warning; now the first probe warns and every repeat
+    caller gets the silent fallback."""
+    monkeypatch.setattr(service_mod, "_WARNED_DEAD_URLS", set())
+    monkeypatch.setenv("WARPSIM_SERVICE_URL", "http://127.0.0.1:9")
+    with pytest.warns(RuntimeWarning, match="unreachable"):
+        assert service_mod.from_env() is None
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")          # a second warning raises
+        assert service_mod.from_env() is None
+    # A *different* dead URL is news and warns again.
+    monkeypatch.setenv("WARPSIM_SERVICE_URL", "http://127.0.0.1:19")
     with pytest.warns(RuntimeWarning, match="unreachable"):
         assert service_mod.from_env() is None
 
@@ -433,6 +452,87 @@ def test_queue_end_to_end_with_worker_death(live):
     assert stats["simulated"] == 0
     assert stats["cache_hits"] == len(spec.cells())
     assert svc.counters["queue_cells_adopted"] == len(spec.cells())
+
+
+def test_work_queue_dict_roundtrip():
+    """to_dict/from_dict restore chunk boundaries, cells, states, workers
+    and counters verbatim (the daemon-restart persistence contract)."""
+    clock = FakeClock()
+    q = WorkQueue(_cells(_spec()), chunk_size=1, lease_seconds=10,
+                  clock=clock)
+    leased = q.lease("w1")
+    q.complete(q.lease("w1").chunk_id, "w1")
+    clock.t = 4.0                       # leased chunk has 6s remaining
+
+    clock2 = FakeClock()
+    clock2.t = 100.0                    # a "restarted daemon's" clock
+    q2 = WorkQueue.from_dict(q.to_dict(), clock=clock2)
+    assert q2.status() == q.status()
+    assert [c.cells for c in q2.chunks] == [c.cells for c in q.chunks]
+    assert q2.chunks[leased.chunk_id].worker == "w1"
+    # The lease carried its *remaining* time, re-anchored to the new
+    # clock: still held at +5s, reclaimable after the remaining 6s.
+    clock2.t = 105.0
+    assert q2.renew(leased.chunk_id, "w1")
+    clock2.t = 120.0
+    reclaimed = q2.lease("w2")
+    assert reclaimed.chunk_id == leased.chunk_id
+
+
+def test_service_queue_jobs_survive_restart(tmp_path):
+    """A daemon restart must not forget half-drained sweeps: job state is
+    reloaded from <cache root>/queue/jobs.json with chunk ids, completed
+    work and the job-id sequence intact, and the job drains to done."""
+    spec = _spec()
+    svc = SweepService(str(tmp_path), persist_traces=False)
+    job = svc.enqueue(spec, chunk_size=1)
+    got = svc.queue_lease(job["job"], "w1")
+    svc.queue_complete(job["job"], got["chunk"], "w1", [])
+
+    svc2 = SweepService(str(tmp_path), persist_traces=False)
+    st = svc2.queue_status(job["job"])
+    assert st["chunks"] == 4 and st["completed"] == 1
+    # Job ids keep counting up — a restart must never reuse a live id.
+    job2 = svc2.enqueue(_spec(benches=("BFS",)))
+    assert job2["job"] != job["job"]
+    # The surviving chunks drain normally on the new daemon.
+    while True:
+        got = svc2.queue_lease(job["job"], "w2")
+        if got["chunk"] is None:
+            break
+        svc2.queue_complete(job["job"], got["chunk"], "w2", [])
+    assert svc2.queue_status(job["job"])["completed"] == 4
+
+    # ... and the drained state is itself persisted for the next restart.
+    svc3 = SweepService(str(tmp_path), persist_traces=False)
+    assert svc3.queue_status(job["job"])["completed"] == 4
+
+
+def test_service_queue_persistence_corrupt_file_degrades(tmp_path):
+    """A corrupt job snapshot is dropped (and deleted) without taking the
+    other jobs or the job-id sequence down with it."""
+    svc = SweepService(str(tmp_path), persist_traces=False)
+    job1 = svc.enqueue(_spec(benches=("BFS",)))
+    job2 = svc.enqueue(_spec(benches=("DYN",)))
+    with open(svc._job_path(job1["job"]), "w") as f:
+        f.write("{ not json")
+    fresh = SweepService(str(tmp_path), persist_traces=False)
+    assert set(fresh._jobs) == {job2["job"]}    # corrupt job-1 dropped
+    assert not os.path.exists(svc._job_path(job1["job"]))
+    # The sequence survives (meta.json): new jobs never reuse a dead id.
+    job3 = fresh.enqueue(_spec(benches=("BFS",)))
+    assert job3["job"] == "job-3"
+
+
+def test_service_queue_seq_rederived_from_job_names(tmp_path):
+    """Losing meta.json must not recycle a live job id: the sequence
+    floor falls back to the persisted job file names."""
+    svc = SweepService(str(tmp_path), persist_traces=False)
+    job = svc.enqueue(_spec(benches=("BFS",)))
+    os.remove(os.path.join(svc._queue_dir, SweepService._META))
+    fresh = SweepService(str(tmp_path), persist_traces=False)
+    assert set(fresh._jobs) == {job["job"]}
+    assert fresh.enqueue(_spec(benches=("DYN",)))["job"] == "job-2"
 
 
 def test_enqueue_evicts_old_jobs(tmp_path):

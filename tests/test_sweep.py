@@ -222,28 +222,28 @@ def test_sweep_stats_expansion_groups():
     spec = _spec(machines={"ws8": machines.baseline(8),
                            "SW+": machines.sw_plus(),
                            "ws16": machines.baseline(16)})
-    run_sweep(spec, parallel=False)
-    stats = dict(sweep_mod.LAST_SWEEP_STATS)
+    _res, stats = run_sweep_with_stats(spec, parallel=False)
     assert stats["cells"] == stats["simulated"] == 9
     assert stats["expansion_groups"] == 6       # 3 benches x {ws8/SW+, ws16}
     assert stats["expansions_saved"] == 3
     assert stats["cache_hits"] == stats["cache_misses"] == 0
 
-    run_sweep(spec, parallel=False, group_expansion=False)
-    stats = dict(sweep_mod.LAST_SWEEP_STATS)
+    _res, stats = run_sweep_with_stats(spec, parallel=False,
+                                       group_expansion=False)
     assert stats["expansion_groups"] == 9 and stats["expansions_saved"] == 0
 
 
 def test_sweep_stats_cache_counters(tmp_path):
     cache = ResultCache(str(tmp_path))
     spec = _spec(benches=("DYN",))
-    run_sweep(spec, cache=cache, parallel=False)
-    assert sweep_mod.LAST_SWEEP_STATS["cache_misses"] == 2
-    assert sweep_mod.LAST_SWEEP_STATS["cache_hits"] == 0
-    run_sweep(spec, cache=ResultCache(str(tmp_path)), parallel=False)
-    assert sweep_mod.LAST_SWEEP_STATS["cache_hits"] == 2
-    assert sweep_mod.LAST_SWEEP_STATS["simulated"] == 0
-    assert sweep_mod.LAST_SWEEP_STATS["expansion_groups"] == 0
+    _res, stats = run_sweep_with_stats(spec, cache=cache, parallel=False)
+    assert stats["cache_misses"] == 2
+    assert stats["cache_hits"] == 0
+    _res, stats = run_sweep_with_stats(
+        spec, cache=ResultCache(str(tmp_path)), parallel=False)
+    assert stats["cache_hits"] == 2
+    assert stats["simulated"] == 0
+    assert stats["expansion_groups"] == 0
 
 
 def test_expansion_cache_lru_bound():
@@ -426,8 +426,7 @@ def test_sweep_stats_trace_families():
                            "ws16": machines.baseline(16)})
     sweep_mod.TRACE_CACHE.clear()
     sweep_mod.EXPANSION_CACHE.clear()
-    run_sweep(spec, parallel=False)
-    stats = dict(sweep_mod.LAST_SWEEP_STATS)
+    _res, stats = run_sweep_with_stats(spec, parallel=False)
     assert stats["trace_families"] == 2
     assert stats["expansion_groups"] == 4
     assert stats["traces_shared"] == 2
@@ -439,13 +438,12 @@ def test_sweep_stats_trace_families():
 
     # Serial re-sweep in the same process: streams come from the expansion
     # LRU, the trace layer is never touched (lazy trace_fn).
-    run_sweep(spec, parallel=False)
-    stats = dict(sweep_mod.LAST_SWEEP_STATS)
+    _res, stats = run_sweep_with_stats(spec, parallel=False)
     assert stats["expansion_cache_hits"] == 4
     assert stats["trace_cache_hits"] == stats["trace_cache_misses"] == 0
 
-    run_sweep(spec, parallel=False, share_traces=False)
-    stats = dict(sweep_mod.LAST_SWEEP_STATS)
+    _res, stats = run_sweep_with_stats(spec, parallel=False,
+                                       share_traces=False)
     assert stats["traces_shared"] == 0
 
 
@@ -465,10 +463,11 @@ def test_sweep_persist_traces_writes_beside_result_cache(tmp_path):
     ref = run_sweep(spec, cache=cache, parallel=False, persist_traces=True)
     assert cache.hits == len(spec.cells())
     sweep_mod.TRACE_CACHE.clear()
-    run_sweep(_spec(benches=("DYN",), n_threads=128),
-              cache=ResultCache(str(tmp_path)), parallel=False,
-              persist_traces=True)
-    assert sweep_mod.LAST_SWEEP_STATS["trace_disk_hits"] == 0  # new key
+    _res2, stats = run_sweep_with_stats(
+        _spec(benches=("DYN",), n_threads=128),
+        cache=ResultCache(str(tmp_path)), parallel=False,
+        persist_traces=True)
+    assert stats["trace_disk_hits"] == 0        # new key
     sweep_mod.TRACE_CACHE.clear()
     run_sweep(_spec(benches=("DYN",), n_threads=128, seeds=(0,)),
               parallel=False)
@@ -606,16 +605,28 @@ def test_run_sweep_with_stats_snapshot(tmp_path):
     assert res["SW+"]["DYN"].cycles > 0
     assert stats["cells"] == 2 and stats["simulated"] == 2
     assert stats["cache_hits"] == 0 and stats["cache_misses"] == 2
-    # The deprecated global alias carries the same numbers ...
-    assert dict(sweep_mod.LAST_SWEEP_STATS) == stats
-    # ... but the snapshot is private: a later sweep rewrites the global
-    # while earlier callers' dicts are untouched.
+    # The snapshot is private: a later sweep hands out a fresh dict while
+    # earlier callers' dicts are untouched.
     first = stats
     _res2, stats2 = run_sweep_with_stats(
         spec, cache=ResultCache(str(tmp_path)), parallel=False)
     assert stats2["cache_hits"] == 2 and stats2["simulated"] == 0
     assert first["simulated"] == 2
-    assert dict(sweep_mod.LAST_SWEEP_STATS) == stats2
+
+
+def test_last_sweep_stats_alias_is_deprecated(tmp_path):
+    """The retired global stays readable for one release of warning: the
+    access itself raises DeprecationWarning and the dict carries the most
+    recently published run's numbers."""
+    spec = _spec(benches=("DYN",))
+    _res, stats = run_sweep_with_stats(
+        spec, cache=ResultCache(str(tmp_path)), parallel=False)
+    with pytest.warns(DeprecationWarning, match="run_sweep_with_stats"):
+        alias = sweep_mod.LAST_SWEEP_STATS
+    assert dict(alias) == stats
+    # Attribute passthrough stays strict for everything else.
+    with pytest.raises(AttributeError):
+        sweep_mod.NO_SUCH_ATTRIBUTE
 
 
 # ------------------------------------------------------- locked LRU smoke
