@@ -26,6 +26,7 @@ Exit code 0 iff every assertion holds.
 
 from __future__ import annotations
 
+import dataclasses
 import tempfile
 
 from benchmarks.service_smoke import _get, boot_daemon
@@ -76,13 +77,34 @@ def main(argv=None) -> None:
         print(f"facade-parity: in-process backend simulated "
               f"{inproc_res.stats['simulated']} cells")
 
+        # 4. The device engine, where jax imports: the same grid with
+        # engine="pallas" (one jit launch per trace family) must yield
+        # the same records — the engine axis can never change a number.
+        from repro.core.warpsim import _pallas
+        pallas_wire = None
+        if _pallas.available():
+            pallas_dir = tempfile.mkdtemp(prefix="warpsim-facade-pallas-")
+            pallas_res = api.Session(cache_dir=pallas_dir).run(
+                dataclasses.replace(study, engine="pallas"))
+            n_families = len(study.benches) * len(study.seeds)
+            assert pallas_res.stats["family_launches"] == n_families, \
+                pallas_res.stats
+            pallas_wire = [r.to_wire() for r in pallas_res.records]
+            print(f"facade-parity: pallas engine simulated the grid in "
+                  f"{pallas_res.stats['family_launches']} family launches")
+        else:
+            print("facade-parity: pallas engine unavailable, leg skipped")
+
         # The contract: bit-identical records, in the same order.
         wires = {res.backend: [r.to_wire() for r in res.records]
                  for res in (queue_res, service_res, inproc_res)}
         assert wires["queue"] == wires["service"] == wires["inprocess"], \
             "backends disagree on records"
+        assert pallas_wire is None or pallas_wire == wires["inprocess"], \
+            "pallas engine disagrees with the flat engines"
         print(f"facade-parity: {n_cells} records bit-identical across "
-              f"queue / service / inprocess")
+              f"queue / service / inprocess"
+              + (" / pallas" if pallas_wire is not None else ""))
         print("facade-parity OK")
 
 

@@ -22,6 +22,11 @@ the speedups the sweep subsystem exists to deliver:
   core when available) + the flat-CSR/native timing engine, fresh (empty)
   cache.
 * ``warm`` — same sweep again over the now-populated cache.
+* ``cold_pallas`` — the grid again through ``engine="pallas"`` over a
+  fresh cache (jax importable only): ONE jit device launch per trace
+  family. Reported, never floor-asserted — on CPU hosts the XLA loop
+  loses to the C core by design; the asserted contract is the launch
+  *count* (one per family) and bit-identity with the reference loop.
 
 The in-process trace/expansion LRUs are cleared between phases so every
 cold number is an honest from-scratch measurement. Extra rows surface the
@@ -35,8 +40,8 @@ Speedup floors are asserted (tunable via CLI): ``cold`` must beat
 ``--min-speedup-event`` (default 8). ``--quick`` shrinks the grid for CI
 smoke runs (floors scale down: parallel/pool overhead dominates tiny
 grids) and ``--json PATH`` dumps the rows for artifact upload — and also
-refreshes the repo-root ``BENCH_PR3.json`` trajectory entry so future PRs
-can diff cold/warm/trace-phase timings against this one.
+refreshes the repo-root ``BENCH_PR6.json`` trajectory entry so future PRs
+can diff cold/warm/trace-phase/device timings against this one.
 
 Rows follow the harness CSV convention ``(name, us_per_call, derived)``
 where `derived` carries the speedup vs the serial event path (timing
@@ -53,7 +58,7 @@ import tempfile
 import time
 from typing import List, Optional, Tuple
 
-from repro.core.warpsim import _native, machines, runner, sweep
+from repro.core.warpsim import _native, _pallas, machines, runner, sweep
 from repro.core.warpsim.divergence import build_thread_trace
 from repro.core.warpsim.trace import BENCHMARKS, get_workload
 
@@ -63,7 +68,7 @@ QUICK_BENCHES = ("BFS", "BKP", "MTM", "DYN")
 QUICK_N_THREADS = 512
 
 _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-TRAJECTORY_PATH = os.path.join(_REPO_ROOT, "BENCH_PR3.json")
+TRAJECTORY_PATH = os.path.join(_REPO_ROOT, "BENCH_PR6.json")
 
 
 def effective_floors(quick: bool,
@@ -195,6 +200,33 @@ def run(quick: bool = False,
         if cache_dir is not None:
             shutil.rmtree(cache_dir, ignore_errors=True)
 
+    # Device-engine phase (jax importable only): the grid again through
+    # engine="pallas" over a fresh cache — one jit launch per trace
+    # family. Single repetition: the first launch pays the jit traces,
+    # and that honest cold cost is the number worth tracking.
+    pallas_avail = _pallas.available()
+    t_pallas = 0.0
+    pallas_launches = 0.0
+    pallas_res = None
+    if pallas_avail:
+        pallas_dir = tempfile.mkdtemp(prefix="warpsim-sweep-bench-pallas-")
+        try:
+            sweep.EXPANSION_CACHE.clear()
+            sweep.TRACE_CACHE.clear()
+            before = _pallas.launch_count()
+            t0 = time.time()
+            pallas_res, pallas_stats = sweep.run_sweep_with_stats(
+                spec, cache=sweep.ResultCache(pallas_dir), engine="pallas")
+            t_pallas = time.time() - t0
+        finally:
+            shutil.rmtree(pallas_dir, ignore_errors=True)
+        # The asserted pallas contract: exactly one device launch per
+        # (bench, n_threads, seed) family — the whole family batched.
+        n_families = len(benches) * len(spec.seeds)
+        assert pallas_stats["family_launches"] == n_families, pallas_stats
+        assert _pallas.launch_count() - before == n_families
+        pallas_launches = float(pallas_stats["family_launches"])
+
     # The cache, grouping and every engine/expansion generation must be
     # invisible in the numbers: bit-identical to the reference event loop.
     for m in ref:
@@ -203,6 +235,9 @@ def run(quick: bool = False,
             assert pr2[m][b].as_dict() == ref[m][b].as_dict(), (m, b)
             assert cold[m][b].as_dict() == ref[m][b].as_dict(), (m, b)
             assert warm[m][b].as_dict() == ref[m][b].as_dict(), (m, b)
+            if pallas_res is not None:
+                assert (pallas_res[m][b].as_dict()
+                        == ref[m][b].as_dict()), (m, b)
     n_cells = len(ref) * len(next(iter(ref.values())))
     assert warm_cache.hits == n_cells
     assert warm_stats["cache_hits"] == n_cells
@@ -229,9 +264,13 @@ def run(quick: bool = False,
         ("sweep/trace_build", t_trace * 1e6, t_trace / max(t_cold, 1e-9)),
         ("sweep/cold", t_cold * 1e6, speedup_event),
         ("sweep/warm", t_warm * 1e6, t_serial / max(t_warm, 1e-9)),
+        ("sweep/cold_pallas", t_pallas * 1e6,
+         t_serial / max(t_pallas, 1e-9) if pallas_avail else 0.0),
         ("sweep/cold_speedup_vs_pr1", 0.0, speedup_pr1),
         ("sweep/cold_speedup_vs_pr2", 0.0, speedup_pr2),
         ("sweep/native_engine", 0.0, 1.0 if native else 0.0),
+        ("sweep/pallas_engine", 0.0, 1.0 if pallas_avail else 0.0),
+        ("sweep/pallas_family_launches", 0.0, pallas_launches),
         ("sweep/cold_cells", 0.0, float(cold_stats["cells"])),
         ("sweep/cold_cache_misses", 0.0, float(cold_stats["cache_misses"])),
         ("sweep/cold_trace_families", 0.0,
@@ -248,23 +287,25 @@ def run(quick: bool = False,
 
 def write_trajectory(rows: List[Row], quick: bool,
                      floors: dict, path: str = TRAJECTORY_PATH) -> None:
-    """Refresh the repo-root BENCH_PR3.json trajectory entry.
+    """Refresh the repo-root BENCH_PR6.json trajectory entry.
 
     One self-contained snapshot of this PR's perf claim — cold/warm/
-    trace-phase timings plus the asserted floors — so later PRs can diff
-    their own cold paths against PR 3 without re-deriving the harness.
+    trace-phase/device timings plus the asserted floors — so later PRs
+    can diff their own cold paths against PR 6 without re-deriving the
+    harness.
     """
     by_name = {n: (us, d) for n, us, d in rows}
     entry = {
-        "pr": 3,
-        "change": "two-phase workload expansion: shared thread-trace "
-                  "cache + native per-warp aggregation core",
+        "pr": 6,
+        "change": "pallas device engine: one jit launch per trace family "
+                  "(bit-identical), plus the queue-namespace fix",
         "quick_grid": quick,
         "native_engine": bool(by_name["sweep/native_engine"][1]),
+        "pallas_engine": bool(by_name["sweep/pallas_engine"][1]),
         "timings_us": {
             k: by_name[f"sweep/{k}"][0]
             for k in ("serial_event", "cold_pr1", "cold_pr2", "trace_build",
-                      "cold", "warm")},
+                      "cold", "warm", "cold_pallas")},
         "speedups": {
             "cold_vs_pr1": by_name["sweep/cold_speedup_vs_pr1"][1],
             "cold_vs_pr2": by_name["sweep/cold_speedup_vs_pr2"][1],
@@ -276,7 +317,9 @@ def write_trajectory(rows: List[Row], quick: bool,
             for k in by_name if by_name[k][0] == 0.0
             and k not in ("sweep/cold_speedup_vs_pr1",
                           "sweep/cold_speedup_vs_pr2",
-                          "sweep/native_engine")},
+                          "sweep/native_engine",
+                          "sweep/pallas_engine",
+                          "sweep/cold_pallas")},
     }
     tmp = path + ".tmp"
     with open(tmp, "w") as f:
@@ -296,7 +339,7 @@ def main() -> None:
                     help="assertion floor for cold vs serial_event")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also dump rows as JSON (CI artifact) and refresh "
-                         "the repo-root BENCH_PR3.json trajectory entry")
+                         "the repo-root BENCH_PR6.json trajectory entry")
     args = ap.parse_args()
 
     rows = run(quick=args.quick,

@@ -24,6 +24,15 @@ Which entry point do I use?
   its deprecated nested-dict shim; only for code that predates the
   facade.
 
+Engines: ``api.Study(engine=...)`` accepts
+``auto|native|fast|fast_nested|event|pallas``. The default ``auto``
+resolves to the compiled C core (else the flat numpy loop) and never to
+``pallas`` — the device engine is opt-in. With jax installed,
+``engine="pallas"`` batches each trace family (all expansion keys x
+machine variants of one thread trace) into a single ``jax.jit`` device
+launch, bit-identical to every other engine; set ``WARPSIM_PALLAS=0``
+to kill it without restarting anything.
+
 Re-running is near-instant: every grid cell is served from the
 content-addressed cache under benchmarks/results/sweep_cache.
 """

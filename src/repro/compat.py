@@ -29,3 +29,35 @@ def tpu_compiler_params(**kw):
     if cls is None:
         cls = pltpu.TPUCompilerParams
     return cls(**kw)
+
+
+def pallas():
+    """The ``jax.experimental.pallas`` module (import deferred to call)."""
+    from jax.experimental import pallas as pl
+    return pl
+
+
+def enable_x64():
+    """Context manager scoping 64-bit jax types to the enclosed block.
+
+    The warpsim timing model is IEEE-754 double arithmetic; the rest of the
+    repo's kernels run the jax default (f32). Scoping x64 keeps the two from
+    interfering — a global ``jax_enable_x64`` update would change dtypes
+    under every other jit in the process.
+    """
+    import jax.experimental as _jexp
+    ctx = getattr(_jexp, "enable_x64", None)
+    if ctx is not None:
+        return ctx()
+    import contextlib
+
+    @contextlib.contextmanager
+    def _fallback():
+        old = jax.config.jax_enable_x64
+        jax.config.update("jax_enable_x64", True)
+        try:
+            yield
+        finally:
+            jax.config.update("jax_enable_x64", old)
+
+    return _fallback()

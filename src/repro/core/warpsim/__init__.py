@@ -12,6 +12,23 @@ Public API:
     sweep.run_sweep_with_stats   (the low-level engine under api)
     service.SweepService / service.SweepClient / service.from_env
     work_queue.WorkQueue / work_queue.run_worker
+
+Timing engines (``simulate(..., engine=...)`` — all bit-identical):
+
+    ============= ===================================================
+    engine        what it is
+    ============= ===================================================
+    auto          native when the C core compiled, else fast —
+                  never pallas (device engine is strictly opt-in)
+    native        compiled C scheduling loop (~25x event)
+    fast          flat-CSR numpy/heapq loop (always available)
+    fast_nested   previous-generation fast path, benchmark baseline
+    pallas        JAX/Pallas device core; sweeps batch a whole trace
+                  family (all expansion keys x machine variants of
+                  one ThreadTrace) into ONE launch; falls back to
+                  fast when jax is missing or WARPSIM_PALLAS=0
+    event         reference event loop (the model's ground truth)
+    ============= ===================================================
 """
 
 from repro.core.warpsim.config import MachineConfig

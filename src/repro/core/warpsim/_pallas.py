@@ -1,0 +1,609 @@
+"""JAX/Pallas trace-family timing core (``engine="pallas"``).
+
+One device launch simulates an entire *trace family*: every (expansion key,
+machine variant) pair derived from one :class:`ThreadTrace`. Each pair is a
+"unit" — its CSR :class:`WarpStream` columns plus the variant's machine
+scalars — and all units of a launch are padded to shared power-of-two
+shapes, stacked on a leading axis and run under one ``jax.vmap`` inside one
+``jax.jit`` call. The per-block machine mapping (memory controller, L1 set
+index, store service occupancy) is computed on device by a Pallas kernel
+(``interpret=True`` off-TPU, following :mod:`repro.kernels.ops`); the
+scheduling recurrence itself — inherently sequential in simulated time — is
+a ``lax.while_loop`` over the CSR op columns in the same launch, with the
+ready-warp min-heap recast as a masked ``argmin`` over the per-warp ready
+times (first-minimum index == heapq's lowest-warp-id tie-break).
+
+Bit-identity with the reference event loop is preserved the same way the C
+core preserves it: the device program performs the *same IEEE-754 double
+operations in the same order* (x64 is scoped via
+:func:`repro.compat.enable_x64`) and replays the identical decision
+sequence — argmin pop order, LRU eviction by unique touch tick, pending-line
+fill minimum, SW+ merge window. The SW+ outstanding table becomes a dense
+``[n_sms, n_unique_blocks]`` array (exact: the dict's >4096-entry prune only
+drops entries that can never merge again, so *any* exact map is
+equivalent). The golden + hypothesis tests in ``tests/test_golden.py``
+assert ``pallas == native == fast == event`` on every field.
+
+Gating mirrors :mod:`._native`: ``WARPSIM_PALLAS=0`` (re-read on every
+call, so a live daemon can be disabled without restart), jax import
+failure, or a failed probe all make :func:`available` return False and
+callers fall back to the flat-CSR engines. ``engine="auto"`` never selects
+pallas — on CPU hosts the XLA loop is far slower than the C core; the
+engine exists for accelerator-resident grids and must be asked for.
+
+:data:`LAUNCHES` counts completed family launches; the sweep layer and the
+bench-smoke CI assert on it (a family must cost one launch, not N cells).
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+import warnings
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+_DISABLED_VALUES = ("0", "no", "off")
+
+# Completed device launches (one per simulated family batch), for the
+# one-launch-per-family assertions in tests and bench smoke.
+LAUNCHES = 0
+
+_modules_cache = None       # (jax, jnp, lax, pl) once imported
+_import_attempted = False
+_import_error: Optional[str] = None
+_probe_result: Optional[bool] = None
+_warned = False
+
+
+def _env_disabled() -> bool:
+    """Kill switch, re-read per call (live daemons honor flips)."""
+    return os.environ.get("WARPSIM_PALLAS", "1") in _DISABLED_VALUES
+
+
+def _modules():
+    """Import jax lazily; cache the result (None => unavailable)."""
+    global _modules_cache, _import_attempted, _import_error
+    if _env_disabled():
+        return None
+    if _import_attempted:
+        return _modules_cache
+    _import_attempted = True
+    try:
+        import jax
+        import jax.numpy as jnp
+        from jax import lax
+
+        from repro import compat
+
+        pl = compat.pallas()
+        _modules_cache = (jax, jnp, lax, pl)
+    except Exception as e:  # jax missing / broken jaxlib
+        _import_error = f"{e.__class__.__name__}: {e}"
+        _modules_cache = None
+    return _modules_cache
+
+
+def _warn_unavailable() -> None:
+    global _warned
+    if _warned:
+        return
+    _warned = True
+    warnings.warn(
+        "warpsim pallas engine unavailable, falling back to the flat-CSR "
+        f"engines for this process ({_import_error or 'unknown failure'})",
+        RuntimeWarning, stacklevel=3)
+
+
+def available() -> bool:
+    """True iff jax is importable and ``WARPSIM_PALLAS`` is not off.
+
+    Cheap by design (no trace/compile); the first real launch pays the jit
+    cost. ``engine="auto"`` must not consult this — pallas is opt-in.
+    """
+    return _modules() is not None
+
+
+def launch_count() -> int:
+    return LAUNCHES
+
+
+def status(probe: bool = False) -> dict:
+    """Operator-facing engine report (the sweep service's ``/healthz``).
+
+    ``enabled`` re-reads ``WARPSIM_PALLAS`` at call time. With
+    ``probe=True`` a one-op family is actually simulated, so the report
+    states whether the device path is live rather than merely importable.
+    """
+    global _probe_result
+    enabled = not _env_disabled()
+    importable = enabled and _modules() is not None
+    if probe and importable and _probe_result is None:
+        _probe_result = _self_probe()
+    ready = importable and (_probe_result is not False)
+    return {
+        "enabled": enabled,
+        "importable": importable,
+        "probed": _probe_result,
+        "error": _import_error,
+        "launches": LAUNCHES,
+        "engine": "pallas" if (enabled and ready) else "unavailable",
+    }
+
+
+def _self_probe() -> bool:
+    """Simulate a trivial 1-warp stream end-to-end through the launch."""
+    global _import_error
+    try:
+        cols = dict(
+            n_warps=1,
+            op_start=np.array([0, 2], dtype=np.int64),
+            issue=np.array([1, 1], dtype=np.int64),
+            kind=np.array([0, 1], dtype=np.int8),
+            blk_off=np.array([0, 0], dtype=np.int64),
+            blk_len=np.array([0, 1], dtype=np.int64),
+            blocks=np.array([3], dtype=np.int64),
+            nbytes=np.array([64], dtype=np.int64),
+        )
+        scal = dict(num_sms=1, num_mem_ctrls=1, n_sets=2, ways=2,
+                    ideal=True, hit_lat=1.0, depth=4.0, dram_lat=100.0,
+                    svc_unit=2.0)
+        out = _launch_units([(cols, scal)], count_launch=False)
+        cycles = float(out[0][0])
+        return bool(np.isfinite(cycles) and cycles > 0.0)
+    except Exception as e:
+        _import_error = f"probe failed: {e.__class__.__name__}: {e}"
+        return False
+
+
+# ---------------------------------------------------------------------------
+# Device program
+# ---------------------------------------------------------------------------
+
+
+def _pow2(n: int) -> int:
+    """Smallest power of two >= max(n, 1) — bounds jit retraces."""
+    n = max(int(n), 1)
+    return 1 << (n - 1).bit_length()
+
+
+@functools.lru_cache(maxsize=64)
+def _get_launch(n_sms_pad: int, nctrl_pad: int, n_sets_pad: int,
+                ways_pad: int, n_slots_pad: int):
+    """Build the jitted family function for one state-dimension bucket.
+
+    Array-shape buckets (warps / ops / blocks / units) are handled by jit's
+    own shape-keyed cache; the L1 / DRAM / outstanding state dimensions are
+    python ints baked into the trace, so they key this cache.
+    """
+    jax, jnp, lax, pl = _modules()
+    interpret = jax.default_backend() != "tpu"
+    f64 = jnp.float64
+    i64 = jnp.int64
+    INF = jnp.inf
+
+    # ---- Pallas block-prep kernel: per-block machine mapping -------------
+    # One grid step per unit; each step maps that unit's whole block pool
+    # to its memory controller, L1 set index and store-transaction service
+    # occupancy (the "aggregate_stream on device" piece — the expansion
+    # itself is cached host-side and shared across the family).
+
+    def _prep_kernel(blocks_ref, nb_ref, nctrl_ref, nsets_ref, svc_ref,
+                     ctrl_ref, si_ref, ssvc_ref):
+        b = blocks_ref[...]
+        nb = nb_ref[...]
+        nctrl = nctrl_ref[0, 0]
+        nsets = nsets_ref[0, 0]
+        svc = svc_ref[0, 0]
+        ctrl_ref[...] = b % nctrl
+        si_ref[...] = b % nsets
+        # Minimum 32 B burst, exactly the host expression:
+        # svc_unit * (max(nbytes, 32) / 64.0)
+        ssvc_ref[...] = svc * (jnp.maximum(nb, 32).astype(f64) / 64.0)
+
+    def _prep(blocks, nbytes, nctrl1, nsets1, svc1):
+        u, p = blocks.shape
+        row = lambda i: (i, 0)  # noqa: E731
+        return pl.pallas_call(
+            _prep_kernel,
+            grid=(u,),
+            in_specs=[
+                pl.BlockSpec((1, p), row),
+                pl.BlockSpec((1, p), row),
+                pl.BlockSpec((1, 1), row),
+                pl.BlockSpec((1, 1), row),
+                pl.BlockSpec((1, 1), row),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, p), row),
+                pl.BlockSpec((1, p), row),
+                pl.BlockSpec((1, p), row),
+            ],
+            out_shape=[
+                jax.ShapeDtypeStruct((u, p), i64),
+                jax.ShapeDtypeStruct((u, p), i64),
+                jax.ShapeDtypeStruct((u, p), f64),
+            ],
+            interpret=interpret,
+        )(blocks, nbytes, nctrl1, nsets1, svc1)
+
+    # ---- Scheduling recurrence for one unit ------------------------------
+
+    def _simulate_one(cols):
+        next0 = cols["next0"]
+        op_end = cols["end"]
+        sm_of = cols["sm_of"]
+        issue_col = cols["issue"]
+        kind_col = cols["kind"]
+        off_col = cols["off"]
+        len_col = cols["len"]
+        slot_col = cols["slot"]
+        ctrl_col = cols["ctrl"]
+        si_col = cols["si"]
+        ssvc_col = cols["ssvc"]
+        ideal = cols["ideal"][0]
+        hit_lat = cols["hit_lat"][0]
+        depth = cols["depth"][0]
+        dram_lat = cols["dram_lat"][0]
+        svc_unit = cols["svc"][0]
+        ways = cols["ways"][0]
+
+        way_mask = jnp.arange(ways_pad, dtype=i64) < ways
+        tick_inf = jnp.iinfo(i64).max
+
+        ready0 = jnp.where(next0 < op_end, 0.0, INF).astype(f64)
+        state0 = (
+            ready0,
+            next0,
+            jnp.zeros((n_sms_pad,), f64),                       # issue_free
+            jnp.zeros((nctrl_pad,), f64),                       # ctrl_free
+            jnp.full((n_sms_pad, n_sets_pad, ways_pad), -1, i64),   # tags
+            jnp.zeros((n_sms_pad, n_sets_pad, ways_pad), i64),      # ticks
+            jnp.zeros((n_sms_pad, n_sets_pad, ways_pad), f64),      # fills
+            jnp.zeros((n_sms_pad,), i64),                       # tick ctr
+            jnp.full((n_sms_pad, n_slots_pad), -INF, f64),      # outstanding
+            jnp.zeros((), i64),                                 # offchip
+            jnp.zeros((), i64),                                 # merged
+            jnp.zeros((), i64),                                 # l1 hits
+        )
+
+        def cond(st):
+            return jnp.any(jnp.isfinite(st[0]))
+
+        def body(st):
+            (ready, next_idx, issue_free, ctrl_free, tags, ticks, fills,
+             tickc, outst, off_n, mrg_n, hit_n) = st
+            # Heap pop: first minimum == lowest warp id on ready-time ties,
+            # exactly heapq's (time, warp) lexicographic order.
+            w = jnp.argmin(ready)
+            ready_t = ready[w]
+            sm = sm_of[w]
+            i = next_idx[w]
+            t_start = jnp.maximum(ready_t, issue_free[sm])
+            t_acc = t_start + issue_col[i]
+            issue_free = issue_free.at[sm].set(t_acc)
+            o = off_col[i]
+            n_blk = len_col[i]
+
+            op_state = (ctrl_free, tags, ticks, fills, tickc, outst,
+                        off_n, mrg_n, hit_n)
+
+            def compute_op(s):
+                return (t_acc + depth,) + s
+
+            def load_op(s):
+                (ctrl_free, tags, ticks, fills, tickc, outst,
+                 off_n, mrg_n, hit_n) = s
+
+                def blk(j, c):
+                    (done, ctrl_free, tags, ticks, fills, tick, outst,
+                     off_n, mrg_n, hit_n) = c
+                    bi = o + j
+                    b_slot = slot_col[bi]
+                    b_ctrl = ctrl_col[bi]
+                    b_si = si_col[bi]
+                    # L1 lookup (pending lines visible with fill time);
+                    # every lookup is one LRU touch tick.
+                    tick = tick + 1
+                    row = tags[sm, b_si]
+                    match = (row == b_slot) & way_mask
+                    present = jnp.any(match)
+                    widx = jnp.argmax(match)
+                    fill = fills[sm, b_si, widx]
+                    ticks = ticks.at[sm, b_si, widx].set(
+                        jnp.where(present, tick, ticks[sm, b_si, widx]))
+                    is_hit = present & (fill <= t_acc)
+                    out = outst[sm, b_slot]
+                    is_merge = (~is_hit) & ideal & (out > t_acc)
+                    do_dram = (~is_hit) & (~is_merge)
+                    # DRAM request (full 64 B read transaction).
+                    cf = ctrl_free[b_ctrl]
+                    start = jnp.maximum(cf, t_acc)
+                    completion = start + dram_lat + svc_unit
+                    ctrl_free = ctrl_free.at[b_ctrl].set(
+                        jnp.where(do_dram, start + svc_unit, cf))
+                    # L1 fill / pending-line allocation.
+                    tick = tick + do_dram.astype(i64)
+                    valid = (row != -1) & way_mask
+                    empties = (~valid) & way_mask
+                    has_empty = jnp.any(empties)
+                    tick_row = ticks[sm, b_si]
+                    victim = jnp.argmin(
+                        jnp.where(valid, tick_row, tick_inf))  # LRU
+                    ins_way = jnp.where(has_empty, jnp.argmax(empties),
+                                        victim)
+                    upd_way = jnp.where(present, widx, ins_way)
+                    tags = tags.at[sm, b_si, ins_way].set(
+                        jnp.where(do_dram & (~present), b_slot,
+                                  tags[sm, b_si, ins_way]))
+                    ticks = ticks.at[sm, b_si, upd_way].set(
+                        jnp.where(do_dram, tick,
+                                  ticks[sm, b_si, upd_way]))
+                    new_fill = jnp.where(
+                        present, jnp.minimum(fill, completion), completion)
+                    fills = fills.at[sm, b_si, upd_way].set(
+                        jnp.where(do_dram, new_fill,
+                                  fills[sm, b_si, upd_way]))
+                    outst = outst.at[sm, b_slot].set(
+                        jnp.where(do_dram & ideal, completion, out))
+                    off_n = off_n + do_dram.astype(i64)
+                    mrg_n = mrg_n + is_merge.astype(i64)
+                    hit_n = hit_n + is_hit.astype(i64)
+                    done = jnp.where(is_merge, jnp.maximum(done, out), done)
+                    done = jnp.where(do_dram,
+                                     jnp.maximum(done, completion), done)
+                    return (done, ctrl_free, tags, ticks, fills, tick,
+                            outst, off_n, mrg_n, hit_n)
+
+                (done, ctrl_free, tags, ticks, fills, tick, outst,
+                 off_n, mrg_n, hit_n) = lax.fori_loop(
+                    0, n_blk, blk,
+                    (t_acc + hit_lat, ctrl_free, tags, ticks, fills,
+                     tickc[sm], outst, off_n, mrg_n, hit_n))
+                tickc2 = tickc.at[sm].set(tick)
+                return (done, ctrl_free, tags, ticks, fills, tickc2,
+                        outst, off_n, mrg_n, hit_n)
+
+            def store_op(s):
+                (ctrl_free, tags, ticks, fills, tickc, outst,
+                 off_n, mrg_n, hit_n) = s
+
+                def blk(j, cfree):
+                    bi = o + j
+                    cf = cfree[ctrl_col[bi]]
+                    start = jnp.maximum(cf, t_acc)
+                    return cfree.at[ctrl_col[bi]].set(start + ssvc_col[bi])
+
+                ctrl_free = lax.fori_loop(0, n_blk, blk, ctrl_free)
+                return (t_acc + hit_lat, ctrl_free, tags, ticks, fills,
+                        tickc, outst, off_n + n_blk, mrg_n, hit_n)
+
+            (warp_ready, ctrl_free, tags, ticks, fills, tickc, outst,
+             off_n, mrg_n, hit_n) = lax.switch(
+                kind_col[i], (compute_op, load_op, store_op), op_state)
+
+            ni = i + 1
+            ready = ready.at[w].set(
+                jnp.where(ni < op_end[w], warp_ready, INF))
+            next_idx = next_idx.at[w].set(ni)
+            return (ready, next_idx, issue_free, ctrl_free, tags, ticks,
+                    fills, tickc, outst, off_n, mrg_n, hit_n)
+
+        final = lax.while_loop(cond, body, state0)
+        issue_free = final[2]
+        return (jnp.max(issue_free), final[9], final[10], final[11])
+
+    def _family_fn(cols):
+        ctrl, si, ssvc = _prep(cols["blocks"], cols["nbytes"],
+                               cols["nctrl1"], cols["nsets1"],
+                               cols["svc1"])
+        core = dict(cols)
+        core["ctrl"] = ctrl
+        core["si"] = si
+        core["ssvc"] = ssvc
+        return jax.vmap(_simulate_one)(core)
+
+    return jax.jit(_family_fn)
+
+
+# ---------------------------------------------------------------------------
+# Host marshalling
+# ---------------------------------------------------------------------------
+
+
+def _stream_cols(stream) -> dict:
+    """Numpy CSR columns of a WarpStream (the native core's input layout)."""
+    return dict(
+        n_warps=stream.n_warps,
+        op_start=np.asarray(stream.op_start, dtype=np.int64),
+        issue=np.asarray(stream.issue, dtype=np.int64),
+        kind=np.asarray(stream.kind, dtype=np.int8),
+        blk_off=np.asarray(stream.blk_off, dtype=np.int64),
+        blk_len=np.asarray(stream.blk_len, dtype=np.int64),
+        blocks=np.asarray(stream.blocks, dtype=np.int64),
+        nbytes=np.asarray(stream.nbytes, dtype=np.int64),
+    )
+
+
+def _cfg_scalars(cfg) -> dict:
+    return dict(
+        num_sms=cfg.num_sms,
+        num_mem_ctrls=cfg.num_mem_ctrls,
+        n_sets=cfg.l1_size_bytes // (cfg.transaction_bytes * cfg.l1_ways),
+        ways=cfg.l1_ways,
+        ideal=bool(cfg.ideal_coalescing),
+        hit_lat=float(cfg.l1_hit_latency),
+        depth=float(cfg.pipeline_depth),
+        dram_lat=float(cfg.dram_latency_cycles),
+        svc_unit=float(cfg.dram_cycles_per_transaction),
+    )
+
+
+def _launch_units(units: Sequence[Tuple[dict, dict]],
+                  count_launch: bool = True) -> List[Tuple]:
+    """Pad, stack and simulate units = [(stream cols, machine scalars)].
+
+    One jit call per invocation — the family-launch unit the sweep layer
+    and CI assert on. Returns ``(raw_cycles, offchip, merged, l1_hits)``
+    per unit, in order.
+    """
+    global LAUNCHES
+    jax, jnp, lax, _pl = _modules()
+    from repro import compat
+
+    n_units = len(units)
+    u_pad = _pow2(n_units)
+    w_pad = _pow2(max(c["n_warps"] for c, _ in units))
+    ops_pad = _pow2(max(len(c["issue"]) for c, _ in units))
+    blk_pad = _pow2(max(len(c["blocks"]) for c, _ in units))
+    sms_pad = _pow2(max(s["num_sms"] for _, s in units))
+    ctrl_pad = _pow2(max(s["num_mem_ctrls"] for _, s in units))
+    sets_pad = _pow2(max(s["n_sets"] for _, s in units))
+    ways_pad = _pow2(max(s["ways"] for _, s in units))
+
+    # SW+ outstanding table: dense over the unique blocks of each stream.
+    # Cache the remap per stream object — variants share their expansion.
+    slot_cache: dict = {}
+
+    def slots_of(cols):
+        key = id(cols["blocks"])
+        hit = slot_cache.get(key)
+        if hit is None:
+            _, inv = np.unique(cols["blocks"], return_inverse=True)
+            hit = slot_cache[key] = inv.astype(np.int64)
+        return hit
+
+    n_slots = 1
+    for cols, _ in units:
+        s = slots_of(cols)
+        n_slots = max(n_slots, int(s.max(initial=0)) + 1)
+    slots_pad = _pow2(n_slots)
+
+    def stack(name, dtype, pad_width, fill=0):
+        outv = np.full((u_pad, pad_width), fill, dtype=dtype)
+        return outv
+
+    next0 = stack("next0", np.int64, w_pad)
+    end = stack("end", np.int64, w_pad)
+    sm_of = stack("sm_of", np.int64, w_pad)
+    issue = stack("issue", np.float64, ops_pad)
+    kind = stack("kind", np.int32, ops_pad)
+    off = stack("off", np.int64, ops_pad)
+    length = stack("len", np.int64, ops_pad)
+    blocks = stack("blocks", np.int64, blk_pad)
+    nbytes = stack("nbytes", np.int64, blk_pad, fill=64)
+    slot = stack("slot", np.int64, blk_pad)
+    ideal = np.zeros((u_pad, 1), dtype=bool)
+    hit_lat = np.zeros((u_pad, 1), dtype=np.float64)
+    depth = np.zeros((u_pad, 1), dtype=np.float64)
+    dram_lat = np.zeros((u_pad, 1), dtype=np.float64)
+    svc1 = np.ones((u_pad, 1), dtype=np.float64)
+    ways = np.ones((u_pad, 1), dtype=np.int64)
+    nctrl1 = np.ones((u_pad, 1), dtype=np.int64)
+    nsets1 = np.ones((u_pad, 1), dtype=np.int64)
+
+    for u, (cols, scal) in enumerate(units):
+        nw = cols["n_warps"]
+        n_sms = scal["num_sms"]
+        next0[u, :nw] = cols["op_start"][:nw]
+        end[u, :nw] = cols["op_start"][1:nw + 1]
+        wids = np.arange(nw, dtype=np.int64)
+        sm_of[u, :nw] = np.minimum(wids * n_sms // max(nw, 1), n_sms - 1)
+        no = len(cols["issue"])
+        issue[u, :no] = cols["issue"]
+        kind[u, :no] = cols["kind"]
+        off[u, :no] = cols["blk_off"]
+        length[u, :no] = cols["blk_len"]
+        nb = len(cols["blocks"])
+        blocks[u, :nb] = cols["blocks"]
+        nbytes[u, :nb] = cols["nbytes"]
+        slot[u, :nb] = slots_of(cols)
+        ideal[u, 0] = scal["ideal"]
+        hit_lat[u, 0] = scal["hit_lat"]
+        depth[u, 0] = scal["depth"]
+        dram_lat[u, 0] = scal["dram_lat"]
+        svc1[u, 0] = scal["svc_unit"]
+        ways[u, 0] = scal["ways"]
+        nctrl1[u, 0] = scal["num_mem_ctrls"]
+        nsets1[u, 0] = scal["n_sets"]
+
+    stacked = dict(
+        next0=next0, end=end, sm_of=sm_of, issue=issue, kind=kind,
+        off=off, len=length, blocks=blocks, nbytes=nbytes, slot=slot,
+        ideal=ideal, hit_lat=hit_lat, depth=depth, dram_lat=dram_lat,
+        svc=svc1, svc1=svc1, ways=ways, nctrl1=nctrl1, nsets1=nsets1,
+    )
+
+    launch = _get_launch(sms_pad, ctrl_pad, sets_pad, ways_pad, slots_pad)
+    with compat.enable_x64():
+        cycles, offchip, merged, hits = jax.device_get(launch(stacked))
+    if count_launch:
+        LAUNCHES += 1
+    return [(float(cycles[u]), int(offchip[u]), int(merged[u]),
+             int(hits[u])) for u in range(n_units)]
+
+
+# ---------------------------------------------------------------------------
+# Public entry points
+# ---------------------------------------------------------------------------
+
+
+def run_scheduling_loop(n_warps: int, op_start, issue, kind, blk_off,
+                        blk_len, blocks, nbytes, cfg):
+    """Single-cell device run; mirrors ``_native.run_scheduling_loop``.
+
+    Returns ``(raw_cycles, offchip, merged, l1_hits)`` or None when the
+    engine is unavailable or the launch fails (callers fall back to the
+    flat-CSR engine).
+    """
+    global _import_error
+    if _modules() is None:
+        _warn_unavailable()
+        return None
+    cols = dict(
+        n_warps=int(n_warps),
+        op_start=np.asarray(op_start, dtype=np.int64),
+        issue=np.asarray(issue, dtype=np.int64),
+        kind=np.asarray(kind, dtype=np.int8),
+        blk_off=np.asarray(blk_off, dtype=np.int64),
+        blk_len=np.asarray(blk_len, dtype=np.int64),
+        blocks=np.asarray(blocks, dtype=np.int64),
+        nbytes=np.asarray(nbytes, dtype=np.int64),
+    )
+    try:
+        return _launch_units([(cols, _cfg_scalars(cfg))])[0]
+    except Exception as e:
+        _import_error = f"launch failed: {e.__class__.__name__}: {e}"
+        _warn_unavailable()
+        return None
+
+
+def run_family(pairs):
+    """Simulate a trace family in ONE device launch.
+
+    ``pairs`` is ``[(WarpStream, MachineConfig), ...]`` — every expansion
+    key × machine variant of one ThreadTrace (streams may repeat across
+    variants that share an expansion). Returns a list of
+    ``(raw_cycles, offchip, merged, l1_hits)`` in order, or None when the
+    engine is unavailable / the launch fails.
+    """
+    global _import_error
+    if not pairs:
+        return []
+    if _modules() is None:
+        _warn_unavailable()
+        return None
+    col_cache: dict = {}
+    units = []
+    for stream, cfg in pairs:
+        cols = col_cache.get(id(stream))
+        if cols is None:
+            cols = col_cache[id(stream)] = _stream_cols(stream)
+        units.append((cols, _cfg_scalars(cfg)))
+    try:
+        return _launch_units(units)
+    except Exception as e:
+        _import_error = f"launch failed: {e.__class__.__name__}: {e}"
+        _warn_unavailable()
+        return None

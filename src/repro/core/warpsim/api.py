@@ -102,8 +102,12 @@ class Study:
     (same defaults, same fixed machines-major / benches / seeds-innermost
     cell order) with the execution-relevant `engine` added, so one object
     describes a run completely for every backend. ``engine="auto"`` lets
-    each backend pick (native when compiled, else the fast engine) — all
-    engines are bit-identical, so it never changes the numbers.
+    each backend pick (native when compiled, else the fast engine; never
+    pallas, which is opt-in) — all engines are bit-identical, so it never
+    changes the numbers. ``engine="pallas"`` runs each trace family as
+    one batched device launch (:mod:`repro.core.warpsim._pallas`),
+    falling back to the flat engines when jax or the device core is
+    unavailable.
     """
 
     benches: Tuple[str, ...] = tuple(BENCHMARKS)
@@ -562,36 +566,41 @@ class Session:
         ``service.from_env``, which warns once per process on a dead URL)
         with a silent fall back to an in-process session over
         `cache_dir`.
+
+        The forced remote choices probe *directly* rather than through
+        ``service.from_env``: its dead-URL path warns about "falling back
+        to in-process sweeps" — wrong here, where the outcome is an
+        exception — and consumes the once-per-process warning slot for
+        that URL, which would silence the warning a later *unforced*
+        fallback on the same URL is entitled to.
         """
         from repro.core.warpsim import service as service_mod
         choice = (os.environ.get(ENV_BACKEND) or "").strip().lower() or None
         if choice in ("inprocess", "in-process", "local"):
             return cls(cache_dir=cache_dir, persist_traces=persist_traces)
-        if choice == "queue":
+        if choice in ("queue", "service"):
             url = os.environ.get(service_mod.ENV_URL)
             if not url:
                 raise ValueError(
-                    f"{ENV_BACKEND}=queue requires {service_mod.ENV_URL}")
+                    f"{ENV_BACKEND}={choice} requires {service_mod.ENV_URL}")
             try:
-                service_mod.SweepClient(url).healthz()
+                client = service_mod.SweepClient(url)
+                client.healthz()
             except Exception as e:      # noqa: BLE001 — any failure = dead
                 raise RuntimeError(
-                    f"{ENV_BACKEND}=queue but no live daemon at "
+                    f"{ENV_BACKEND}={choice} but no live daemon at "
                     f"{service_mod.ENV_URL}={url!r} "
                     f"({e.__class__.__name__}: {e})") from e
-            return cls(backend=QueueBackend(url))
-        if choice not in (None, "service"):
+            if choice == "queue":
+                return cls(backend=QueueBackend(url))
+            return cls(backend=ServiceBackend(client=client))
+        if choice is not None:
             raise ValueError(
                 f"{ENV_BACKEND}={choice!r}: expected inprocess | service "
                 f"| queue")
         client = service_mod.from_env()
         if client is not None:
             return cls(backend=ServiceBackend(client=client))
-        if choice == "service":
-            raise RuntimeError(
-                f"{ENV_BACKEND}=service but no live daemon at "
-                f"{service_mod.ENV_URL}="
-                f"{os.environ.get(service_mod.ENV_URL)!r}")
         return cls(cache_dir=cache_dir, persist_traces=persist_traces)
 
 

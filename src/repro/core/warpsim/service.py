@@ -23,10 +23,11 @@ trace/expansion LRUs, and serves:
   :class:`~repro.core.warpsim.work_queue.WorkQueue` for remote workers to
   drain (``/queue/lease`` / ``/queue/complete`` / ``/queue/status``; see
   :mod:`repro.core.warpsim.work_queue`). Queue job state is persisted
-  under ``<cache root>/queue/`` — one JSON snapshot per job plus a
-  job-id-sequence ``meta.json``, atomically rewritten on every
-  enqueue/lease/complete of that job — and reloaded on boot, so a
-  daemon restart never forgets a half-drained sweep.
+  under ``<cache root>/queue/`` — one JSON snapshot per job, atomically
+  rewritten on every enqueue/lease/complete of that job, with job ids
+  namespaced per daemon instance so daemons sharing a cache root never
+  clobber each other's files — and reloaded on boot, so a daemon
+  restart never forgets a half-drained sweep.
 * ``GET /stats`` — service counters, live cache-stack counters (the
   result-cache entry count re-scans the directory via
   ``ResultCache.refresh()``, so cells written by sibling workers show up),
@@ -63,12 +64,13 @@ import os
 import tempfile
 import threading
 import time
+import uuid
 import warnings
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from typing import Dict, Iterable, List, Mapping, Optional, Tuple
 from urllib.parse import parse_qs, urlencode, urlparse
 
-from repro.core.warpsim import _native
+from repro.core.warpsim import _native, _pallas
 from repro.core.warpsim import api as api_mod
 from repro.core.warpsim.api import (
     RunRecord, Session, Study, StudyResult,
@@ -165,6 +167,13 @@ class SweepService:
         self._lock = threading.Lock()
         self._inflight: Dict[str, concurrent.futures.Future] = {}
         self._jobs: Dict[str, WorkQueue] = {}
+        # Per-instance job-id namespace: ids are job-<daemon>-<seq>, so
+        # two daemons over one cache root can never mint the same id (and
+        # therefore never clobber each other's `<job>.json` snapshots —
+        # the old `job-<seq>` scheme with a shared meta.json sequence did
+        # exactly that). A restarted daemon gets a fresh namespace and
+        # *adopts* the previous instance's jobs by their persisted names.
+        self._daemon_id = uuid.uuid4().hex[:8]
         self._job_seq = 0
         self._queue_dir = os.path.join(cache_dir, "queue")
         self._persist_lock = threading.Lock()
@@ -180,12 +189,16 @@ class SweepService:
     #
     # Layout under <cache root>/queue/: one `<job>.json` snapshot per job
     # (rewritten on enqueue/lease/complete of *that* job only — a lease
-    # never pays for serializing its neighbors' cell payloads) plus
-    # `meta.json` holding the job-id sequence (rewritten on enqueue). The
-    # queue dir assumes a single daemon per cache root — two daemons
-    # sharing one root cooperate on result *cells* (index adoption) but
-    # would clobber each other's same-named job files; see the
-    # federation open item in ROADMAP.md.
+    # never pays for serializing its neighbors' cell payloads). Job ids
+    # are `job-<daemon>-<seq>` with a per-instance daemon component, so
+    # concurrent daemons over one cache root mint disjoint file names and
+    # never clobber each other (they still cooperate on result *cells*
+    # through index adoption; cross-daemon job *visibility* remains the
+    # federation open item in ROADMAP.md). Pre-namespace layouts are
+    # still adopted on boot: legacy `job-<seq>.json` snapshots load by
+    # their persisted names, and a legacy `meta.json` (the old shared
+    # job-id sequence, no longer written) is tolerated and left alone —
+    # fresh ids can't collide with either.
 
     _META = "meta.json"
 
@@ -203,29 +216,22 @@ class SweepService:
         cache. *Unreadable* ones (transient EIO/EACCES, not corruption)
         are skipped but left on disk for the next boot to retry: a
         backup tool holding the file briefly must not destroy valid
-        half-drained state. The job-id sequence floor is re-derived from
-        the surviving job names as well as meta.json, so a lost meta can
-        never recycle a live job id.
+        half-drained state. Job ids are adopted verbatim from the file
+        names — legacy ``job-<seq>`` and namespaced ``job-<daemon>-<seq>``
+        alike; neither can collide with this instance's fresh
+        ``job-<daemon>-<seq>`` namespace, so no sequence floor needs
+        recovering (the pre-namespace layout persisted one in
+        ``meta.json``, which is skipped here and no longer written).
         """
         try:
             names = os.listdir(self._queue_dir)
         except OSError:
             return
         jobs: Dict[str, WorkQueue] = {}
-        seq = 0
         for name in sorted(names):
-            if not name.endswith(".json"):
+            if not name.endswith(".json") or name == self._META:
                 continue
             path = os.path.join(self._queue_dir, name)
-            if name == self._META:
-                try:
-                    with open(path) as f:
-                        seq = max(seq, int(json.load(f)["job_seq"]))
-                except OSError:
-                    pass                    # transient: names floor below
-                except Exception:
-                    self._remove_file(path)
-                continue
             job = name[:-len(".json")]
             try:
                 with open(path) as f:
@@ -235,11 +241,8 @@ class SweepService:
             except Exception:
                 self._remove_file(path)
                 continue
-            if job.startswith("job-") and job[4:].isdigit():
-                seq = max(seq, int(job[4:]))
         with self._lock:
             self._jobs = jobs
-            self._job_seq = seq
 
     @staticmethod
     def _remove_file(path: str) -> None:
@@ -280,13 +283,6 @@ class SweepService:
                 self._remove_file(self._job_path(job))
                 return
             self._atomic_write(self._job_path(job), q.to_dict())
-
-    def _persist_meta(self) -> None:
-        with self._persist_lock:
-            with self._lock:
-                blob = {"job_seq": self._job_seq}
-            self._atomic_write(
-                os.path.join(self._queue_dir, self._META), blob)
 
     def bump(self, counter: str, n: int = 1) -> None:
         with self._lock:
@@ -471,7 +467,7 @@ class SweepService:
         evicted = []
         with self._lock:
             self._job_seq += 1
-            job = f"job-{self._job_seq}"
+            job = f"job-{self._daemon_id}-{self._job_seq}"
             self._jobs[job] = q
             finished = [j for j, jq in self._jobs.items()
                         if jq is not q and jq.done]
@@ -483,7 +479,6 @@ class SweepService:
             for j in stale[:max(0, len(self._jobs) - self.MAX_JOBS)]:
                 del self._jobs[j]       # abandoned jobs: oldest first
                 evicted.append(j)
-        self._persist_meta()
         self._persist_job(job)
         for j in evicted:
             self._persist_job(j)        # job gone -> snapshot removed
@@ -543,14 +538,25 @@ class SweepService:
 
     def healthz(self) -> dict:
         native = _native.status(probe=True)
+        # Probe the device core only when this daemon would actually use
+        # it (probing jits a launch; a native/fast daemon shouldn't pay
+        # that on every healthz poll) — but always report its kill-switch
+        # state, which like WARPSIM_NATIVE is re-read per call.
+        pallas = _pallas.status(probe=(self.engine == "pallas"))
         engine = self.engine
         if engine == "auto":
+            engine = "native" if native["engine"] == "native" else "fast"
+        elif engine == "pallas" and pallas["engine"] != "pallas":
+            # Configured for the device core but it can't run (no jax /
+            # WARPSIM_PALLAS=0 / failed probe): report the engine cells
+            # will actually use via the per-cell fallback.
             engine = "native" if native["engine"] == "native" else "fast"
         return {
             "ok": True,
             "model": MODEL_VERSION,
             "engine": engine,
             "native": native,
+            "pallas": pallas,
             "cache_root": os.path.abspath(self.cache.root),
             "uptime_s": round(time.time() - self.started, 3),
         }
@@ -864,7 +870,7 @@ def main(argv: Optional[List[str]] = None) -> None:
                     help="0 picks an ephemeral port (printed on startup)")
     ap.add_argument("--engine", default="auto",
                     choices=("auto", "native", "fast", "fast_nested",
-                             "event"))
+                             "event", "pallas"))
     ap.add_argument("--no-persist-traces", action="store_true",
                     help="don't snapshot thread traces under the cache dir")
     ap.add_argument("--lease-seconds", type=float, default=60.0,

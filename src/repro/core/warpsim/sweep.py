@@ -82,14 +82,16 @@ from typing import Dict, List, Mapping, Optional, Tuple
 
 import numpy as np
 
-from repro.core.warpsim import _native
+from repro.core.warpsim import _native, _pallas
 from repro.core.warpsim import machines as machines_mod
 from repro.core.warpsim.config import MachineConfig
 from repro.core.warpsim.divergence import (
     WarpStream, aggregate_stream, build_thread_trace, expand_stream,
     expand_stream_single,
 )
-from repro.core.warpsim.timing import SimResult, simulate
+from repro.core.warpsim.timing import (
+    SimResult, loop_result, simulate, stream_totals,
+)
 from repro.core.warpsim.trace import (
     BENCHMARKS, ThreadTrace, Workload, get_workload,
 )
@@ -754,7 +756,17 @@ def _run_group(args: _GroupPayload,
     """
     tcache = TRACE_CACHE if trace_cache is None else trace_cache
     ecache = EXPANSION_CACHE if expansion_cache is None else expansion_cache
-    bench, n_threads, seed, cfgs, engine, reuse, share, tdir = args
+    wl, stream = _group_stream(args, tcache, ecache)
+    engine = args[4]
+    ops = stream.to_warp_ops() if engine == "event" else stream
+    return [simulate(wl.name, ops, cfg, engine=engine) for cfg in args[3]]
+
+
+def _group_stream(args: _GroupPayload, tcache: TraceCache,
+                  ecache: ExpansionCache) -> Tuple[Workload, WarpStream]:
+    """Resolve one payload's workload + aggregated stream through the LRUs
+    (shared by the per-group worker path and the pallas family launcher)."""
+    bench, n_threads, seed, cfgs, _engine, reuse, share, tdir = args
     wl = get_workload(bench, n_threads=n_threads, seed=seed)
     if reuse:
         if share:
@@ -766,8 +778,40 @@ def _run_group(args: _GroupPayload,
     else:
         stream = (expand_stream(wl, cfgs[0]) if share
                   else expand_stream_single(wl, cfgs[0]))
-    ops = stream.to_warp_ops() if engine == "event" else stream
-    return [simulate(wl.name, ops, cfg, engine=engine) for cfg in cfgs]
+    return wl, stream
+
+
+def _run_family_pallas(fam_payloads: List[_GroupPayload],
+                       tcache: TraceCache, ecache: ExpansionCache
+                       ) -> Tuple[Optional[List[List[SimResult]]], bool]:
+    """Simulate one trace family's payloads in a single device launch.
+
+    All expansion-key groups of the family (each carrying its machine
+    variants) become units of one ``_pallas.run_family`` call — a family
+    costs one launch instead of one engine run per cell. Returns
+    ``(per-group result lists, launched)``; ``(None, False)`` when the
+    device core is unavailable or the launch failed, in which case the
+    caller degrades to the per-group path (whose per-cell pallas dispatch
+    falls back to the flat engine).
+    """
+    groups = []
+    pairs = []
+    for payload in fam_payloads:
+        wl, stream = _group_stream(payload, tcache, ecache)
+        cfgs = payload[3]
+        groups.append((wl, stream, cfgs))
+        pairs.extend((stream, cfg) for cfg in cfgs)
+    raw = _pallas.run_family(pairs)
+    if raw is None:
+        return None, False
+    out: List[List[SimResult]] = []
+    i = 0
+    for wl, stream, cfgs in groups:
+        totals = stream_totals(stream)
+        out.append([loop_result(wl.name, cfg, raw[i + j], totals)
+                    for j, cfg in enumerate(cfgs)])
+        i += len(cfgs)
+    return out, True
 
 
 def compute_cell(bench: str, cfg: MachineConfig,
@@ -903,6 +947,7 @@ def run_sweep_with_stats(
 
     n_groups = 0
     n_families = 0
+    n_family_launches = 0
     if not group_expansion:
         share_traces = False     # per-cell scheduling: no sharing at all
     if todo:
@@ -947,6 +992,11 @@ def run_sweep_with_stats(
             cells_are_cheap = _native.available()
         else:
             cells_are_cheap = False
+        if engine == "pallas":
+            # Device batching replaces process parallelism: the whole
+            # family runs as one launch in the parent (jit caches are
+            # per-process; a pool would re-trace in every worker).
+            parallel = False
         if parallel is None:
             # Process pools only pay off when there is real work per cell
             # relative to pool spawn + IPC: with the compiled engine a
@@ -974,6 +1024,28 @@ def run_sweep_with_stats(
                         grp_members,
                         ex.map(_run_group, payloads, chunksize=chunk)):
                     _scatter(members, group_res)
+        elif engine == "pallas" and group_expansion:
+            # Family-major device batching: one launch per trace family
+            # covers all its expansion keys x machine variants. Payloads
+            # are already family-major, so each family is a contiguous
+            # payload run of len(fam) groups.
+            i = 0
+            for fam in families.values():
+                k = len(fam)
+                fam_res, launched = _run_family_pallas(
+                    payloads[i:i + k], tcache, ecache)
+                if launched:
+                    n_family_launches += 1
+                    for members, group_res in zip(grp_members[i:i + k],
+                                                  fam_res):
+                        _scatter(members, group_res)
+                else:
+                    for members, payload in zip(grp_members[i:i + k],
+                                                payloads[i:i + k]):
+                        _scatter(members, _run_group(
+                            payload, trace_cache=tcache,
+                            expansion_cache=ecache))
+                i += k
         else:
             for members, payload in zip(grp_members, payloads):
                 _scatter(members, _run_group(payload, trace_cache=tcache,
@@ -988,6 +1060,9 @@ def run_sweep_with_stats(
         expansions_saved=len(todo) - n_groups,
         trace_families=n_families,
         traces_shared=(n_groups - n_families if share_traces else 0),
+        # Device launches performed by the pallas family path (one per
+        # trace family when the engine is live; 0 for every other engine).
+        family_launches=n_family_launches,
         # LRU counter deltas of the sweep parent (serial sweeps; pool
         # workers keep their own caches, like the expansion LRU).
         expansion_cache_hits=ecache.hits - exp_hits0,

@@ -38,9 +38,18 @@ golden + hypothesis tests in ``tests/test_golden.py``):
   the measured baseline for ``benchmarks/sweep_bench.py`` (the cold-sweep
   speedup floor is asserted against it) and as a third independent
   implementation in the equivalence tests.
+* ``engine="pallas"`` — the JAX/Pallas device core
+  (:mod:`repro.core.warpsim._pallas`): the same scheduling recurrence as a
+  jitted ``lax.while_loop`` over the CSR columns, built to simulate an
+  entire trace family (all expansion keys x machine variants) in one
+  device launch when driven through the sweep layer. Opt-in only
+  (``WARPSIM_PALLAS=0`` kills it; unavailable hosts fall back to
+  ``fast``).
 
 ``engine="auto"`` (default) picks ``native`` when the compiled core is
-available and ``fast`` otherwise.
+available and ``fast`` otherwise — never ``pallas``: on CPU hosts the XLA
+loop is much slower than the C core, so the device engine must be asked
+for explicitly.
 """
 
 from __future__ import annotations
@@ -51,7 +60,7 @@ from typing import List, Union
 
 import numpy as np
 
-from repro.core.warpsim import _native
+from repro.core.warpsim import _native, _pallas
 from repro.core.warpsim.coalesce import L1Cache
 from repro.core.warpsim.config import MachineConfig
 from repro.core.warpsim.divergence import (
@@ -132,6 +141,8 @@ def simulate(
     else fast). All engines return bit-identical results.
     """
     if engine == "auto":
+        # Never resolves to "pallas": the device engine is opt-in (on CPU
+        # hosts the XLA loop loses badly to the C core / flat engine).
         engine = "native" if _native.available() else "fast"
     if engine == "native":
         return _simulate_native(name, warp_ops, cfg)
@@ -139,12 +150,15 @@ def simulate(
         return _simulate_fast(name, warp_ops, cfg)
     if engine == "fast_nested":
         return _simulate_fast_nested(name, warp_ops, cfg)
+    if engine == "pallas":
+        return _simulate_pallas(name, warp_ops, cfg)
     if engine == "event":
         if isinstance(warp_ops, WarpStream):
             warp_ops = warp_ops.to_warp_ops()
         return _simulate_event(name, warp_ops, cfg)
     raise ValueError(
-        f"unknown engine {engine!r}; use auto|native|fast|fast_nested|event")
+        f"unknown engine {engine!r}; "
+        "use auto|native|fast|fast_nested|event|pallas")
 
 
 # ---------------------------------------------------------------------------
@@ -521,33 +535,23 @@ def _simulate_fast(name: str, warp_ops: Ops, cfg: MachineConfig) -> SimResult:
 # ---------------------------------------------------------------------------
 
 
-def _simulate_native(name: str, warp_ops: Ops, cfg: MachineConfig
-                     ) -> SimResult:
-    """Flat-CSR loop in compiled C; falls back to ``fast`` when the core
-    is unavailable or declines the configuration."""
-    if isinstance(warp_ops, WarpStream):
-        st = warp_ops
-        loop = _native.run_scheduling_loop(
-            st.n_warps, st.op_start, st.issue, st.kind, st.blk_off,
-            st.blk_len, st.blocks, st.nbytes, cfg)
-        if loop is None:
-            return _simulate_fast(name, warp_ops, cfg)
-        totals = (int(st.tins.sum()), int(st.maccs.sum()),
-                  float(st.issue.sum()), simd_efficiency(st))
-    else:
-        (n_warps, op_start, issue_l, kind_l, off_l, len_l, _, _,
-         blocks_np, nbytes_np, thread_insns, mem_insns, total_busy, eff
-         ) = _flat_arrays(warp_ops)
-        loop = _native.run_scheduling_loop(
-            n_warps, np.asarray(op_start, dtype=np.int64),
-            np.asarray(issue_l, dtype=np.int64),
-            np.asarray(kind_l, dtype=np.int8),
-            np.asarray(off_l, dtype=np.int64),
-            np.asarray(len_l, dtype=np.int64), blocks_np, nbytes_np, cfg)
-        if loop is None:
-            return _simulate_fast(name, warp_ops, cfg)
-        totals = (thread_insns, mem_insns, total_busy, eff)
+def stream_totals(st: WarpStream) -> tuple:
+    """Order-independent totals ``(thread_insns, mem_insns, total_busy,
+    simd_eff)`` of a stream — the host-side half of a result whose
+    scheduling loop ran out of process (compiled C) or on device
+    (pallas)."""
+    return (int(st.tins.sum()), int(st.maccs.sum()),
+            float(st.issue.sum()), simd_efficiency(st))
 
+
+def loop_result(name: str, cfg: MachineConfig, loop: tuple,
+                totals: tuple) -> SimResult:
+    """Assemble a SimResult from an externally-run scheduling loop.
+
+    ``loop`` is ``(raw_cycles, offchip, merged, l1_hits)`` as returned by
+    ``_native.run_scheduling_loop`` / ``_pallas.run_family``; ``totals``
+    from :func:`stream_totals` (or the legacy ``_flat_arrays`` sums).
+    """
     raw_cycles, offchip, merged, l1_hits = loop
     thread_insns, mem_insns, total_busy, eff = totals
     n_sms = cfg.num_sms
@@ -566,6 +570,73 @@ def _simulate_native(name: str, warp_ops: Ops, cfg: MachineConfig
         busy_cycles=total_busy / n_sms,
         simd_eff=eff,
     )
+
+
+def _simulate_native(name: str, warp_ops: Ops, cfg: MachineConfig
+                     ) -> SimResult:
+    """Flat-CSR loop in compiled C; falls back to ``fast`` when the core
+    is unavailable or declines the configuration."""
+    if isinstance(warp_ops, WarpStream):
+        st = warp_ops
+        loop = _native.run_scheduling_loop(
+            st.n_warps, st.op_start, st.issue, st.kind, st.blk_off,
+            st.blk_len, st.blocks, st.nbytes, cfg)
+        if loop is None:
+            return _simulate_fast(name, warp_ops, cfg)
+        totals = stream_totals(st)
+    else:
+        (n_warps, op_start, issue_l, kind_l, off_l, len_l, _, _,
+         blocks_np, nbytes_np, thread_insns, mem_insns, total_busy, eff
+         ) = _flat_arrays(warp_ops)
+        loop = _native.run_scheduling_loop(
+            n_warps, np.asarray(op_start, dtype=np.int64),
+            np.asarray(issue_l, dtype=np.int64),
+            np.asarray(kind_l, dtype=np.int8),
+            np.asarray(off_l, dtype=np.int64),
+            np.asarray(len_l, dtype=np.int64), blocks_np, nbytes_np, cfg)
+        if loop is None:
+            return _simulate_fast(name, warp_ops, cfg)
+        totals = (thread_insns, mem_insns, total_busy, eff)
+    return loop_result(name, cfg, loop, totals)
+
+
+# ---------------------------------------------------------------------------
+# Pallas (device) engine
+# ---------------------------------------------------------------------------
+
+
+def _simulate_pallas(name: str, warp_ops: Ops, cfg: MachineConfig
+                     ) -> SimResult:
+    """Single-cell dispatch onto the device family core.
+
+    One cell is a one-unit family launch. The real win — one launch for a
+    whole trace family — is driven by ``sweep.run_sweep_with_stats``,
+    which batches every (expansion key x machine variant) of a workload
+    into a single ``_pallas.run_family`` call. Falls back to ``fast`` when
+    the device core is unavailable (no jax, ``WARPSIM_PALLAS=0``, or a
+    failed launch), mirroring the native engine's fallback.
+    """
+    if isinstance(warp_ops, WarpStream):
+        st = warp_ops
+        loop = _pallas.run_scheduling_loop(
+            st.n_warps, st.op_start, st.issue, st.kind, st.blk_off,
+            st.blk_len, st.blocks, st.nbytes, cfg)
+        if loop is None:
+            return _simulate_fast(name, warp_ops, cfg)
+        return loop_result(name, cfg, loop, stream_totals(st))
+    (n_warps, op_start, issue_l, kind_l, off_l, len_l, _, _,
+     blocks_np, nbytes_np, thread_insns, mem_insns, total_busy, eff
+     ) = _flat_arrays(warp_ops)
+    loop = _pallas.run_scheduling_loop(
+        n_warps, np.asarray(op_start, dtype=np.int64),
+        np.asarray(issue_l, dtype=np.int64),
+        np.asarray(kind_l, dtype=np.int8),
+        np.asarray(off_l, dtype=np.int64),
+        np.asarray(len_l, dtype=np.int64), blocks_np, nbytes_np, cfg)
+    if loop is None:
+        return _simulate_fast(name, warp_ops, cfg)
+    return loop_result(name, cfg, loop,
+                       (thread_insns, mem_insns, total_busy, eff))
 
 
 # ---------------------------------------------------------------------------

@@ -5,6 +5,7 @@ queue), and environment-driven backend selection."""
 import dataclasses
 import json
 import threading
+import warnings
 
 import pytest
 
@@ -337,11 +338,42 @@ def test_from_env_explicit_backend_choices(live, tmp_path, monkeypatch):
     monkeypatch.setattr(service_mod, "_WARNED_DEAD_URLS", set())
     monkeypatch.setenv("WARPSIM_BACKEND", "service")
     monkeypatch.setenv("WARPSIM_SERVICE_URL", "http://127.0.0.1:9")
-    with pytest.warns(RuntimeWarning, match="unreachable"):
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # forced choice: raise, don't warn
         with pytest.raises(RuntimeError):
             Session.from_env()
     monkeypatch.setenv("WARPSIM_BACKEND", "bogus")
     with pytest.raises(ValueError):
+        Session.from_env()
+
+
+def test_from_env_forced_service_failure_keeps_warning_slot(
+        monkeypatch, tmp_path):
+    """Regression: WARPSIM_BACKEND=service probing a dead
+    WARPSIM_SERVICE_URL used to route through ``service.from_env``, which
+    (a) emitted the misleading "falling back to in-process sweeps"
+    warning right before the RuntimeError said the opposite, and (b)
+    consumed the once-per-process dead-URL warning slot — so a later
+    *unforced* ``Session.from_env`` on the same dead URL fell back
+    silently, never warning at all."""
+    monkeypatch.setattr(service_mod, "_WARNED_DEAD_URLS", set())
+    monkeypatch.setenv("WARPSIM_SERVICE_URL", "http://127.0.0.1:9")
+    monkeypatch.setenv("WARPSIM_BACKEND", "service")
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")      # any warning is a failure
+        with pytest.raises(RuntimeError, match="no live daemon"):
+            Session.from_env()
+    assert not service_mod._WARNED_DEAD_URLS
+    # The unforced fallback on the same dead URL still gets its one warning.
+    monkeypatch.delenv("WARPSIM_BACKEND")
+    with pytest.warns(RuntimeWarning, match="unreachable"):
+        session = Session.from_env(cache_dir=str(tmp_path))
+    assert isinstance(session.backend, InProcessBackend)
+    # And a forced service choice without any URL is a config error,
+    # mirroring the queue backend's contract.
+    monkeypatch.setenv("WARPSIM_BACKEND", "service")
+    monkeypatch.delenv("WARPSIM_SERVICE_URL")
+    with pytest.raises(ValueError, match="requires"):
         Session.from_env()
 
 

@@ -22,7 +22,7 @@ import dataclasses
 import numpy as np
 import pytest
 
-from repro.core.warpsim import _native, machines, runner
+from repro.core.warpsim import _native, _pallas, machines, runner
 from repro.core.warpsim.config import MachineConfig
 from repro.core.warpsim.divergence import (
     WarpStream, aggregate_stream, build_thread_trace, expand_stream,
@@ -41,9 +41,12 @@ GOLDEN_BENCHES = ("BFS", "BKP", "MTM", "DYN", "SR2")
 N_THREADS = 512
 
 # Every non-reference engine must replay the event loop bit-for-bit; the
-# native engine only participates where the compiled core is available.
+# native engine only participates where the compiled core is available,
+# the pallas engine where jax imports (bit-identical, no tolerance: the
+# device loop runs the same IEEE-754 double ops in the same order).
 FAST_ENGINES = ["fast", "fast_nested"] + (
-    ["native"] if _native.available() else [])
+    ["native"] if _native.available() else []) + (
+    ["pallas"] if _pallas.available() else [])
 
 
 @pytest.fixture(scope="module")

@@ -157,7 +157,11 @@ def test_http_healthz_reports_live_engine(live):
     native = h["native"]
     assert set(native) >= {"enabled", "loaded", "attempted", "error",
                            "engine"}
-    # healthz resolves "auto" to whichever engine is actually live.
+    pallas = h["pallas"]
+    assert set(pallas) >= {"enabled", "importable", "probed", "error",
+                           "engine", "launches"}
+    # healthz resolves "auto" to whichever engine is actually live —
+    # never to "pallas", which is strictly opt-in.
     assert h["engine"] == ("native" if native["engine"] == "native"
                            else "fast")
 
@@ -517,22 +521,44 @@ def test_service_queue_persistence_corrupt_file_degrades(tmp_path):
     with open(svc._job_path(job1["job"]), "w") as f:
         f.write("{ not json")
     fresh = SweepService(str(tmp_path), persist_traces=False)
-    assert set(fresh._jobs) == {job2["job"]}    # corrupt job-1 dropped
+    assert set(fresh._jobs) == {job2["job"]}    # corrupt job dropped
     assert not os.path.exists(svc._job_path(job1["job"]))
-    # The sequence survives (meta.json): new jobs never reuse a dead id.
+    # A fresh daemon mints ids in its own namespace: it can never reuse
+    # a dead (or live) id from a previous incarnation.
     job3 = fresh.enqueue(_spec(benches=("BFS",)))
-    assert job3["job"] == "job-3"
+    assert job3["job"] not in {job1["job"], job2["job"]}
 
 
-def test_service_queue_seq_rederived_from_job_names(tmp_path):
-    """Losing meta.json must not recycle a live job id: the sequence
-    floor falls back to the persisted job file names."""
+def test_service_queue_two_daemons_share_root_without_clobbering(tmp_path):
+    """Two daemons on one cache root must not clobber each other's queue
+    state.  Before the per-daemon namespace fix both minted "job-1" and
+    the second daemon's snapshot silently overwrote the first's."""
+    a = SweepService(str(tmp_path), persist_traces=False)
+    b = SweepService(str(tmp_path), persist_traces=False)
+    ja = a.enqueue(_spec(benches=("BFS",)))["job"]
+    jb = b.enqueue(_spec(benches=("DYN",)))["job"]
+    assert ja != jb
+    # Both snapshots coexist on disk under the shared queue dir.
+    assert os.path.exists(a._job_path(ja))
+    assert os.path.exists(b._job_path(jb))
+    # A third daemon booting on the same root adopts both jobs.
+    fresh = SweepService(str(tmp_path), persist_traces=False)
+    assert {ja, jb} <= set(fresh._jobs)
+
+
+def test_service_queue_legacy_meta_layout_adopted(tmp_path):
+    """Old layouts (un-namespaced job-<n>.json plus a meta.json sequence
+    file) still load on boot: jobs are adopted verbatim by name and the
+    stray meta.json is ignored rather than parsed as a job."""
     svc = SweepService(str(tmp_path), persist_traces=False)
     job = svc.enqueue(_spec(benches=("BFS",)))
-    os.remove(os.path.join(svc._queue_dir, SweepService._META))
+    legacy = os.path.join(svc._queue_dir, "job-1.json")
+    os.rename(svc._job_path(job["job"]), legacy)
+    with open(os.path.join(svc._queue_dir, "meta.json"), "w") as f:
+        f.write('{"job_seq": 1}')
     fresh = SweepService(str(tmp_path), persist_traces=False)
-    assert set(fresh._jobs) == {job["job"]}
-    assert fresh.enqueue(_spec(benches=("DYN",)))["job"] == "job-2"
+    assert set(fresh._jobs) == {"job-1"}
+    assert fresh.queue_status("job-1")["chunks"] >= 1
 
 
 def test_enqueue_evicts_old_jobs(tmp_path):
@@ -588,3 +614,46 @@ def test_native_failed_compile_warns_once_with_diagnostic(
     with warnings.catch_warnings():
         warnings.simplefilter("error")
         assert _native.available() is False
+
+
+# ------------------------------------------------------- pallas reporting
+
+def test_pallas_status_rereads_env(monkeypatch):
+    from repro.core.warpsim import _pallas
+    monkeypatch.setattr(_pallas, "_probe_result", None)
+    st = _pallas.status()
+    assert {"enabled", "importable", "probed", "error", "engine",
+            "launches"} <= set(st)
+    assert st["probed"] is None           # status() alone never jits
+    monkeypatch.setenv("WARPSIM_PALLAS", "0")
+    off = _pallas.status()
+    assert off["enabled"] is False and off["engine"] == "unavailable"
+    assert _pallas.available() is False   # the launch gate re-reads too
+    monkeypatch.delenv("WARPSIM_PALLAS")
+    assert _pallas.status()["enabled"] is True
+
+
+@pytest.mark.skipif(
+    not __import__("repro.core.warpsim._pallas",
+                   fromlist=["_pallas"]).available(),
+    reason="jax not importable (or WARPSIM_PALLAS=0)")
+def test_healthz_pallas_kill_switch_flips_on_live_daemon(
+        tmp_path, monkeypatch):
+    """WARPSIM_PALLAS=0 takes effect on a *running* pallas daemon: the
+    next healthz re-reads the env and reports the fallback engine —
+    no restart required (same contract as the WARPSIM_NATIVE switch)."""
+    from repro.core.warpsim import _pallas
+
+    svc = SweepService(str(tmp_path), engine="pallas",
+                       persist_traces=False)
+    h = svc.healthz()
+    assert h["pallas"]["probed"] is True  # a pallas daemon self-probes
+    assert h["engine"] == "pallas"
+
+    monkeypatch.setenv("WARPSIM_PALLAS", "0")
+    off = svc.healthz()
+    assert off["pallas"]["enabled"] is False
+    assert off["engine"] in ("native", "fast")
+
+    monkeypatch.delenv("WARPSIM_PALLAS")
+    assert svc.healthz()["engine"] == "pallas"

@@ -666,3 +666,88 @@ def test_lru_caches_thread_safe_under_contention(cache_cls):
         t.join(30)
     assert errors == []
     assert len(lru) <= 2
+
+
+# ------------------------------------------------- pallas family batching
+
+pallas_required = pytest.mark.skipif(
+    not __import__("repro.core.warpsim._pallas",
+                   fromlist=["_pallas"]).available(),
+    reason="jax not importable (or WARPSIM_PALLAS=0)")
+
+
+@pallas_required
+def test_pallas_sweep_one_launch_per_family():
+    """engine="pallas" batches a whole trace family — every expansion
+    group x machine variant of one (bench, n_threads, seed) — into a
+    single device launch, and the numbers stay bit-identical to fast."""
+    from repro.core.warpsim import _pallas
+
+    spec = _spec(benches=("BFS", "DYN"),
+                 machines={"ws8": machines.baseline(8),
+                           "SW+": machines.sw_plus(),
+                           "ws16": machines.baseline(16)})
+    before = _pallas.launch_count()
+    res, stats = run_sweep_with_stats(spec, parallel=False,
+                                      engine="pallas")
+    # One launch per family: 2 benches x 1 n_threads x 1 seed.
+    assert stats["family_launches"] == 2
+    assert _pallas.launch_count() - before == 2
+
+    ref, ref_stats = run_sweep_with_stats(spec, parallel=False,
+                                          engine="fast")
+    assert ref_stats["family_launches"] == 0    # counter is pallas-only
+    for m in ref:
+        for b in ref[m]:
+            assert (dataclasses.asdict(res[m][b])
+                    == dataclasses.asdict(ref[m][b]))
+
+
+@pallas_required
+def test_pallas_kill_switch_falls_back_per_group(monkeypatch):
+    """WARPSIM_PALLAS=0 is re-read per launch: a sweep asked for pallas
+    degrades to the per-group fallback (zero family launches) and still
+    returns correct results — no restart, no error."""
+    from repro.core.warpsim import _pallas
+
+    monkeypatch.setenv("WARPSIM_PALLAS", "0")
+    monkeypatch.setattr(_pallas, "_warned", False, raising=False)
+    spec = _spec(benches=("DYN",))
+    before = _pallas.launch_count()
+    with pytest.warns(RuntimeWarning, match="pallas"):
+        res, stats = run_sweep_with_stats(spec, parallel=False,
+                                          engine="pallas")
+    assert stats["family_launches"] == 0
+    assert _pallas.launch_count() == before
+    ref = run_sweep(spec, parallel=False, engine="fast")
+    for m in ref:
+        for b in ref[m]:
+            assert (dataclasses.asdict(res[m][b])
+                    == dataclasses.asdict(ref[m][b]))
+
+
+@pallas_required
+def test_auto_engine_never_selects_pallas():
+    """engine="auto" resolves to native/fast even with jax importable:
+    the device engine is strictly opt-in (on CPU hosts the XLA loop
+    loses to the compiled/flat engines)."""
+    from repro.core.warpsim import _pallas
+    from repro.core.warpsim.divergence import expand_stream
+    from repro.core.warpsim.timing import simulate
+    from repro.core.warpsim.trace import get_workload
+
+    assert _pallas.available() is True      # precondition: it *could* run
+    cfg = machines.baseline(8)
+    wl = get_workload("BFS", n_threads=128)
+    stream = expand_stream(wl, cfg)
+    before = _pallas.launch_count()
+    auto = simulate(wl.name, stream, cfg, engine="auto")
+    assert _pallas.launch_count() == before
+    assert (dataclasses.asdict(auto)
+            == dataclasses.asdict(simulate(wl.name, stream, cfg,
+                                           engine="fast")))
+    # The sweep layer inherits the same resolution.
+    _res, stats = run_sweep_with_stats(_spec(benches=("BFS",)),
+                                       parallel=False, engine="auto")
+    assert stats["family_launches"] == 0
+    assert _pallas.launch_count() == before
