@@ -1,0 +1,171 @@
+"""Chaos smoke: kill a daemon mid-study, flap the network, corrupt a
+worker — the client never notices and every record stays bit-identical.
+
+The CI `chaos-smoke` job's driver (also runnable locally). Daemons are
+in-process ``serve()`` threads (not subprocesses) so the driver can
+assert on their fault/simulation counters directly; the fault schedules
+are seeded :class:`~repro.core.warpsim.faults.FaultPlan`\\ s, so every
+run replays identically. Three scenarios:
+
+1. **daemon-kill failover** — two daemons over one shared cache root; an
+   injected ``service.cell:kill`` murders daemon A mid-study and daemon B
+   503s its first request; a :class:`ResilientClient` retries + fails
+   over and the ``StudyResult`` records are bit-identical to in-process,
+   with zero duplicate simulations across the pair.
+2. **flaky network** (via the ``WARPSIM_FAULTS`` *env* path, the way an
+   operator would inject faults) — one daemon whose first ``/study``
+   response is a 503 and whose second is computed then dropped on the
+   floor (lost ack); the third attempt serves entirely from cache, so
+   the daemon simulated each cell exactly once.
+3. **worker corruption + drain** — a queue worker whose first
+   ``complete`` POST is corrupted retries cleanly (no duplicate
+   adoption); ``POST /admin/drain`` then refuses new work, persists the
+   queue, and a successor daemon over the same root adopts the job.
+
+Exit code 0 iff every assertion holds.
+
+  PYTHONPATH=src python -m benchmarks.chaos_smoke
+"""
+
+from __future__ import annotations
+
+import contextlib
+import os
+import tempfile
+import threading
+import time
+
+from repro.core.warpsim import api, machines
+from repro.core.warpsim.api import ServiceBackend, Session, Study
+from repro.core.warpsim.faults import FaultPlan, ServiceError
+from repro.core.warpsim.service import (
+    ResilientClient, SweepClient, SweepService, serve,
+)
+from repro.core.warpsim.work_queue import run_worker
+
+SMALL = dict(benches=("BFS", "DYN"), n_threads=128)
+
+
+def _study(**kw):
+    base = dict(machines={"ws8": machines.baseline(8),
+                          "SW+": machines.sw_plus()}, **SMALL)
+    base.update(kw)
+    return Study(**base)
+
+
+def _noop_sleep(_seconds):
+    pass
+
+
+@contextlib.contextmanager
+def daemon(svc: SweepService):
+    httpd = serve(svc)
+    threading.Thread(target=httpd.serve_forever, daemon=True).start()
+    try:
+        yield "http://%s:%d" % httpd.server_address[:2]
+    finally:
+        httpd.shutdown()
+        httpd.server_close()
+
+
+def scenario_daemon_kill(reference, tmp) -> None:
+    study = _study(seeds=(0, 1))
+    cells = len(study.cells())
+    root = os.path.join(tmp, "kill-cache")
+    svc_a = SweepService(root, persist_traces=False, fault_plan=(
+        FaultPlan.from_spec(f"service.cell:kill,after={cells - 3}")))
+    svc_b = SweepService(root, persist_traces=False, fault_plan=(
+        FaultPlan.from_spec("server/study:error=503,times=1")))
+    t0 = time.time()
+    with daemon(svc_a) as url_a, daemon(svc_b) as url_b:
+        client = ResilientClient([url_a, url_b], max_retries=8,
+                                 breaker_threshold=99, seed=0,
+                                 sleep=_noop_sleep, timeout=120.0)
+        result = Session(backend=ServiceBackend(client=client)).run(study)
+        cstats = client.client_stats()
+    assert result.records == reference.records, "records diverged"
+    assert svc_a.dead, "the injected kill never fired"
+    total_sim = svc_a.counters["simulated"] + svc_b.counters["simulated"]
+    assert total_sim == cells, \
+        f"{total_sim} simulations for {cells} cells (duplicates!)"
+    assert cstats["retries"] >= 2 and cstats["failovers"] >= 1, cstats
+    print(f"chaos-smoke: daemon-kill {time.time() - t0:.1f}s — daemon A "
+          f"killed after {svc_a.counters['simulated']} cells, "
+          f"{cstats['retries']} retries / {cstats['failovers']} failovers, "
+          f"records bit-identical, {total_sim}/{cells} single simulations")
+
+
+def scenario_flaky_network(reference, tmp) -> None:
+    study = _study(seeds=(0, 1))
+    cells = len(study.cells())
+    os.environ["WARPSIM_FAULTS"] = \
+        "server/study:error=503,times=1;response/study:drop,times=1"
+    try:
+        svc = SweepService(os.path.join(tmp, "flaky-cache"),
+                           persist_traces=False)   # plan read from env
+    finally:
+        del os.environ["WARPSIM_FAULTS"]
+    t0 = time.time()
+    with daemon(svc) as url:
+        client = ResilientClient([url], max_retries=8, seed=0,
+                                 sleep=_noop_sleep, timeout=120.0)
+        result = Session(backend=ServiceBackend(client=client)).run(study)
+        cstats = client.client_stats()
+    assert result.records == reference.records, "records diverged"
+    # Attempt 1 ate the 503, attempt 2 computed but lost its ack, attempt
+    # 3 was pure cache — each cell simulated exactly once regardless.
+    assert cstats["retries"] == 2, cstats
+    assert svc.counters["simulated"] == cells, svc.counters
+    assert svc.counters["faults_injected"] == 2, svc.counters
+    print(f"chaos-smoke: flaky-network {time.time() - t0:.1f}s — 503 then "
+          f"lost ack then cache, {svc.counters['simulated']}/{cells} "
+          f"single simulations, records bit-identical")
+
+
+def scenario_worker_corruption_and_drain(tmp) -> None:
+    root = os.path.join(tmp, "queue-cache")
+    svc = SweepService(root, persist_traces=False)
+    spec = _study(benches=("BFS",)).to_spec()
+    cells = len(spec.cells())
+    t0 = time.time()
+    with daemon(svc) as url:
+        job = svc.enqueue(spec, chunk_size=2, lease_seconds=60.0)
+        n = run_worker(
+            url, job["job"], worker_id="chaos-w1", poll_seconds=0.01,
+            sleep=_noop_sleep,
+            fault_plan=FaultPlan.from_spec("worker.complete:corrupt,times=1"))
+        assert n == cells, f"worker computed {n}/{cells} cells"
+        adopted = svc.counters["queue_cells_adopted"]
+        assert adopted == cells, f"{adopted} adoptions (duplicate/missing)"
+        assert svc.counters["errors"] >= 1, "corrupt POST never rejected"
+        client = SweepClient(url, timeout=30.0)
+        out = client.drain(wait_seconds=0.5)
+        assert out["ok"] and out["draining"], out
+        assert client.healthz()["draining"]
+        try:
+            client.cell("BFS", machine="ws8")
+            raise AssertionError("draining daemon accepted new work")
+        except ServiceError as e:
+            assert e.code == 503, e
+    heir = SweepService(root, persist_traces=False)
+    status = heir.queue_status(job["job"])
+    assert status["chunks"] == job["chunks"], status
+    print(f"chaos-smoke: worker-corruption+drain {time.time() - t0:.1f}s — "
+          f"{adopted}/{cells} single adoptions after a corrupted complete, "
+          f"drain persisted {out['jobs_persisted']} job(s), successor "
+          f"adopted the queue")
+
+
+def main() -> None:
+    reference = api.Session().run(_study(seeds=(0, 1)))
+    print(f"chaos-smoke: reference study in-process, "
+          f"{len(reference.records)} records")
+    with tempfile.TemporaryDirectory(prefix="warpsim-chaos-smoke-") as tmp:
+        scenario_daemon_kill(reference, tmp)
+        scenario_flaky_network(reference, tmp)
+        scenario_worker_corruption_and_drain(tmp)
+    print("chaos-smoke OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -10,8 +10,10 @@ Public API:
     nested-dict shim over api)
     sweep.SweepSpec / sweep.ResultCache / sweep.run_sweep /
     sweep.run_sweep_with_stats   (the low-level engine under api)
-    service.SweepService / service.SweepClient / service.from_env
+    service.SweepService / service.SweepClient / service.ResilientClient /
+    service.from_env
     work_queue.WorkQueue / work_queue.run_worker
+    faults.FaultPlan / faults.ServiceError / faults.ServiceUnavailable
 
 Timing engines (``simulate(..., engine=...)`` — all bit-identical):
 
@@ -29,6 +31,46 @@ Timing engines (``simulate(..., engine=...)`` — all bit-identical):
                   fast when jax is missing or WARPSIM_PALLAS=0
     event         reference event loop (the model's ground truth)
     ============= ===================================================
+
+Serving runbook (the daemon fleet; full details in ROADMAP.md):
+
+    WARPSIM_SERVICE_URLS   comma-separated daemon URLs; clients built by
+                           ``service.from_env`` / ``api.Session.from_env``
+                           become a ``ResilientClient``: bounded retries of
+                           transient failures (5xx / no response) with
+                           capped exponential backoff + seeded jitter,
+                           immediate failover between endpoints, and a
+                           per-endpoint circuit breaker re-admitted only by
+                           a passing ``/healthz`` probe. Knobs are
+                           constructor args (``max_retries``,
+                           ``backoff_base``/``backoff_cap``,
+                           ``breaker_threshold``/``breaker_cooldown``,
+                           ``attempt_timeout``); counters surface as the
+                           ``"client"`` section of ``stats()``.
+    WARPSIM_SERVICE_URL    single daemon, plain ``SweepClient`` (legacy).
+    WARPSIM_BACKEND        forces the Session backend. Degradation matrix:
+                           *unforced* + every endpoint dead -> warn once,
+                           run in-process (records identical — cells are
+                           deterministic); *forced* service/queue + dead ->
+                           raise (RuntimeError; ValueError when no URL env
+                           is set at all). Mid-study daemon death with >=2
+                           URLS -> invisible to callers (retry + failover;
+                           the shared cache root means completed cells are
+                           never re-simulated). 4xx responses never retry.
+    WARPSIM_FAULTS         deterministic fault injection for chaos tests,
+                           e.g. ``server/study:error=503,times=2;
+                           service.cell:kill,after=5;seed=7`` — see
+                           ``faults`` module docstring for the grammar.
+    POST /admin/drain      graceful shutdown: stop leasing queue chunks,
+                           refuse new cell/study/sweep work with 503,
+                           finish in-flight cells, persist queue jobs.
+                           ``healthz()["draining"]`` flips true and probe
+                           re-admission skips draining daemons.
+
+Workers (``work_queue.run_worker``) retry transient lease/renew/complete
+failures with backoff, abandon chunks on lost leases (lease expiry
+requeues them), and rely on idempotent completes — a lost complete ack
+costs a recompute, never duplicate or wrong data.
 """
 
 from repro.core.warpsim.config import MachineConfig
@@ -38,6 +80,9 @@ from repro.core.warpsim.api import (
 )
 from repro.core.warpsim.divergence import (
     WarpStream, expand_stream, expand_workload, simd_efficiency,
+)
+from repro.core.warpsim.faults import (
+    FaultPlan, ServiceError, ServiceUnavailable,
 )
 from repro.core.warpsim.sweep import (
     ResultCache, SweepSpec, expansion_key, run_sweep, run_sweep_with_stats,
@@ -52,6 +97,7 @@ from repro.core.warpsim.timing import SimResult, simulate
 __all__ = [
     "MachineConfig", "api", "machines", "runner", "sweep", "trace",
     "Session", "Study", "StudyResult",
+    "FaultPlan", "ServiceError", "ServiceUnavailable",
     "WarpStream", "expand_stream", "expand_workload", "simd_efficiency",
     "SimResult", "simulate",
     "ResultCache", "SweepSpec", "expansion_key", "run_sweep",

@@ -72,6 +72,12 @@ from typing import Dict, Iterator, Mapping, Optional, Tuple
 from repro.core.warpsim import machines as machines_mod
 from repro.core.warpsim import sweep as sweep_mod
 from repro.core.warpsim.config import MachineConfig
+# Typed client errors, re-exported at the facade boundary: callers catch
+# api.ServiceError / api.ServiceUnavailable — raw urllib exceptions never
+# escape Session.run (regression-tested in tests/test_faults.py).
+from repro.core.warpsim.faults import (  # noqa: F401 — facade re-exports
+    FaultPlan, ServiceError, ServiceUnavailable,
+)
 from repro.core.warpsim.timing import SimResult
 from repro.core.warpsim.trace import BENCHMARKS
 
@@ -391,23 +397,37 @@ class InProcessBackend(Backend):
 
 
 class ServiceBackend(Backend):
-    """A running sweep daemon (``POST /study``); its cache, its LRUs."""
+    """A running sweep daemon (``POST /study``); its cache, its LRUs.
+
+    `urls` (a list, or one comma-separated string) builds a
+    :class:`~repro.core.warpsim.service.ResilientClient` over the fleet
+    instead of a single-daemon :class:`~repro.core.warpsim.service
+    .SweepClient` — retries, failover and circuit breaking included.
+    """
 
     name = "service"
 
     def __init__(self, url: Optional[str] = None, client=None,
-                 timeout: float = 600.0):
-        if client is None and not url:
-            raise ValueError("ServiceBackend needs a url or a client")
+                 timeout: float = 600.0, urls=None):
+        if client is None and not url and not urls:
+            raise ValueError("ServiceBackend needs a url, urls, or a client")
         self._client = client
-        self.url = url if url else client.base_url
+        if isinstance(urls, str):
+            urls = [u.strip() for u in urls.split(",") if u.strip()]
+        self.urls = list(urls) if urls else None
+        self.url = (url if url
+                    else (self.urls[0] if self.urls else client.base_url))
         self.timeout = timeout
 
     def client(self):
         if self._client is None:
             from repro.core.warpsim import service as service_mod
-            self._client = service_mod.SweepClient(self.url,
-                                                   timeout=self.timeout)
+            if self.urls:
+                self._client = service_mod.ResilientClient(
+                    self.urls, timeout=self.timeout)
+            else:
+                self._client = service_mod.SweepClient(self.url,
+                                                       timeout=self.timeout)
         return self._client
 
     def run(self, study: Study, session: "Session") -> StudyResult:
@@ -430,25 +450,40 @@ class QueueBackend(Backend):
 
     name = "queue"
 
-    def __init__(self, url: str, chunk_size: int = 16,
+    def __init__(self, url: Optional[str] = None, chunk_size: int = 16,
                  lease_seconds: Optional[float] = None,
                  worker_id: Optional[str] = None,
-                 poll_seconds: float = 0.05, timeout: float = 600.0):
-        self.url = url
+                 poll_seconds: float = 0.05, timeout: float = 600.0,
+                 client=None):
+        if client is None and not url:
+            raise ValueError("QueueBackend needs a url or a client")
+        self._client = client
+        self.url = url if url else client.base_url
         self.chunk_size = chunk_size
         self.lease_seconds = lease_seconds
         self.worker_id = worker_id
         self.poll_seconds = poll_seconds
         self.timeout = timeout
 
+    def client(self):
+        if self._client is None:
+            from repro.core.warpsim import service as service_mod
+            self._client = service_mod.SweepClient(self.url,
+                                                   timeout=self.timeout)
+        return self._client
+
     def run(self, study: Study, session: "Session") -> StudyResult:
-        from repro.core.warpsim import service as service_mod
         from repro.core.warpsim import work_queue as wq_mod
-        client = service_mod.SweepClient(self.url, timeout=self.timeout)
+        client = self.client()
         job = client.enqueue(study.to_spec(), chunk_size=self.chunk_size,
                              lease_seconds=self.lease_seconds)
+        # Queue jobs live on ONE daemon (cross-daemon job visibility is
+        # the federation open item): drain against the endpoint that
+        # actually took the enqueue — for a ResilientClient that is
+        # last_url, which may not be the first URL in its list.
+        worker_url = getattr(client, "last_url", None) or self.url
         computed = wq_mod.run_worker(
-            self.url, job["job"], worker_id=self.worker_id,
+            worker_url, job["job"], worker_id=self.worker_id,
             engine=study.engine, poll_seconds=self.poll_seconds,
             timeout=self.timeout)
         res = client.study(study)       # every cell now a daemon cache hit
@@ -550,6 +585,7 @@ class Session:
                 "hits": self.result_cache.hits,
                 "misses": self.result_cache.misses,
                 "adopted": self.result_cache.adopted,
+                "corrupt": self.result_cache.corrupt,
             }
         return out
 
@@ -559,12 +595,14 @@ class Session:
         """The environment-driven session (figure generation, examples).
 
         ``WARPSIM_BACKEND`` forces a backend (``inprocess`` | ``service``
-        | ``queue``; the remote two require ``WARPSIM_SERVICE_URL`` and
-        raise when it is absent/dead — an *explicit* choice failing
-        silently would hide misconfiguration). Unset, a live
-        ``WARPSIM_SERVICE_URL`` daemon is preferred (probed via
-        ``service.from_env``, which warns once per process on a dead URL)
-        with a silent fall back to an in-process session over
+        | ``queue``; the remote two require ``WARPSIM_SERVICE_URLS`` — a
+        comma-separated fleet, served through a failover
+        ``ResilientClient`` — or single-daemon ``WARPSIM_SERVICE_URL``,
+        and raise when both are absent or everything is dead: an
+        *explicit* choice failing silently would hide misconfiguration).
+        Unset, a live fleet/daemon from those env vars is preferred
+        (probed via ``service.from_env``, which warns once per process on
+        a dead URL) with a silent fall back to an in-process session over
         `cache_dir`.
 
         The forced remote choices probe *directly* rather than through
@@ -579,20 +617,27 @@ class Session:
         if choice in ("inprocess", "in-process", "local"):
             return cls(cache_dir=cache_dir, persist_traces=persist_traces)
         if choice in ("queue", "service"):
+            fleet = (os.environ.get(service_mod.ENV_URLS) or "").strip()
             url = os.environ.get(service_mod.ENV_URL)
-            if not url:
+            if not fleet and not url:
                 raise ValueError(
-                    f"{ENV_BACKEND}={choice} requires {service_mod.ENV_URL}")
+                    f"{ENV_BACKEND}={choice} requires {service_mod.ENV_URL} "
+                    f"or {service_mod.ENV_URLS}")
             try:
-                client = service_mod.SweepClient(url)
+                if fleet:
+                    client = service_mod.ResilientClient(fleet)
+                else:
+                    client = service_mod.SweepClient(url)
                 client.healthz()
             except Exception as e:      # noqa: BLE001 — any failure = dead
+                var, val = ((service_mod.ENV_URLS, fleet) if fleet
+                            else (service_mod.ENV_URL, url))
                 raise RuntimeError(
                     f"{ENV_BACKEND}={choice} but no live daemon at "
-                    f"{service_mod.ENV_URL}={url!r} "
+                    f"{var}={val!r} "
                     f"({e.__class__.__name__}: {e})") from e
             if choice == "queue":
-                return cls(backend=QueueBackend(url))
+                return cls(backend=QueueBackend(client=client))
             return cls(backend=ServiceBackend(client=client))
         if choice is not None:
             raise ValueError(

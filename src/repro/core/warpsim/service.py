@@ -61,13 +61,14 @@ import concurrent.futures
 import dataclasses
 import json
 import os
+import random
 import tempfile
 import threading
 import time
 import uuid
 import warnings
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
-from typing import Dict, Iterable, List, Mapping, Optional, Tuple
+from typing import Dict, Iterable, List, Mapping, Optional, Sequence, Tuple, Union
 from urllib.parse import parse_qs, urlencode, urlparse
 
 from repro.core.warpsim import _native, _pallas
@@ -76,6 +77,9 @@ from repro.core.warpsim.api import (
     RunRecord, Session, Study, StudyResult,
 )
 from repro.core.warpsim.config import MachineConfig
+from repro.core.warpsim.faults import (
+    Fault, FaultError, FaultPlan, ServiceError, ServiceUnavailable,
+)
 from repro.core.warpsim.sweep import (
     MODEL_VERSION, SweepSpec, cell_key, compute_cell, family_major_cells,
     spec_from_dict, spec_to_dict,
@@ -88,6 +92,11 @@ from repro.core.warpsim.work_queue import (
 
 DEFAULT_CACHE_DIR = os.path.join("benchmarks", "results", "sweep_cache")
 ENV_URL = "WARPSIM_SERVICE_URL"
+ENV_URLS = "WARPSIM_SERVICE_URLS"
+# Logical-operation id a ResilientClient stamps on every request; the
+# daemon uses it as the fault-plan marker, so injected request faults fire
+# once per *operation*, not once per retry attempt (retries must pass).
+OP_HEADER = "X-Warpsim-Op"
 
 _BOOL_TRUE = ("1", "true", "yes", "on")
 _BOOL_FALSE = ("0", "false", "no", "off")
@@ -152,7 +161,9 @@ class SweepService:
     """
 
     def __init__(self, cache_dir: str, engine: str = "auto",
-                 persist_traces: bool = True, lease_seconds: float = 60.0):
+                 persist_traces: bool = True, lease_seconds: float = 60.0,
+                 clock=time.monotonic,
+                 fault_plan: Optional[FaultPlan] = None):
         # The daemon's cache stack is a Session: its own ResultCache plus
         # *instance* trace/expansion LRUs (not the module globals — a
         # daemon embedded in a larger process must not contend with that
@@ -163,6 +174,15 @@ class SweepService:
         self.engine = engine
         self.trace_dir = self.session.trace_dir
         self.lease_seconds = lease_seconds
+        # Injectable monotonic clock: drives every WorkQueue lease this
+        # daemon owns, so tests exercise expiry/requeue deterministically.
+        self._clock = clock
+        # Chaos harness: a seeded FaultPlan (constructor arg, else
+        # $WARPSIM_FAULTS, else none) consulted at the named fault points.
+        self.fault_plan = (FaultPlan.from_env() if fault_plan is None
+                           else fault_plan)
+        self.dead = False       # a "kill" fault fired: play dead from now on
+        self.draining = False   # /admin/drain: no new work, finish in-flight
         self.started = time.time()
         self._lock = threading.Lock()
         self._inflight: Dict[str, concurrent.futures.Future] = {}
@@ -180,7 +200,7 @@ class SweepService:
         self.counters: Dict[str, int] = {
             "requests": 0, "errors": 0, "cells_served": 0, "cache_hits": 0,
             "simulated": 0, "dedup_waits": 0, "sweeps": 0, "sweep_cells": 0,
-            "queue_cells_adopted": 0,
+            "queue_cells_adopted": 0, "faults_injected": 0,
         }
         self.last_sweep_stats: Dict[str, float] = {}
         self._load_jobs()
@@ -235,7 +255,8 @@ class SweepService:
             job = name[:-len(".json")]
             try:
                 with open(path) as f:
-                    jobs[job] = WorkQueue.from_dict(json.load(f))
+                    jobs[job] = WorkQueue.from_dict(json.load(f),
+                                                    clock=self._clock)
             except OSError:
                 continue                    # transient: keep for next boot
             except Exception:
@@ -288,6 +309,51 @@ class SweepService:
         with self._lock:
             self.counters[counter] = self.counters.get(counter, 0) + n
 
+    # ---------------------------------------------------- faults / drain
+
+    def check_fault(self, point: str,
+                    marker: Optional[str] = None) -> Optional[Fault]:
+        """Consult the daemon's fault plan (no-op when none is loaded)."""
+        if self.fault_plan is None:
+            return None
+        fault = self.fault_plan.check(point, marker)
+        if fault is not None:
+            self.bump("faults_injected")
+        return fault
+
+    def kill(self) -> None:
+        """Play dead: every subsequent connection is closed unanswered,
+        indistinguishable (to clients) from a SIGKILLed process."""
+        self.dead = True
+
+    def drain(self, wait_seconds: float = 10.0) -> dict:
+        """Graceful-shutdown path (``POST /admin/drain``).
+
+        Flips the daemon into draining mode: ``/queue/lease`` stops
+        granting chunks (in-flight leases may still renew and complete —
+        workers finish what they hold), new ``/cell``/``/study``/``/sweep``
+        work is refused with 503 (a ResilientClient fails over to a
+        sibling), in-flight cell simulations are given up to
+        `wait_seconds` to finish, and every queue job's state is
+        persisted. After this returns the process can be stopped without
+        stranding anything.
+        """
+        with self._lock:
+            self.draining = True
+            jobs = list(self._jobs)
+        deadline = time.monotonic() + wait_seconds
+        while time.monotonic() < deadline:
+            with self._lock:
+                if not self._inflight:
+                    break
+            time.sleep(0.01)
+        for job in jobs:
+            self._persist_job(job)
+        with self._lock:
+            in_flight = len(self._inflight)
+        return {"ok": True, "draining": True,
+                "jobs_persisted": len(jobs), "in_flight": in_flight}
+
     # ------------------------------------------------------------- cells
 
     def cell(self, bench: str, cfg: MachineConfig,
@@ -338,13 +404,23 @@ class SweepService:
             with self._lock:
                 self.counters["simulated"] += 1
             fut.set_result(res)
-            return res, "simulated"
         except BaseException as e:
             fut.set_exception(e)
             raise
         finally:
             with self._lock:
                 self._inflight.pop(key, None)
+        # Chaos hook: "daemon dies after N cells". Checked strictly AFTER
+        # the result is cached and the dedup future resolved — a killed
+        # daemon's completed cells stay adopted from the shared cache
+        # root, which is what makes failover re-simulate nothing.
+        fault = self.check_fault("service.cell", marker=key)
+        if fault is not None:
+            if fault.action == "kill":
+                self.kill()
+            raise FaultError(
+                f"injected {fault.action} at service.cell ({key[:12]}…)")
+        return res, "simulated"
 
     # ------------------------------------------------------------ sweeps
 
@@ -463,7 +539,8 @@ class SweepService:
         todo = [c for c in family_major_cells(spec.cells())
                 if not self.cache.contains(cell_key(c[2], c[1], c[3], c[4]))]
         q = WorkQueue(todo, chunk_size=chunk_size,
-                      lease_seconds=lease_seconds or self.lease_seconds)
+                      lease_seconds=lease_seconds or self.lease_seconds,
+                      clock=self._clock)
         evicted = []
         with self._lock:
             self._job_seq += 1
@@ -493,6 +570,12 @@ class SweepService:
 
     def queue_lease(self, job: str, worker: str) -> dict:
         q = self._job(job)
+        if self.draining:
+            # Rolling restart: stop handing out work; workers holding
+            # leases may still renew/complete, everyone else sees "no
+            # chunk" and polls a sibling (or waits out the restart).
+            return {"job": job, "chunk": None, "done": q.done,
+                    "draining": True}
         chunk = q.lease(worker)
         if chunk is None:
             return {"job": job, "chunk": None, "done": q.done}
@@ -557,6 +640,7 @@ class SweepService:
             "engine": engine,
             "native": native,
             "pallas": pallas,
+            "draining": self.draining,
             "cache_root": os.path.abspath(self.cache.root),
             "uptime_s": round(time.time() - self.started, 3),
         }
@@ -570,6 +654,9 @@ class SweepService:
         return {
             "counters": counters,
             "in_flight": in_flight,
+            "draining": self.draining,
+            "faults": (self.fault_plan.stats()
+                       if self.fault_plan is not None else None),
             "result_cache": {
                 # refresh() re-scans the directory, so entries written by
                 # sibling workers/processes since startup are counted.
@@ -577,6 +664,7 @@ class SweepService:
                 "hits": self.cache.hits,
                 "misses": self.cache.misses,
                 "adopted": self.cache.adopted,
+                "corrupt": self.cache.corrupt,
             },
             "expansion_cache": {
                 "size": len(self.session.expansion_cache),
@@ -632,6 +720,13 @@ class SweepRequestHandler(BaseHTTPRequestHandler):
             BaseHTTPRequestHandler.log_message(self, fmt, *args)
 
     def _send(self, obj, code: int = 200) -> None:
+        if getattr(self, "_drop_response", False) and code == 200:
+            # Injected `response/<path>:drop`: the handler did its work
+            # (state mutated server-side) but the ack is lost on the
+            # floor — the client sees a closed connection and must treat
+            # the operation as "maybe happened" (idempotency proof).
+            self.close_connection = True
+            return
         data = json.dumps(obj).encode()
         self.send_response(code)
         self.send_header("Content-Type", "application/json")
@@ -645,17 +740,66 @@ class SweepRequestHandler(BaseHTTPRequestHandler):
         except OSError:
             pass                         # socket already dead/half-written
 
+    def _drop(self) -> None:
+        # Close without writing any response: with keep-alive HTTP/1.1
+        # the server tears the socket down right after the handler
+        # returns, so the client gets RemoteDisconnected immediately —
+        # exactly what a SIGKILLed daemon looks like.
+        self.close_connection = True
+
     def _route(self, fn) -> None:
-        self.service.bump("requests")
+        svc = self.service
+        if svc.dead:
+            self._drop()
+            return
+        path = urlparse(self.path).path
+        # Marker for request-level fault rules: the logical-operation id a
+        # ResilientClient stamps on the request (so its *retries* of one
+        # op pass), else method+path (so a plain client's identical retry
+        # of a GET also passes — the path including the query IS the op).
+        marker = self.headers.get(OP_HEADER) or f"{self.command} {self.path}"
+        self._drop_response = False
+        fault = svc.check_fault("server" + path, marker)
+        if fault is not None:
+            if fault.action == "kill":
+                svc.kill()
+                self._drop()
+                return
+            if fault.action in ("drop", "corrupt"):
+                self._drop()
+                return
+            if fault.action == "error":
+                self._try_send(
+                    {"error": f"injected fault at server{path}"}, fault.code)
+                return
+            if fault.action == "delay":
+                time.sleep(fault.delay_s)
+        resp_fault = svc.check_fault("response" + path, marker)
+        if resp_fault is not None and resp_fault.action == "drop":
+            self._drop_response = True
+        if svc.draining and path in ("/cell", "/study", "/sweep"):
+            svc.bump("requests")
+            self._try_send({"error": "draining: not accepting new work"}, 503)
+            return
+        svc.bump("requests")
         try:
             fn()
         except (KeyError, ValueError) as e:
-            self.service.bump("errors")
+            svc.bump("errors")
             self._try_send({"error": f"{e.__class__.__name__}: {e}"}, 400)
         except ConnectionError:
             pass             # client went away mid-response (reset or pipe)
+        except FaultError as e:
+            # An injected fault fired mid-handling. A kill means the
+            # daemon is now dead: drop the connection like the real
+            # thing. Anything else reports as a server error.
+            if svc.dead:
+                self._drop()
+                return
+            svc.bump("errors")
+            self._try_send({"error": f"{e.__class__.__name__}: {e}"}, 500)
         except Exception as e:           # noqa: BLE001 — report, don't die
-            self.service.bump("errors")
+            svc.bump("errors")
             self._try_send({"error": f"{e.__class__.__name__}: {e}"}, 500)
 
     def do_GET(self):  # noqa: N802 — stdlib naming
@@ -722,6 +866,9 @@ class SweepRequestHandler(BaseHTTPRequestHandler):
                 self._send(svc.queue_complete(
                     body["job"], body["chunk"], body.get("worker", "anon"),
                     body.get("results", [])))
+            elif path == "/admin/drain":
+                self._send(svc.drain(
+                    wait_seconds=float(body.get("wait_seconds", 10.0))))
             else:
                 self._send({"error": f"unknown path {path}"}, 404)
 
@@ -817,6 +964,245 @@ class SweepClient:
     def queue_status(self, job: str) -> dict:
         return self._get("/queue/status?" + urlencode({"job": job}))
 
+    def drain(self, wait_seconds: float = 10.0) -> dict:
+        """Ask the daemon to drain (``POST /admin/drain``): stop leasing,
+        finish in-flight cells, persist queue state for its successor."""
+        return self._post("/admin/drain", {"wait_seconds": wait_seconds})
+
+
+@dataclasses.dataclass
+class _Endpoint:
+    """Per-URL circuit-breaker state inside a :class:`ResilientClient`."""
+
+    url: str
+    state: str = "closed"       # closed (usable) | open (cooling down)
+    failures: int = 0           # consecutive; reset on success
+    successes: int = 0
+    open_until: float = 0.0     # clock() time after which a probe may run
+    opens: int = 0
+
+
+class ResilientClient(SweepClient):
+    """A :class:`SweepClient` that survives daemons dying under it.
+
+    Wraps every request in: bounded retries of transient failures (5xx /
+    no response — 4xx re-raises immediately; every served endpoint is
+    idempotent, cells and studies are deterministic and completes are
+    idempotent by design, so re-sending is always safe), capped
+    exponential backoff with deterministic seeded jitter, and failover
+    across `urls` with a per-endpoint circuit breaker: `breaker_threshold`
+    consecutive failures open an endpoint, and after `breaker_cooldown`
+    (on the injectable `clock`) it is re-admitted only by a successful
+    ``/healthz`` probe that is not draining. The most recent good endpoint
+    is sticky (`last_url`), so a failover doesn't ping-pong.
+
+    Every request carries a process-unique op id in the ``X-Warpsim-Op``
+    header; servers running a :class:`~repro.core.warpsim.faults.FaultPlan`
+    key request faults on it, so an injected fault fires once per logical
+    operation and the retry goes through — the property the chaos tests
+    lean on. `sleep`, `clock`, `transport`, and `fault_plan` are
+    injectable so every retry/breaker path is testable without real
+    sockets or wall-clock time. Counters (attempts, retries, failovers,
+    breaker transitions, probes) surface via :meth:`client_stats` and as
+    the ``"client"`` section of :meth:`stats`.
+    """
+
+    def __init__(self, urls: Union[str, Sequence[str]],
+                 timeout: float = 600.0,
+                 attempt_timeout: Optional[float] = None,
+                 max_retries: int = 5, backoff_base: float = 0.05,
+                 backoff_cap: float = 2.0, breaker_threshold: int = 3,
+                 breaker_cooldown: float = 5.0, probe_timeout: float = 5.0,
+                 seed: int = 0, sleep=time.sleep, clock=time.monotonic,
+                 transport=None,
+                 fault_plan: Optional[FaultPlan] = None):
+        if isinstance(urls, str):
+            urls = [u.strip() for u in urls.split(",") if u.strip()]
+        urls = [u.rstrip("/") for u in urls]
+        if not urls:
+            raise ValueError("ResilientClient needs at least one URL")
+        super().__init__(urls[0], timeout=timeout)
+        self.endpoints = [_Endpoint(u) for u in urls]
+        self.attempt_timeout = attempt_timeout
+        self.max_retries = max_retries
+        self.backoff_base = backoff_base
+        self.backoff_cap = backoff_cap
+        self.breaker_threshold = breaker_threshold
+        self.breaker_cooldown = breaker_cooldown
+        self.probe_timeout = probe_timeout
+        self.fault_plan = (FaultPlan.from_env() if fault_plan is None
+                           else fault_plan)
+        self._sleep = sleep
+        self._clock = clock
+        self._transport = transport or _http_json
+        self._rng = random.Random(seed)
+        self._rlock = threading.Lock()
+        self._op_seq = 0
+        self._preferred = 0
+        self.last_url = urls[0]
+        self.counters: Dict[str, int] = {
+            "requests": 0, "attempts": 0, "retries": 0, "failovers": 0,
+            "breaker_opens": 0, "breaker_closes": 0, "probes": 0,
+            "exhausted": 0,
+        }
+
+    @property
+    def urls(self) -> List[str]:
+        return [e.url for e in self.endpoints]
+
+    # ----------------------------------------------------------- plumbing
+
+    def _get(self, path: str) -> dict:
+        return self._request(path)
+
+    def _post(self, path: str, body: dict) -> dict:
+        return self._request(path, body)
+
+    def _bump(self, counter: str, n: int = 1) -> None:
+        with self._rlock:
+            self.counters[counter] += n
+
+    def _backoff(self, n_failures: int) -> float:
+        with self._rlock:
+            jitter = 0.5 + 0.5 * self._rng.random()
+        return min(self.backoff_cap,
+                   self.backoff_base * (2 ** n_failures)) * jitter
+
+    def _select(self) -> Optional[_Endpoint]:
+        """Next endpoint to try: sticky-closed first, then any open one
+        whose cooldown elapsed *and* whose healthz probe passes."""
+        with self._rlock:
+            order = (self.endpoints[self._preferred:]
+                     + self.endpoints[:self._preferred])
+            now = self._clock()
+            closed = [e for e in order if e.state == "closed"]
+            probeable = [e for e in order
+                         if e.state == "open" and e.open_until <= now]
+        if closed:
+            return closed[0]
+        for ep in probeable:
+            if self._probe(ep):
+                return ep
+        return None
+
+    def _probe(self, ep: _Endpoint) -> bool:
+        self._bump("probes")
+        try:
+            health = self._transport(ep.url + "/healthz", None,
+                                     timeout=self.probe_timeout)
+        except ServiceError:
+            ok = False
+        else:
+            ok = bool(health.get("ok")) and not health.get("draining")
+        with self._rlock:
+            if ok:
+                ep.state = "closed"
+                ep.failures = 0
+                self.counters["breaker_closes"] += 1
+            else:
+                ep.open_until = self._clock() + self.breaker_cooldown
+        return ok
+
+    def _record_failure(self, ep: _Endpoint) -> None:
+        with self._rlock:
+            ep.failures += 1
+            if (ep.state == "closed"
+                    and ep.failures >= self.breaker_threshold):
+                ep.state = "open"
+                ep.open_until = self._clock() + self.breaker_cooldown
+                ep.opens += 1
+                self.counters["breaker_opens"] += 1
+            # Point the next attempt at a different endpoint right away —
+            # failover is immediate; the breaker only governs when a
+            # *failing* endpoint may be tried again.
+            if len(self.endpoints) > 1:
+                idx = self.endpoints.index(ep)
+                self._preferred = (idx + 1) % len(self.endpoints)
+
+    def _record_success(self, ep: _Endpoint) -> None:
+        with self._rlock:
+            ep.successes += 1
+            ep.failures = 0
+            if ep.state == "open":
+                ep.state = "closed"
+                self.counters["breaker_closes"] += 1
+            self._preferred = self.endpoints.index(ep)
+            self.last_url = ep.url
+
+    def _request(self, path: str, body: Optional[dict] = None) -> dict:
+        with self._rlock:
+            self._op_seq += 1
+            op = f"{path.split('?')[0]}#{self._op_seq}"
+            self.counters["requests"] += 1
+        last_err: Optional[ServiceError] = None
+        attempts = 0
+        prev_ep: Optional[_Endpoint] = None
+        for attempt in range(self.max_retries + 1):
+            if attempt:
+                self._bump("retries")
+                self._sleep(self._backoff(attempt - 1))
+            ep = self._select()
+            if ep is None:
+                # Every breaker open and no probe passed: burn the
+                # attempt and back off — a later attempt may find a
+                # cooldown elapsed and a daemon back up.
+                attempts += 1
+                continue
+            if prev_ep is not None and ep is not prev_ep:
+                self._bump("failovers")
+            prev_ep = ep
+            attempts += 1
+            self._bump("attempts")
+            fault = (self.fault_plan.check("client.request", marker=op)
+                     if self.fault_plan is not None else None)
+            try:
+                if fault is not None:
+                    raise ServiceUnavailable(
+                        f"injected client fault ({fault.action}) before "
+                        f"{ep.url}{path}", url=ep.url, path=path)
+                out = self._transport(
+                    ep.url + path, body,
+                    timeout=self.attempt_timeout or self.timeout,
+                    headers={OP_HEADER: op})
+            except ServiceError as e:
+                if not e.is_transient:
+                    e.attempts = attempts
+                    raise
+                last_err = e
+                self._record_failure(ep)
+                continue
+            self._record_success(ep)
+            return out
+        self._bump("exhausted")
+        err = ServiceUnavailable(
+            f"no endpoint served {path.split('?')[0]} after {attempts} "
+            f"attempts (tried {', '.join(self.urls)})"
+            + (f"; last error: {last_err}" if last_err else ""),
+            url=self.urls[0], path=path.split("?")[0], attempts=attempts)
+        raise err from last_err
+
+    # -------------------------------------------------------- observability
+
+    def client_stats(self) -> dict:
+        with self._rlock:
+            return {
+                **self.counters,
+                "endpoints": {
+                    e.url: {"state": e.state, "failures": e.failures,
+                            "successes": e.successes,
+                            "breaker_opens": e.opens}
+                    for e in self.endpoints
+                },
+            }
+
+    def stats(self) -> dict:
+        """Remote ``/stats`` of the current-best daemon, plus a
+        ``"client"`` section with this client's retry/failover/breaker
+        counters — one call shows both sides of the resilience story."""
+        remote = self._request("/stats")
+        remote["client"] = self.client_stats()
+        return remote
+
 
 # Dead URLs already warned about (once per (env var, url) per process):
 # every sweep of a figure run probing the same dead daemon must not emit
@@ -825,16 +1211,43 @@ _WARNED_DEAD_URLS: set = set()
 _WARNED_LOCK = threading.Lock()
 
 
+def _warn_dead(var: str, url: str, err: Exception) -> None:
+    with _WARNED_LOCK:
+        first = (var, url) not in _WARNED_DEAD_URLS
+        _WARNED_DEAD_URLS.add((var, url))
+    if first:
+        warnings.warn(
+            f"{var}={url} set but the service is unreachable "
+            f"({err.__class__.__name__}: {err}); falling back to "
+            "in-process sweeps", RuntimeWarning, stacklevel=3)
+
+
 def from_env(var: str = ENV_URL, probe: bool = True
              ) -> Optional[SweepClient]:
-    """Client for the service named by ``$WARPSIM_SERVICE_URL``, or None.
+    """Client for the service named by the environment, or None.
 
-    With `probe` (the default) a dead or unreachable service degrades to
-    None with a warning — figure generation then falls back to in-process
-    sweeps instead of failing, so the env var can stay exported even when
-    no daemon is up. The warning fires exactly once per process for a
-    given (env var, URL): repeat callers get the silent fallback.
+    ``$WARPSIM_SERVICE_URLS`` (comma-separated) wins and yields a
+    :class:`ResilientClient` over the whole fleet; else
+    ``$WARPSIM_SERVICE_URL`` yields a plain single-daemon
+    :class:`SweepClient`. With `probe` (the default) a dead or
+    unreachable service — for the fleet: *every* endpoint down, the
+    resilient probe fails over internally — degrades to None with a
+    warning; figure generation then falls back to in-process sweeps
+    instead of failing, so the env vars can stay exported even when no
+    daemon is up. The warning fires exactly once per process for a given
+    (env var, URL): repeat callers get the silent fallback.
     """
+    if var == ENV_URL:
+        fleet = os.environ.get(ENV_URLS)
+        if fleet and fleet.strip():
+            client = ResilientClient(fleet)
+            if probe:
+                try:
+                    client.healthz()
+                except Exception as e:  # noqa: BLE001 — all endpoints dead
+                    _warn_dead(ENV_URLS, fleet, e)
+                    return None
+            return client
     url = os.environ.get(var)
     if not url:
         return None
@@ -843,14 +1256,7 @@ def from_env(var: str = ENV_URL, probe: bool = True
         try:
             client.healthz()
         except Exception as e:  # noqa: BLE001 — any failure means "no service"
-            with _WARNED_LOCK:
-                first = (var, url) not in _WARNED_DEAD_URLS
-                _WARNED_DEAD_URLS.add((var, url))
-            if first:
-                warnings.warn(
-                    f"{var}={url} set but the service is unreachable "
-                    f"({e.__class__.__name__}: {e}); falling back to "
-                    "in-process sweeps", RuntimeWarning, stacklevel=2)
+            _warn_dead(var, url, e)
             return None
     return client
 

@@ -175,8 +175,9 @@ class ResultCache:
     per-shard ``mkdir``/``stat`` traffic on cold sweeps). Reads that fail
     for any reason (truncated write, garbage contents, missing or extra
     fields, schema drift) count as misses and the offending file is
-    deleted, so a corrupt cache degrades to a cold one instead of
-    poisoning sweeps.
+    quarantined under a ``.corrupt`` suffix (counted in
+    :attr:`corrupt`), so a corrupt cache degrades to a cold one instead
+    of poisoning sweeps — and the bad bytes survive for post-mortem.
 
     Existence is answered from a one-time directory listing (plus this
     instance's own writes): a cold 90-cell sweep costs one ``scandir``
@@ -199,6 +200,7 @@ class ResultCache:
         self.hits = 0
         self.misses = 0
         self.adopted = 0          # index misses rescued by a direct probe
+        self.corrupt = 0          # unreadable entries quarantined on read
         self._listing: Optional[set] = None
         self._legacy: Dict[str, str] = {}
         self._root_ok = False
@@ -288,15 +290,24 @@ class ResultCache:
                 self.misses += 1
             return None
         except Exception:
-            # Corrupt entry: drop it and treat as a miss.
+            # Corrupt entry (torn write, disk-full truncation, schema
+            # drift): treat as a miss and *quarantine* rather than delete
+            # — rename to `<name>.corrupt` so the evidence survives for
+            # post-mortem while the key re-simulates cleanly. The
+            # `.corrupt` suffix keeps it out of the index and the
+            # count()/refresh() tallies (both count `.json` names only).
             try:
-                os.remove(path)
+                os.replace(path, path + ".corrupt")
             except OSError:
-                pass
+                try:
+                    os.remove(path)
+                except OSError:
+                    pass
             with self._lock:
                 self._index().discard(name)
                 self._legacy.pop(name, None)
                 self.misses += 1
+                self.corrupt += 1
             return None
         with self._lock:
             self.hits += 1

@@ -30,15 +30,21 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import http.client
 import json
 import os
 import sys
 import threading
 import time
+import urllib.error
+import urllib.parse
 import urllib.request
 from typing import Dict, List, Mapping, Optional
 
 from repro.core.warpsim.config import MachineConfig
+from repro.core.warpsim.faults import (
+    FaultPlan, ServiceError, ServiceUnavailable,
+)
 from repro.core.warpsim.sweep import (
     Cell, cell_key, compute_cell, family_major_cells,
 )
@@ -262,19 +268,55 @@ def cell_from_wire(d: dict) -> Cell:
 
 
 def _http_json(url: str, body: Optional[dict] = None,
-               timeout: float = 60.0) -> dict:
+               timeout: float = 60.0,
+               headers: Optional[Mapping[str, str]] = None) -> dict:
+    """One JSON-over-HTTP round trip with *typed* failures.
+
+    Raw urllib exceptions never escape: a definite HTTP error status maps
+    to :class:`ServiceError` (carrying the code and any server-side
+    ``error`` detail), while connection refusal/reset, timeouts, protocol
+    violations and undecodable bodies map to :class:`ServiceUnavailable`
+    (no usable response — the retryable family).
+    """
     data = json.dumps(body).encode() if body is not None else None
-    req = urllib.request.Request(
-        url, data=data,
-        headers={"Content-Type": "application/json"} if data else {})
-    with urllib.request.urlopen(req, timeout=timeout) as resp:
-        return json.loads(resp.read().decode())
+    hdrs = {"Content-Type": "application/json"} if data else {}
+    if headers:
+        hdrs.update(headers)
+    req = urllib.request.Request(url, data=data, headers=hdrs)
+    parts = urllib.parse.urlsplit(url)
+    base = f"{parts.scheme}://{parts.netloc}"   # error context: endpoint,
+    path = parts.path or "/"                    # not the full request URL
+    try:
+        with urllib.request.urlopen(req, timeout=timeout) as resp:
+            payload = resp.read()
+    except urllib.error.HTTPError as e:
+        detail = ""
+        try:
+            blob = json.loads(e.read().decode())
+            if blob.get("error"):
+                detail = f": {blob['error']}"
+        except Exception:
+            pass
+        raise ServiceError(f"HTTP {e.code} from {url}{detail}",
+                           url=base, path=path, code=e.code) from e
+    except (urllib.error.URLError, http.client.HTTPException, OSError) as e:
+        raise ServiceUnavailable(
+            f"{type(e).__name__} talking to {url}: {e}",
+            url=base, path=path) from e
+    try:
+        return json.loads(payload.decode())
+    except ValueError as e:
+        raise ServiceUnavailable(
+            f"undecodable response from {url}: {e}",
+            url=base, path=path) from e
 
 
 def run_worker(base_url: str, job: str, worker_id: Optional[str] = None,
                engine: str = "auto", poll_seconds: float = 0.5,
                max_chunks: Optional[int] = None,
-               timeout: float = 300.0) -> int:
+               timeout: float = 300.0, max_retries: int = 3,
+               retry_backoff: float = 0.1, sleep=time.sleep,
+               fault_plan: Optional[FaultPlan] = None) -> int:
     """Drain chunks of `job` from a sweep service until it is done.
 
     Computes every leased cell locally (through the per-process
@@ -283,20 +325,59 @@ def run_worker(base_url: str, job: str, worker_id: Optional[str] = None,
     server to adopt into its cache. Returns the number of cells computed.
     `max_chunks` bounds the number of chunks processed (tests use it to
     simulate a worker dying mid-job).
+
+    Resilience: every HTTP call retries transient failures (connection
+    loss, 5xx, injected faults) up to `max_retries` times with capped
+    exponential backoff before giving up. A renew that still fails (or is
+    refused) abandons the chunk — the lease expires and a sibling worker
+    requeues it. A complete that still fails is *dropped silently*: the
+    chunk requeues via lease expiry and completes are idempotent, so the
+    recomputation is wasted effort, never wrong or double-adopted data.
+    Only a persistently unreachable ``/queue/lease`` raises (the daemon is
+    gone and there is nothing useful left to do). `sleep` is injectable so
+    tests drive retries and lease expiry with a fake clock; `fault_plan`
+    (default: ``$WARPSIM_FAULTS``) injects ``worker.lease`` /
+    ``worker.renew`` / ``worker.complete`` faults: ``drop`` simulates
+    connection loss, ``corrupt`` mangles the POST body so the server
+    rejects it (the retry must then adopt results exactly once).
     """
     base = base_url.rstrip("/")
     wid = worker_id or f"{os.uname().nodename}:{os.getpid()}"
+    plan = FaultPlan.from_env() if fault_plan is None else fault_plan
+
+    def call(kind: str, url: str, body: Optional[dict] = None) -> dict:
+        last: Optional[ServiceError] = None
+        for attempt in range(max_retries + 1):
+            send = body
+            fault = plan.check(f"worker.{kind}") if plan is not None else None
+            try:
+                if fault is not None:
+                    if fault.action == "corrupt" and body is not None:
+                        send = dict(body, results="!injected-corruption!")
+                    else:
+                        raise ServiceUnavailable(
+                            f"injected worker fault ({fault.action}) at "
+                            f"worker.{kind}", url=url, path=f"/{kind}")
+                return _http_json(url, send, timeout=timeout)
+            except ServiceError as e:
+                if not e.is_transient:
+                    raise
+                last = e
+                if attempt < max_retries:
+                    sleep(min(2.0, retry_backoff * (2 ** attempt)))
+        last.attempts = max_retries + 1
+        raise last
+
     computed = 0
     chunks_done = 0
     while True:
         if max_chunks is not None and chunks_done >= max_chunks:
             return computed
-        got = _http_json(
-            f"{base}/queue/lease?job={job}&worker={wid}", timeout=timeout)
+        got = call("lease", f"{base}/queue/lease?job={job}&worker={wid}")
         if got.get("chunk") is None:
             if got.get("done"):
                 return computed
-            time.sleep(poll_seconds)    # live leases elsewhere: wait them out
+            sleep(poll_seconds)     # live leases elsewhere: wait them out
             continue
         results = []
         abandoned = False
@@ -313,17 +394,26 @@ def run_worker(base_url: str, job: str, worker_id: Optional[str] = None,
             if i + 1 < len(cells):
                 # Heartbeat between cells so a slow chunk keeps its lease
                 # (only a single cell slower than the lease can forfeit).
-                renewed = _http_json(
-                    f"{base}/queue/renew?job={job}"
-                    f"&chunk={got['chunk']}&worker={wid}", timeout=timeout)
+                try:
+                    renewed = call(
+                        "renew", f"{base}/queue/renew?job={job}"
+                        f"&chunk={got['chunk']}&worker={wid}")
+                except ServiceError:
+                    abandoned = True    # daemon unreachable: let it requeue
+                    break
                 if not renewed.get("ok"):
                     abandoned = True    # lease lost: someone else owns it
                     break
         if not abandoned:
-            _http_json(f"{base}/queue/complete", {
-                "job": job, "chunk": got["chunk"], "worker": wid,
-                "results": results,
-            }, timeout=timeout)
+            try:
+                call("complete", f"{base}/queue/complete", {
+                    "job": job, "chunk": got["chunk"], "worker": wid,
+                    "results": results,
+                })
+            except ServiceError:
+                # Lost ack: the lease expires, the chunk requeues, and the
+                # eventual duplicate complete is idempotent by design.
+                pass
         chunks_done += 1
 
 

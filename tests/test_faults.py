@@ -1,0 +1,594 @@
+"""Fault-injection harness + resilient client tests: FaultPlan schedule
+semantics, typed HTTP errors, retry/failover/circuit-breaker behavior of
+ResilientClient (scripted transport, no sockets), server/worker fault
+points against live daemons, graceful drain, environment-driven fleet
+selection, and the two-daemon chaos end-to-end (kill one mid-study, the
+client never notices and the records stay bit-identical)."""
+
+import socket
+import threading
+import urllib.request
+import warnings
+
+import pytest
+
+from repro.core.warpsim import api, machines
+from repro.core.warpsim import service as service_mod
+from repro.core.warpsim.api import ServiceBackend, Session, Study
+from repro.core.warpsim.faults import (
+    FaultError, FaultPlan, FaultRule, ServiceError, ServiceUnavailable,
+)
+from repro.core.warpsim.service import (
+    OP_HEADER, ResilientClient, SweepClient, SweepService, serve,
+)
+from repro.core.warpsim.work_queue import _http_json, run_worker
+
+SMALL = dict(benches=("BFS", "DYN"), n_threads=128)
+
+
+def _study(**kw):
+    base = dict(machines={"ws8": machines.baseline(8),
+                          "SW+": machines.sw_plus()}, **SMALL)
+    base.update(kw)
+    return Study(**base)
+
+
+def _noop_sleep(_seconds):
+    pass
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def _dead_url():
+    """A URL that is guaranteed to refuse connections right now."""
+    s = socket.socket()
+    s.bind(("127.0.0.1", 0))
+    port = s.getsockname()[1]
+    s.close()
+    return f"http://127.0.0.1:{port}"
+
+
+class _daemon:
+    """Context manager: serve `svc` on an ephemeral port, yield its URL."""
+
+    def __init__(self, svc):
+        self.svc = svc
+
+    def __enter__(self):
+        self.httpd = serve(self.svc)
+        threading.Thread(target=self.httpd.serve_forever,
+                         daemon=True).start()
+        return "http://%s:%d" % self.httpd.server_address[:2]
+
+    def __exit__(self, *exc):
+        self.httpd.shutdown()
+        self.httpd.server_close()
+
+
+class ScriptedTransport:
+    """Fake `_http_json`: per-base-URL scripted responses/exceptions.
+
+    `script` maps a base URL to a list of behaviors consumed in order
+    (the last repeats forever); a behavior is a dict (returned) or an
+    exception (raised). Records every (url, op-header) it sees."""
+
+    def __init__(self, script):
+        self.script = {u.rstrip("/"): list(seq) for u, seq in script.items()}
+        self.calls = []
+
+    def __call__(self, url, body=None, timeout=60.0, headers=None):
+        self.calls.append((url, (headers or {}).get(OP_HEADER)))
+        base = url.rsplit("/", 1)[0]
+        for known, seq in self.script.items():
+            if url.startswith(known):
+                behavior = seq.pop(0) if len(seq) > 1 else seq[0]
+                if isinstance(behavior, Exception):
+                    raise behavior
+                return behavior
+        raise ServiceUnavailable(f"unscripted url {url}", url=base,
+                                 path=url[len(base):])
+
+
+def _unavailable(url):
+    return ServiceUnavailable("connection refused (scripted)", url=url,
+                              path="/x")
+
+
+# ----------------------------------------------------------- FaultPlan
+
+def test_fault_plan_spec_roundtrip_and_fields():
+    plan = FaultPlan.from_spec(
+        "server/study:error=418,times=2,after=1;"
+        "service.cell:kill,after=5;"
+        "worker.complete:corrupt,p=0.5;"
+        "client.request:delay=0.25,times=inf;"
+        "seed=7")
+    assert plan.seed == 7
+    r0, r1, r2, r3 = plan.rules
+    assert (r0.point, r0.action, r0.code, r0.times, r0.after) == \
+        ("server/study", "error", 418, 2, 1)
+    assert (r1.point, r1.action, r1.after) == ("service.cell", "kill", 5)
+    assert (r2.point, r2.action, r2.p) == ("worker.complete", "corrupt", 0.5)
+    assert (r3.point, r3.action, r3.delay_s, r3.times) == \
+        ("client.request", "delay", 0.25, -1)
+
+
+@pytest.mark.parametrize("bad", [
+    "study",                      # no action
+    "server/study:",              # empty action
+    "server/study:explode",       # unknown action
+    "server/study:drop=1",        # drop takes no value
+    "server/study:drop,volume=11",  # unknown option
+])
+def test_fault_plan_bad_specs_raise(bad):
+    with pytest.raises(ValueError):
+        FaultPlan.from_spec(bad)
+
+
+def test_fault_plan_marker_keyed_retries_pass():
+    plan = FaultPlan.from_spec("server/study:error,times=2")
+    f1 = plan.check("server/study", marker="op#1")
+    assert f1 is not None and f1.code == 503
+    # The retry of the SAME logical operation sails through ...
+    assert plan.check("server/study", marker="op#1") is None
+    # ... while new operations keep consuming the schedule.
+    assert plan.check("server/study", marker="op#2") is not None
+    assert plan.check("server/study", marker="op#3") is None  # times spent
+    assert plan.fired["server/study"] == 2
+    assert plan.stats()["fired"] == {"server/study": 2}
+
+
+def test_fault_plan_after_and_auto_markers():
+    plan = FaultPlan(rules=[FaultRule(point="service.cell", action="kill",
+                                      after=2, times=1)])
+    # marker=None mints a fresh auto-marker per check: pure sequencing.
+    assert plan.check("service.cell") is None
+    assert plan.check("service.cell") is None
+    assert plan.check("service.cell").action == "kill"
+    assert plan.check("service.cell") is None   # times=1 spent
+    assert plan.check("worker.lease") is None   # unmatched point
+
+
+def test_fault_plan_point_patterns_fnmatch():
+    plan = FaultPlan.from_spec("server/queue/*:drop,times=inf")
+    assert plan.check("server/queue/lease", marker="a") is not None
+    assert plan.check("server/queue/complete", marker="b") is not None
+    assert plan.check("server/study", marker="c") is None
+
+
+def test_fault_plan_probabilistic_replays_identically():
+    decisions = []
+    for _ in range(2):
+        plan = FaultPlan.from_spec("client.request:drop,p=0.5,times=inf",
+                                   seed=42)
+        decisions.append([plan.check("client.request", marker=f"op#{i}")
+                          is not None for i in range(32)])
+    assert decisions[0] == decisions[1]
+    assert any(decisions[0]) and not all(decisions[0])
+
+
+def test_fault_plan_from_env(monkeypatch):
+    monkeypatch.delenv("WARPSIM_FAULTS", raising=False)
+    assert FaultPlan.from_env() is None
+    monkeypatch.setenv("WARPSIM_FAULTS", "   ")
+    assert FaultPlan.from_env() is None
+    monkeypatch.setenv("WARPSIM_FAULTS", "server/study:error=500;seed=3")
+    plan = FaultPlan.from_env()
+    assert plan.seed == 3 and plan.rules[0].code == 500
+
+
+# ------------------------------------------------- typed HTTP failures
+
+def test_http_json_dead_endpoint_is_service_unavailable():
+    url = _dead_url()
+    with pytest.raises(ServiceUnavailable) as ei:
+        _http_json(url + "/healthz")
+    assert ei.value.url == url
+    assert ei.value.path == "/healthz"
+    assert ei.value.code is None and ei.value.is_transient
+
+
+def test_http_json_http_error_is_typed_and_not_transient(tmp_path):
+    svc = SweepService(str(tmp_path), persist_traces=False)
+    with _daemon(svc) as url:
+        with pytest.raises(ServiceError) as ei:
+            _http_json(url + "/nope")
+        assert ei.value.code == 404
+        assert not ei.value.is_transient
+        assert not isinstance(ei.value, ServiceUnavailable)
+
+
+# ------------------------------------------------------ ResilientClient
+
+def test_resilient_client_fails_over_and_sticks():
+    a, b = "http://a:1", "http://b:2"
+    t = ScriptedTransport({a: [_unavailable(a)], b: [{"pong": 1}]})
+    client = ResilientClient([a, b], sleep=_noop_sleep, transport=t)
+    assert client._get("/ping") == {"pong": 1}
+    stats = client.client_stats()
+    assert stats["retries"] == 1 and stats["failovers"] == 1
+    assert stats["attempts"] == 2
+    assert client.last_url == b
+    # One logical op: both attempts carried the same op id.
+    ops = {op for _, op in t.calls}
+    assert len(ops) == 1 and ops.pop().startswith("/ping#")
+    # The good endpoint is now sticky: next request goes straight to b.
+    assert client._get("/again") == {"pong": 1}
+    assert t.calls[-1][0] == b + "/again"
+
+
+def test_resilient_client_breaker_opens_and_probe_readmits():
+    a = "http://a:1"
+    clock = FakeClock()
+    t = ScriptedTransport({a: [_unavailable(a), _unavailable(a),
+                               {"ok": True}, {"pong": 1}]})
+    client = ResilientClient([a], max_retries=1, breaker_threshold=2,
+                             breaker_cooldown=5.0, sleep=_noop_sleep,
+                             clock=clock, transport=t)
+    with pytest.raises(ServiceUnavailable) as ei:
+        client._get("/ping")
+    assert ei.value.attempts == 2
+    assert client.endpoints[0].state == "open"
+    assert client.client_stats()["breaker_opens"] == 1
+    # Cooldown not elapsed: the transport is never touched.
+    n_calls = len(t.calls)
+    with pytest.raises(ServiceUnavailable):
+        client._get("/ping")
+    assert len(t.calls) == n_calls
+    assert client.client_stats()["exhausted"] == 2
+    # Cooldown elapses -> healthz probe passes -> endpoint re-admitted.
+    clock.t = 6.0
+    assert client._get("/ping") == {"pong": 1}
+    assert t.calls[-2][0] == a + "/healthz"
+    stats = client.client_stats()
+    assert stats["probes"] == 1 and stats["breaker_closes"] == 1
+    assert client.endpoints[0].state == "closed"
+
+
+def test_resilient_client_probe_refuses_draining_daemon():
+    a = "http://a:1"
+    clock = FakeClock()
+    t = ScriptedTransport({a: [_unavailable(a),
+                               {"ok": True, "draining": True}]})
+    client = ResilientClient([a], max_retries=0, breaker_threshold=1,
+                             breaker_cooldown=1.0, sleep=_noop_sleep,
+                             clock=clock, transport=t)
+    with pytest.raises(ServiceUnavailable):
+        client._get("/ping")
+    clock.t = 2.0
+    with pytest.raises(ServiceUnavailable):
+        client._get("/ping")            # probe ran, saw draining, refused
+    assert t.calls[-1][0] == a + "/healthz"
+    assert client.endpoints[0].state == "open"
+    assert client.client_stats()["breaker_closes"] == 0
+
+
+def test_resilient_client_non_transient_raises_immediately():
+    a, b = "http://a:1", "http://b:2"
+    t = ScriptedTransport({
+        a: [ServiceError("HTTP 404", url=a, path="/x", code=404)],
+        b: [{"never": "reached"}],
+    })
+    client = ResilientClient([a, b], sleep=_noop_sleep, transport=t)
+    with pytest.raises(ServiceError) as ei:
+        client._get("/x")
+    assert ei.value.code == 404 and ei.value.attempts == 1
+    assert not isinstance(ei.value, ServiceUnavailable)
+    assert len(t.calls) == 1            # no retry, no failover
+    assert client.client_stats()["retries"] == 0
+
+
+def test_resilient_client_exhaustion_carries_context():
+    a, b = "http://a:1", "http://b:2"
+    t = ScriptedTransport({a: [_unavailable(a)], b: [_unavailable(b)]})
+    client = ResilientClient([a, b], max_retries=3, breaker_threshold=99,
+                             sleep=_noop_sleep, transport=t)
+    with pytest.raises(ServiceUnavailable) as ei:
+        client._get("/stats")
+    err = ei.value
+    assert err.attempts == 4 and err.path == "/stats"
+    assert a in str(err) and b in str(err)
+    assert isinstance(err.__cause__, ServiceUnavailable)
+    assert client.client_stats()["exhausted"] == 1
+
+
+def test_resilient_client_url_string_splits():
+    client = ResilientClient(" http://a:1 , http://b:2/ ",
+                             transport=ScriptedTransport({}))
+    assert client.urls == ["http://a:1", "http://b:2"]
+    assert client.base_url == "http://a:1"
+    with pytest.raises(ValueError):
+        ResilientClient(" , ")
+
+
+def test_resilient_client_injected_client_faults_retry():
+    a = "http://a:1"
+    t = ScriptedTransport({a: [{"pong": 1}]})
+    plan = FaultPlan.from_spec("client.request:drop,times=1")
+    client = ResilientClient([a], sleep=_noop_sleep, transport=t,
+                             fault_plan=plan)
+    assert client._get("/ping") == {"pong": 1}
+    # First attempt was injected away before reaching the transport; the
+    # retry (same op marker) passed the plan and went through.
+    assert client.client_stats()["retries"] == 1
+    assert len(t.calls) == 1
+
+
+# ----------------------------------------- facade: typed errors escape
+
+def test_session_run_raises_typed_error_not_urllib(tmp_path):
+    url = _dead_url()
+    session = Session(backend=ServiceBackend(url=url, timeout=2.0))
+    with pytest.raises(api.ServiceUnavailable) as ei:
+        session.run(_study(benches=("BFS",)))
+    assert ei.value.url == url and ei.value.path == "/study"
+
+
+def test_session_run_typed_error_through_resilient_client():
+    dead1, dead2 = _dead_url(), _dead_url()
+    client = ResilientClient([dead1, dead2], max_retries=2,
+                             breaker_threshold=99, sleep=_noop_sleep)
+    session = Session(backend=ServiceBackend(client=client))
+    with pytest.raises(api.ServiceUnavailable) as ei:
+        session.run(_study(benches=("BFS",)))
+    assert ei.value.attempts == 3
+
+
+def test_facade_reexports_are_the_real_types():
+    from repro.core.warpsim import faults
+    assert api.ServiceError is faults.ServiceError
+    assert api.ServiceUnavailable is faults.ServiceUnavailable
+    assert api.FaultPlan is faults.FaultPlan
+
+
+# ----------------------------------------------- server fault points
+
+def test_server_error_fault_fires_once_per_operation(tmp_path):
+    plan = FaultPlan.from_spec("server/healthz:error=503,times=1")
+    svc = SweepService(str(tmp_path), persist_traces=False, fault_plan=plan)
+    with _daemon(svc) as url:
+        req = urllib.request.Request(url + "/healthz")
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            urllib.request.urlopen(req, timeout=5)
+        assert ei.value.code == 503
+        # A *retry* of the same logical op (same marker) goes through.
+        with urllib.request.urlopen(req, timeout=5) as resp:
+            assert resp.status == 200
+    assert svc.counters["faults_injected"] == 1
+
+
+def test_server_fault_uses_op_header_as_marker(tmp_path):
+    plan = FaultPlan.from_spec("server/healthz:error=503,times=1")
+    svc = SweepService(str(tmp_path), persist_traces=False, fault_plan=plan)
+    with _daemon(svc) as url:
+        # A ResilientClient retry re-sends the SAME op id: the first
+        # attempt eats the injected 503, the retry passes -> the caller
+        # never sees the fault.
+        client = ResilientClient([url], sleep=_noop_sleep)
+        health = client.healthz()
+        assert health["ok"]
+        assert client.client_stats()["retries"] == 1
+    assert svc.counters["faults_injected"] == 1
+
+
+def test_server_drop_fault_is_lost_ack(tmp_path):
+    # response/<path> drop: the server handles the request (state
+    # mutates) but the client never hears back.
+    plan = FaultPlan.from_spec("response/healthz:drop,times=1")
+    svc = SweepService(str(tmp_path), persist_traces=False, fault_plan=plan)
+    with _daemon(svc) as url:
+        client = ResilientClient([url], sleep=_noop_sleep)
+        assert client.healthz()["ok"]
+        assert client.client_stats()["retries"] == 1
+    assert svc.counters["requests"] >= 2
+
+
+def test_service_cell_kill_fault_plays_dead(tmp_path):
+    plan = FaultPlan.from_spec("service.cell:kill,after=1")
+    svc = SweepService(str(tmp_path), persist_traces=False, fault_plan=plan)
+    with _daemon(svc) as url:
+        client = SweepClient(url, timeout=10.0)
+        with pytest.raises(ServiceUnavailable):
+            client.study(_study())      # 4 cells; the kill fires on #2
+        assert svc.dead
+        # A dead daemon answers nothing, not even health checks.
+        with pytest.raises(ServiceUnavailable):
+            client.healthz()
+    # The kill fired after the Nth cell: everything simulated up to the
+    # fault is already in the cache (failover re-simulates nothing).
+    assert svc.counters["simulated"] >= 1
+    assert svc.cache.count() == svc.counters["simulated"]
+
+
+# --------------------------------------------------- worker resilience
+
+def test_worker_survives_corrupt_complete(tmp_path):
+    clock = FakeClock()
+    svc = SweepService(str(tmp_path / "cache"), persist_traces=False,
+                       clock=clock)
+    spec = _study(benches=("BFS",)).to_spec()
+    cells = len(spec.cells())
+    with _daemon(svc) as url:
+        job = svc.enqueue(spec, chunk_size=2, lease_seconds=60.0)
+        plan = FaultPlan.from_spec("worker.complete:corrupt,times=1")
+        n = run_worker(url, job["job"], worker_id="w1", poll_seconds=0.01,
+                       sleep=_noop_sleep, fault_plan=plan)
+    assert n == cells
+    status = svc.queue_status(job["job"])
+    assert status["completed"] == status["chunks"]
+    # The corrupted POST was rejected server-side and retried cleanly:
+    # every cell adopted exactly once, none simulated by the daemon.
+    assert svc.counters["queue_cells_adopted"] == cells
+    assert svc.counters["errors"] >= 1
+    assert svc.counters["simulated"] == 0
+    assert plan.fired["worker.complete"] == 1
+
+
+def test_worker_survives_transient_lease_failures(tmp_path):
+    clock = FakeClock()
+    svc = SweepService(
+        str(tmp_path / "cache"), persist_traces=False, clock=clock,
+        fault_plan=FaultPlan.from_spec("server/queue/lease:error=503,times=1"))
+    spec = _study(benches=("BFS",)).to_spec()
+    cells = len(spec.cells())
+    with _daemon(svc) as url:
+        job = svc.enqueue(spec, chunk_size=2, lease_seconds=60.0)
+        # Client-side drop on top of the server-side 503: both transient,
+        # both retried inside the worker loop.
+        plan = FaultPlan.from_spec("worker.lease:drop,times=1")
+        n = run_worker(url, job["job"], worker_id="w1", poll_seconds=0.01,
+                       sleep=_noop_sleep, fault_plan=plan)
+    assert n == cells
+    status = svc.queue_status(job["job"])
+    assert status["completed"] == status["chunks"]
+    assert svc.counters["queue_cells_adopted"] == cells
+    assert svc.counters["faults_injected"] == 1
+
+
+def test_worker_dies_loudly_on_non_transient_error(tmp_path):
+    svc = SweepService(str(tmp_path / "cache"), persist_traces=False)
+    with _daemon(svc) as url:
+        with pytest.raises(ServiceError) as ei:
+            run_worker(url, "job-nonexistent-1", poll_seconds=0.01,
+                       sleep=_noop_sleep)
+        assert ei.value.code == 400
+        assert not isinstance(ei.value, ServiceUnavailable)
+
+
+# --------------------------------------------------------------- drain
+
+def test_drain_refuses_new_work_and_persists_queue(tmp_path):
+    root = str(tmp_path / "cache")
+    clock = FakeClock()
+    svc = SweepService(root, persist_traces=False, clock=clock)
+    spec = _study(benches=("BFS",)).to_spec()
+    with _daemon(svc) as url:
+        client = SweepClient(url, timeout=10.0)
+        job = client.enqueue(spec, chunk_size=1, lease_seconds=60.0)
+        out = client.drain(wait_seconds=0.1)
+        assert out["ok"] and out["draining"]
+        assert out["jobs_persisted"] >= 1
+        assert client.healthz()["draining"]
+        assert client.stats()["draining"]
+        # Leases stop: workers see "no chunk" + the draining flag.
+        lease = svc.queue_lease(job["job"], "w1")
+        assert lease["chunk"] is None and lease["draining"]
+        # New cell/study/sweep work is refused with a 503 ...
+        with pytest.raises(ServiceError) as ei:
+            client.cell("BFS", machine="ws8")
+        assert ei.value.code == 503
+    # ... and a successor daemon over the same root adopts the job.
+    heir = SweepService(root, persist_traces=False)
+    status = heir.queue_status(job["job"])
+    assert status["chunks"] == job["chunks"]
+
+
+# ------------------------------------------------------ chaos end-to-end
+
+def test_chaos_two_daemons_kill_one_mid_study(tmp_path):
+    """The tentpole proof: two daemons over one cache root; daemon A is
+    killed mid-study by an injected fault and daemon B flaps its first
+    response; the client retries + fails over and the StudyResult is
+    bit-identical to in-process — with zero duplicate simulations."""
+    study = _study(seeds=(0, 1))        # 2 machines x 2 benches x 2 seeds
+    cells = len(study.cells())
+    reference = Session().run(study)
+
+    root = str(tmp_path / "shared-cache")
+    svc_a = SweepService(root, persist_traces=False, fault_plan=(
+        FaultPlan.from_spec(f"service.cell:kill,after={cells - 3}")))
+    svc_b = SweepService(root, persist_traces=False, fault_plan=(
+        FaultPlan.from_spec("server/study:error=503,times=1")))
+    with _daemon(svc_a) as url_a, _daemon(svc_b) as url_b:
+        client = ResilientClient([url_a, url_b], max_retries=8,
+                                 breaker_threshold=99, seed=0,
+                                 sleep=_noop_sleep, timeout=60.0)
+        session = Session(backend=ServiceBackend(client=client))
+        result = session.run(study)
+        stats = client.stats()
+
+    assert result.records == reference.records
+    assert svc_a.dead                   # the kill really fired
+    # No cell was ever simulated twice: A finished its in-flight work
+    # before playing dead, B adopted the shared cache for the rest.
+    assert svc_a.counters["simulated"] + svc_b.counters["simulated"] == cells
+    assert svc_a.counters["faults_injected"] >= 1
+    assert svc_b.counters["faults_injected"] == 1
+    cstats = stats["client"]
+    assert cstats["retries"] >= 2 and cstats["failovers"] >= 1
+    assert stats["counters"]["faults_injected"] >= 1
+    assert client.last_url == url_b
+
+
+def test_chaos_queue_backend_worker_and_daemon_faults(tmp_path, monkeypatch):
+    """Queue path under fire: a worker complete gets corrupted (via the
+    ``WARPSIM_FAULTS`` env path through ``run_worker``) and the server
+    5xxes a lease — the study still lands bit-identical."""
+    study = _study(benches=("BFS",))
+    reference = Session().run(study)
+    svc = SweepService(
+        str(tmp_path / "cache"), persist_traces=False,
+        fault_plan=FaultPlan.from_spec("server/queue/lease:error=503,times=1"))
+    monkeypatch.setenv("WARPSIM_FAULTS", "worker.complete:corrupt,times=1")
+    with _daemon(svc) as url:
+        client = ResilientClient([url], sleep=_noop_sleep, timeout=60.0)
+        backend = api.QueueBackend(client=client, chunk_size=2,
+                                   poll_seconds=0.01)
+        result = Session(backend=backend).run(study)
+    assert result.records == reference.records
+    assert svc.counters["queue_cells_adopted"] == len(study.cells())
+    assert svc.counters["errors"] >= 1  # the corrupted POST was rejected
+
+
+# ------------------------------------------------- environment plumbing
+
+def test_from_env_urls_builds_resilient_client(tmp_path, monkeypatch):
+    svc = SweepService(str(tmp_path), persist_traces=False)
+    with _daemon(svc) as url:
+        monkeypatch.setenv(service_mod.ENV_URLS, f"{_dead_url()},{url}")
+        monkeypatch.delenv(service_mod.ENV_URL, raising=False)
+        client = service_mod.from_env()
+        assert isinstance(client, ResilientClient)
+        assert client.healthz()["ok"]   # failed over internally
+        session = Session.from_env()
+        assert isinstance(session.backend, ServiceBackend)
+
+
+def test_from_env_urls_all_dead_warns_and_degrades(monkeypatch):
+    fleet = f"{_dead_url()},{_dead_url()}"
+    monkeypatch.setenv(service_mod.ENV_URLS, fleet)
+    monkeypatch.delenv(service_mod.ENV_URL, raising=False)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        assert service_mod.from_env() is None
+        session = Session.from_env()
+    # Graceful degradation: an in-process session, not an exception.
+    assert isinstance(session.backend, api.InProcessBackend)
+    assert any(service_mod.ENV_URLS in str(w.message) for w in caught)
+
+
+def test_forced_backend_with_dead_fleet_raises(monkeypatch):
+    monkeypatch.setenv(api.ENV_BACKEND, "service")
+    monkeypatch.setenv(service_mod.ENV_URLS, _dead_url())
+    monkeypatch.delenv(service_mod.ENV_URL, raising=False)
+    with pytest.raises(RuntimeError) as ei:
+        Session.from_env()
+    assert service_mod.ENV_URLS in str(ei.value)
+
+
+def test_forced_backend_with_partially_dead_fleet_works(tmp_path,
+                                                        monkeypatch):
+    svc = SweepService(str(tmp_path), persist_traces=False)
+    with _daemon(svc) as url:
+        monkeypatch.setenv(api.ENV_BACKEND, "service")
+        monkeypatch.setenv(service_mod.ENV_URLS, f"{_dead_url()},{url}")
+        monkeypatch.delenv(service_mod.ENV_URL, raising=False)
+        session = Session.from_env()
+        assert isinstance(session.backend, ServiceBackend)
+        assert isinstance(session.backend.client(), ResilientClient)

@@ -427,35 +427,56 @@ def test_work_queue_stale_completion_counted():
     assert q.done
 
 
-def test_queue_end_to_end_with_worker_death(live):
+def test_queue_end_to_end_with_worker_death(tmp_path):
     """Two workers drain one job over HTTP; one leases a chunk and dies.
 
     The lease expires, the surviving worker picks the chunk up, and the
     job finishes with every cell adopted into the service cache — a sweep
     afterwards is 100% cache hits.
+
+    Fully deterministic: the daemon's WorkQueue runs on a FakeClock and
+    the surviving worker's injected `sleep` advances it past the dead
+    worker's lease — expiry/requeue is exercised without wall-clock
+    timing (the old version leased for 0.3 real seconds and could flake
+    either way on a loaded machine).
     """
-    svc, url = live
-    spec = _spec()
-    client = SweepClient(url)
-    job = client.enqueue(spec, chunk_size=1, lease_seconds=0.3)
-    assert job["chunks"] == 4 and job["cells"] == len(spec.cells())
+    clock = FakeClock()
+    svc = SweepService(str(tmp_path / "cache"), persist_traces=False,
+                       clock=clock)
+    httpd = serve(svc)
+    threading.Thread(target=httpd.serve_forever, daemon=True).start()
+    try:
+        url = "http://%s:%d" % httpd.server_address[:2]
+        spec = _spec()
+        client = SweepClient(url)
+        job = client.enqueue(spec, chunk_size=1, lease_seconds=10.0)
+        assert job["chunks"] == 4 and job["cells"] == len(spec.cells())
 
-    # Worker that leases one chunk and never completes it.
-    with urllib.request.urlopen(
-            url + f"/queue/lease?job={job['job']}&worker=w-dead",
-            timeout=10) as resp:
-        dead_lease = json.loads(resp.read())
-    assert dead_lease["chunk"] is not None
+        # Worker that leases one chunk and never completes it.
+        with urllib.request.urlopen(
+                url + f"/queue/lease?job={job['job']}&worker=w-dead",
+                timeout=10) as resp:
+            dead_lease = json.loads(resp.read())
+        assert dead_lease["chunk"] is not None
 
-    n = run_worker(url, job["job"], worker_id="w-live", poll_seconds=0.05)
-    assert n == len(spec.cells())       # the survivor computed everything
-    status = client.queue_status(job["job"])
-    assert status["completed"] == 4 and status["leases_expired"] >= 1
+        def tick(seconds):
+            # The survivor's poll sleep IS the passage of time: one poll
+            # jumps the daemon's clock past the dead worker's lease.
+            clock.t += max(seconds, 11.0)
 
-    _res, stats = svc.sweep(spec)
-    assert stats["simulated"] == 0
-    assert stats["cache_hits"] == len(spec.cells())
-    assert svc.counters["queue_cells_adopted"] == len(spec.cells())
+        n = run_worker(url, job["job"], worker_id="w-live",
+                       poll_seconds=0.05, sleep=tick)
+        assert n == len(spec.cells())   # the survivor computed everything
+        status = client.queue_status(job["job"])
+        assert status["completed"] == 4 and status["leases_expired"] >= 1
+
+        _res, stats = svc.sweep(spec)
+        assert stats["simulated"] == 0
+        assert stats["cache_hits"] == len(spec.cells())
+        assert svc.counters["queue_cells_adopted"] == len(spec.cells())
+    finally:
+        httpd.shutdown()
+        httpd.server_close()
 
 
 def test_work_queue_dict_roundtrip():

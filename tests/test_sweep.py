@@ -141,6 +141,40 @@ def test_cache_corrupt_file_recovers(tmp_path):
     assert again.misses == 0
 
 
+def test_cache_corrupt_entry_quarantined_not_deleted(tmp_path):
+    """Read-path hardening regression: a truncated/corrupt cell JSON is a
+    miss that *quarantines* the file (``.corrupt`` suffix, counted in
+    ``cache.corrupt``) instead of raising or silently deleting the
+    evidence, and the key re-simulates/re-writes cleanly. Before the fix
+    the file was removed outright (no counter, no post-mortem trail)."""
+    cache = ResultCache(str(tmp_path))
+    cfg = machines.baseline(8)
+    res = sweep_mod.compute_cell("DYN", cfg, n_threads=64, seed=0)
+    key = cell_key("DYN", cfg, 64, 0)
+    cache.put(key, res)
+    path = os.path.join(str(tmp_path), key + ".json")
+
+    with open(path, "w") as f:
+        f.write('{"key": "x", "result')        # torn write / disk-full
+
+    assert cache.get(key) is None               # miss, never an exception
+    assert cache.corrupt == 1 and cache.misses == 1
+    assert os.path.exists(path + ".corrupt")    # quarantined for post-mortem
+    assert not os.path.exists(path)
+    # The quarantine file never pollutes entry counts or the index ...
+    assert cache.count() == 0 and cache.refresh() == 0
+    assert not cache.contains(key)
+    # ... and the key re-simulates and serves again.
+    cache.put(key, res)
+    got = cache.get(key)
+    assert dataclasses.asdict(got) == dataclasses.asdict(res)
+    assert cache.refresh() == 1
+    # Surfaced in the session-level cache stats too.
+    from repro.core.warpsim import api
+    session = api.Session(result_cache=cache)
+    assert session.cache_stats()["result_cache"]["corrupt"] == 1
+
+
 def test_cache_reads_legacy_sharded_layout(tmp_path):
     """Caches written by the PR 1 layout (key[:2]/ shard dirs) stay warm."""
     cache = ResultCache(str(tmp_path))
