@@ -83,6 +83,11 @@ def scenario_daemon_kill(reference, tmp) -> None:
                                  sleep=_noop_sleep, timeout=120.0)
         result = Session(backend=ServiceBackend(client=client)).run(study)
         cstats = client.client_stats()
+        # The mesh surface exists even on an unfederated daemon: /stats
+        # carries the counters, /healthz reports membership disabled.
+        b = SweepClient(url_b, timeout=30.0)
+        mesh_stats, mesh_health = b.stats()["mesh"], b.healthz()["mesh"]
+        assert mesh_health == {"enabled": False}, mesh_health
     assert result.records == reference.records, "records diverged"
     assert svc_a.dead, "the injected kill never fired"
     total_sim = svc_a.counters["simulated"] + svc_b.counters["simulated"]
@@ -93,6 +98,8 @@ def scenario_daemon_kill(reference, tmp) -> None:
           f"killed after {svc_a.counters['simulated']} cells, "
           f"{cstats['retries']} retries / {cstats['failovers']} failovers, "
           f"records bit-identical, {total_sim}/{cells} single simulations")
+    print(f"  daemon B /healthz mesh: {mesh_health} | /stats mesh: "
+          f"{mesh_stats}")
 
 
 def scenario_flaky_network(reference, tmp) -> None:

@@ -1,0 +1,205 @@
+"""Mesh smoke: 3 daemons over DISJOINT cache roots, the owner killed
+mid-study — records bit-identical to in-process, duplicate simulations
+bounded by the replication factor.
+
+The CI `mesh-smoke` job's driver (also runnable locally). Daemons are
+in-process ``serve()`` threads so the driver can assert on their
+mesh/simulation counters directly; fault schedules are seeded
+:class:`~repro.core.warpsim.faults.FaultPlan`\\ s, so every run replays
+identically. Unlike chaos_smoke's daemons, NOTHING here shares a
+filesystem: each daemon owns a private cache root, and the only ways a
+cell crosses daemons are the mesh's read-through (``GET /peer/cell``)
+and replication (``POST /peer/replicate``) paths. Three scenarios:
+
+1. **cold study + warm peer serving** — a cold study through the fleet
+   simulates every cell exactly once fleet-wide (ownership dedups
+   across daemons); a warm re-study pointed at a *different* daemon
+   simulates zero new cells (replicas + read-through serve it all).
+2. **owner killed mid-study** — the daemon serving the study is
+   murdered after K simulated cells; the ResilientClient fails over, a
+   sibling re-serves from replicas, records stay bit-identical, and
+   duplicate simulations are bounded by the replication factor (the
+   acceptance criterion: a daemon AND its disk vanished, coverage did
+   not).
+3. **queue-job adoption** — a job enqueued on daemon A whose first
+   lease request kills A: the fleet-aware worker rotates, a sibling
+   adopts the job from its replica, and the QueueBackend study result
+   is bit-identical.
+
+Exit code 0 iff every assertion holds.
+
+  PYTHONPATH=src python -m benchmarks.mesh_smoke
+"""
+
+from __future__ import annotations
+
+import contextlib
+import json
+import tempfile
+import threading
+import time
+
+from repro.core.warpsim import api, machines
+from repro.core.warpsim.api import (
+    QueueBackend, ServiceBackend, Session, Study,
+)
+from repro.core.warpsim.faults import FaultPlan
+from repro.core.warpsim.mesh import MeshConfig
+from repro.core.warpsim.service import (
+    ResilientClient, SweepClient, SweepService, serve,
+)
+from repro.core.warpsim.sweep import cell_key
+
+SMALL = dict(benches=("BFS", "DYN"), n_threads=128)
+REPLICATION = 2
+
+
+def _study(**kw):
+    base = dict(machines={"ws8": machines.baseline(8),
+                          "SW+": machines.sw_plus()}, **SMALL)
+    base.update(kw)
+    return Study(**base)
+
+
+def _noop_sleep(_seconds):
+    pass
+
+
+@contextlib.contextmanager
+def daemon(svc: SweepService):
+    httpd = serve(svc)
+    threading.Thread(target=httpd.serve_forever, daemon=True).start()
+    try:
+        yield "http://%s:%d" % httpd.server_address[:2]
+    finally:
+        httpd.shutdown()
+        httpd.server_close()
+
+
+@contextlib.contextmanager
+def mesh_trio(tmp, tag, fault_plans=(None, None, None)):
+    """Three meshed daemons over disjoint roots under `tmp`/`tag`-N."""
+    svcs = [SweepService(f"{tmp}/{tag}-{i}", persist_traces=False,
+                        mesh=False, fault_plan=fault_plans[i])
+            for i in range(3)]
+    with contextlib.ExitStack() as stack:
+        urls = [stack.enter_context(daemon(s)) for s in svcs]
+        for svc, url in zip(svcs, urls):
+            svc.configure_mesh(
+                MeshConfig.build(url, urls, replication=REPLICATION))
+        yield svcs, urls
+
+
+def _client(urls):
+    return ResilientClient(urls, max_retries=8, breaker_threshold=99,
+                           seed=0, sleep=_noop_sleep, timeout=120.0)
+
+
+def _print_mesh(label, svcs):
+    for i, svc in enumerate(svcs):
+        print(f"  {label} daemon{i} mesh: "
+              f"{json.dumps(svc.mesh_stats(), sort_keys=True)}")
+
+
+def scenario_cold_then_warm(reference, tmp) -> None:
+    study = _study(seeds=(0, 1))
+    cells = len(study.cells())
+    t0 = time.time()
+    with mesh_trio(tmp, "cold") as (svcs, urls):
+        res = Session(backend=ServiceBackend(
+            client=_client(urls))).run(study)
+        assert res.records == reference.records, "records diverged"
+        total = sum(s.counters["simulated"] for s in svcs)
+        assert total == cells, \
+            f"{total} simulations for {cells} cells across the fleet"
+        # Warm re-study through ONE other daemon: everything it does not
+        # own arrives by read-through/replica — zero new simulations.
+        warm = SweepClient(urls[2], timeout=120.0).study(study)
+        assert warm.records == reference.records, "warm records diverged"
+        assert warm.stats["simulated"] == 0, warm.stats
+        assert sum(s.counters["simulated"] for s in svcs) == cells
+        spread = [s.counters["simulated"] for s in svcs]
+        _print_mesh("cold", svcs)
+    print(f"mesh-smoke: cold+warm {time.time() - t0:.1f}s — {cells} cells "
+          f"simulated once fleet-wide (spread {spread}) over disjoint "
+          f"roots, warm re-study via another daemon simulated 0")
+
+
+def scenario_owner_killed_mid_study(reference, tmp) -> None:
+    study = _study(seeds=(0, 1))
+    spec = study.to_spec()
+    cells = len(spec.cells())
+    t0 = time.time()
+    with mesh_trio(tmp, "kill") as (svcs, urls):
+        # Ownership depends on the (ephemeral) URLs, so the victim is
+        # chosen after bind: the daemon owning the most cells serves the
+        # study and is killed on its 3rd simulated cell — pigeonhole
+        # over 8 cells / 3 members guarantees it owns at least 3, so the
+        # kill always fires mid-study.
+        owned = {u: 0 for u in urls}
+        for _m, cfg, bench, n_threads, seed in spec.cells():
+            owned[svcs[0].mesh.owner(
+                cell_key(bench, cfg, n_threads, seed))] += 1
+        victim = max(urls, key=lambda u: owned[u])
+        vidx = urls.index(victim)
+        assert owned[victim] >= 3, owned
+        svcs[vidx].fault_plan = FaultPlan.from_spec(
+            "service.cell:kill,after=2")
+        client = _client([victim] + [u for u in urls if u != victim])
+        # Session.run must surface nothing but a clean StudyResult —
+        # any raw urllib exception escaping is an instant failure here.
+        res = Session(backend=ServiceBackend(client=client)).run(study)
+        cstats = client.client_stats()
+        assert res.records == reference.records, "records diverged"
+        assert svcs[vidx].dead, "the injected kill never fired"
+        total = sum(s.counters["simulated"] for s in svcs)
+        duplicates = total - cells
+        assert 0 <= duplicates <= REPLICATION, \
+            (f"{duplicates} duplicate simulations — the replication "
+             f"factor ({REPLICATION}) must bound re-work")
+        assert cstats["failovers"] >= 1, cstats
+        _print_mesh("kill", svcs)
+    print(f"mesh-smoke: owner-kill {time.time() - t0:.1f}s — daemon{vidx} "
+          f"(and its private cache root) died after "
+          f"{svcs[vidx].counters['simulated']} cells; {cstats['retries']} "
+          f"retries / {cstats['failovers']} failovers, records "
+          f"bit-identical, {duplicates} duplicate sims "
+          f"(bound {REPLICATION})")
+
+
+def scenario_queue_job_adoption(reference, tmp) -> None:
+    study = _study(seeds=(0, 1))
+    cells = len(study.cells())
+    plans = (FaultPlan.from_spec("server/queue/lease:kill,times=1"),
+             None, None)
+    t0 = time.time()
+    with mesh_trio(tmp, "queue", fault_plans=plans) as (svcs, urls):
+        client = _client(urls)
+        res = Session(backend=QueueBackend(
+            client=client, chunk_size=2, poll_seconds=0.01)).run(study)
+        assert res.records == reference.records, "records diverged"
+        assert svcs[0].dead, "the injected kill never fired"
+        assert res.stats["queue_cells_computed"] == cells, res.stats
+        adoptions = sum(s.counters["jobs_adopted_from_peers"]
+                        for s in svcs[1:])
+        assert adoptions == 1, f"{adoptions} job adoptions (want 1)"
+        _print_mesh("queue", svcs)
+    print(f"mesh-smoke: job-adoption {time.time() - t0:.1f}s — enqueuing "
+          f"daemon killed on first lease, sibling adopted the job from "
+          f"its replica, worker drained {cells}/{cells} cells, records "
+          f"bit-identical")
+
+
+def main() -> None:
+    reference = api.Session().run(_study(seeds=(0, 1)))
+    print(f"mesh-smoke: reference study in-process, "
+          f"{len(reference.records)} records; replication={REPLICATION}")
+    with tempfile.TemporaryDirectory(prefix="warpsim-mesh-smoke-") as tmp:
+        scenario_cold_then_warm(reference, tmp)
+        scenario_owner_killed_mid_study(reference, tmp)
+        scenario_queue_job_adoption(reference, tmp)
+    print("mesh-smoke OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -57,10 +57,34 @@ Serving runbook (the daemon fleet; full details in ROADMAP.md):
                            URLS -> invisible to callers (retry + failover;
                            the shared cache root means completed cells are
                            never re-simulated). 4xx responses never retry.
+    WARPSIM_PEERS          comma-separated peer URLs: daemons federate
+                           into a mesh over *disjoint* cache roots (no
+                           shared filesystem). Rendezvous hashing over
+                           the cell key picks each cell's owner; a local
+                           miss read-throughs to the owner (``GET
+                           /peer/cell``) before simulating; completed
+                           cells are pushed to WARPSIM_REPLICATION
+                           members (``POST /peer/replicate``, default 2)
+                           so one daemon + its disk can vanish without
+                           losing coverage; queue-job snapshots are
+                           replicated/adopted the same way (``/peer/job``)
+                           so workers survive their enqueuing daemon.
+                           Needs WARPSIM_SELF_URL (this daemon's own
+                           peer-visible URL) or ``--advertise-url``.
+                           Degradation matrix: owner dead/partitioned ->
+                           ask replicas cache-only, then simulate locally
+                           (records bit-identical; cost is <= replication
+                           duplicate sims); peer draining -> its 503
+                           counts as unreachable, requester simulates;
+                           key skew across versions -> 400, requester
+                           simulates. ``stats()["mesh"]`` has membership
+                           + forward/replication/fallback counters.
     WARPSIM_FAULTS         deterministic fault injection for chaos tests,
                            e.g. ``server/study:error=503,times=2;
                            service.cell:kill,after=5;seed=7`` — see
-                           ``faults`` module docstring for the grammar.
+                           ``faults`` module docstring for the grammar
+                           (mesh paths: ``peer.forward``,
+                           ``peer.replicate``).
     POST /admin/drain      graceful shutdown: stop leasing queue chunks,
                            refuse new cell/study/sweep work with 503,
                            finish in-flight cells, persist queue jobs.
@@ -70,7 +94,11 @@ Serving runbook (the daemon fleet; full details in ROADMAP.md):
 Workers (``work_queue.run_worker``) retry transient lease/renew/complete
 failures with backoff, abandon chunks on lost leases (lease expiry
 requeues them), and rely on idempotent completes — a lost complete ack
-costs a recompute, never duplicate or wrong data.
+costs a recompute, never duplicate or wrong data. A worker given the
+fleet (comma-separated ``--url``, ``$WARPSIM_SERVICE_URLS``, or a
+``ResilientClient``) rotates endpoints on failure *and* on a definite
+"unknown job" — a mesh sibling adopts the job from its replicas — so it
+survives its enqueuing daemon dying.
 """
 
 from repro.core.warpsim.config import MachineConfig

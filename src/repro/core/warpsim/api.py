@@ -477,13 +477,18 @@ class QueueBackend(Backend):
         client = self.client()
         job = client.enqueue(study.to_spec(), chunk_size=self.chunk_size,
                              lease_seconds=self.lease_seconds)
-        # Queue jobs live on ONE daemon (cross-daemon job visibility is
-        # the federation open item): drain against the endpoint that
-        # actually took the enqueue — for a ResilientClient that is
-        # last_url, which may not be the first URL in its list.
-        worker_url = getattr(client, "last_url", None) or self.url
+        # Drain against the whole fleet, starting with the endpoint that
+        # actually took the enqueue (for a ResilientClient that is
+        # last_url, which may not be the first URL in its list). The
+        # worker rotates to the siblings if that daemon dies — a mesh
+        # peer adopts the job from its replicas, a shared-root successor
+        # reloads it — so the study survives the enqueuing daemon.
+        worker_urls = [getattr(client, "last_url", None) or self.url]
+        for u in getattr(client, "urls", ()):
+            if u not in worker_urls:
+                worker_urls.append(u)
         computed = wq_mod.run_worker(
-            worker_url, job["job"], worker_id=self.worker_id,
+            worker_urls, job["job"], worker_id=self.worker_id,
             engine=study.engine, poll_seconds=self.poll_seconds,
             timeout=self.timeout)
         res = client.study(study)       # every cell now a daemon cache hit

@@ -25,6 +25,16 @@ Fault points (a rule's ``point`` is an ``fnmatch`` pattern over these):
                          rejects it and the worker must retry cleanly)
     ``client.request``   in :class:`service.ResilientClient` before an
                          attempt leaves the process
+    ``peer.forward``     in a mesh daemon before a cell read-through
+                         leaves for a peer (marker ``<key>@<url>``; the
+                         job-adoption scan uses ``job:<id>@<url>``) —
+                         *any* fired action makes that peer look
+                         unreachable, so the requester walks on to the
+                         next candidate or simulates locally
+    ``peer.replicate``   before a cell/job replica is pushed to a
+                         successor (marker ``<key>@<url>`` /
+                         ``job:<id>@<url>``) — fired means the replica
+                         is dropped and counted ``replica_send_failures``
 
 Plans are **marker-keyed**: each rule remembers every marker (operation
 id / cell key) it has already decided on, so a *retried* operation never

@@ -37,6 +37,18 @@ trace/expansion LRUs, and serves:
   at call time, so operators can flip the engine without a restart and
   see the truth here).
 
+Daemons can federate into a **mesh** (:mod:`repro.core.warpsim.mesh`)
+over *disjoint* cache roots: ``WARPSIM_PEERS`` (plus
+``WARPSIM_SELF_URL``, or ``--peers``/``--advertise-url``) names the
+fleet, rendezvous hashing over the cell key assigns each cell an owner,
+a local miss read-throughs to the owner (``GET /peer/cell``) before
+simulating, completed cells are pushed to ``WARPSIM_REPLICATION``
+members (``POST /peer/replicate``), and queue-job snapshots are
+replicated/adopted across the fleet (``GET``/``POST /peer/job``) so a
+worker survives its enqueuing daemon dying. Every peer interaction
+degrades to local simulation (dead peer, partition, draining peer, key
+skew) — the mesh buys durability and de-duplication, never correctness.
+
 Requests for the *same uncomputed cell* are deduplicated in flight: the
 first request simulates, every concurrent duplicate parks on the same
 future and is served the one result (the ``dedup_waits`` counter counts
@@ -80,6 +92,8 @@ from repro.core.warpsim.config import MachineConfig
 from repro.core.warpsim.faults import (
     Fault, FaultError, FaultPlan, ServiceError, ServiceUnavailable,
 )
+from repro.core.warpsim import mesh as mesh_mod
+from repro.core.warpsim.mesh import MeshConfig
 from repro.core.warpsim.sweep import (
     MODEL_VERSION, SweepSpec, cell_key, compute_cell, family_major_cells,
     spec_from_dict, spec_to_dict,
@@ -163,7 +177,8 @@ class SweepService:
     def __init__(self, cache_dir: str, engine: str = "auto",
                  persist_traces: bool = True, lease_seconds: float = 60.0,
                  clock=time.monotonic,
-                 fault_plan: Optional[FaultPlan] = None):
+                 fault_plan: Optional[FaultPlan] = None,
+                 mesh: Union[MeshConfig, None, bool] = None):
         # The daemon's cache stack is a Session: its own ResultCache plus
         # *instance* trace/expansion LRUs (not the module globals — a
         # daemon embedded in a larger process must not contend with that
@@ -197,13 +212,49 @@ class SweepService:
         self._job_seq = 0
         self._queue_dir = os.path.join(cache_dir, "queue")
         self._persist_lock = threading.Lock()
+        # Mesh federation (ROADMAP's "remove the shared-directory
+        # assumption"): a MeshConfig wires this daemon into a peer fleet
+        # — cell ownership by rendezvous hash, read-through forwarding,
+        # N-way replication, cross-daemon queue-job visibility. `None`
+        # (the default) reads $WARPSIM_PEERS/$WARPSIM_SELF_URL; `False`
+        # disables the env path (the CLI uses it: the self URL isn't
+        # known until after bind, see configure_mesh()).
+        self.mesh: Optional[MeshConfig] = None
+        if isinstance(mesh, MeshConfig):
+            self.mesh = mesh
+        elif mesh is None:
+            self.mesh = MeshConfig.from_env()
+        # Passive replicas of peers' queue-job snapshots (job id -> raw
+        # WorkQueue.to_dict blob): held inert until this daemon is asked
+        # about an unknown job, then promoted by _adopt_job.
+        self._replica_jobs: Dict[str, dict] = {}
         self.counters: Dict[str, int] = {
             "requests": 0, "errors": 0, "cells_served": 0, "cache_hits": 0,
             "simulated": 0, "dedup_waits": 0, "sweeps": 0, "sweep_cells": 0,
             "queue_cells_adopted": 0, "faults_injected": 0,
+            # Mesh counters (all zero when no mesh is configured):
+            "peer_forwards": 0,        # outbound /peer/cell attempts
+            "peer_hits": 0,            # cells served by a peer
+            "peer_fallbacks": 0,       # all peers failed -> local sim
+            "peer_serves": 0,          # inbound /peer/cell requests
+            "replicas_sent": 0,        # cells pushed to successors
+            "replica_send_failures": 0,
+            "replicas_adopted": 0,     # inbound /peer/replicate cells
+            "jobs_replicated": 0,      # job snapshots pushed to peers
+            "job_replicas_received": 0,
+            "jobs_adopted_from_peers": 0,
         }
         self.last_sweep_stats: Dict[str, float] = {}
         self._load_jobs()
+
+    def configure_mesh(self, mesh: Optional[MeshConfig]) -> None:
+        """Join (or leave, with None) a peer mesh after construction.
+
+        The CLI path: a daemon bound to an ephemeral port only knows its
+        own peer-visible URL after ``serve()``, so it constructs with
+        ``mesh=False`` and joins here.
+        """
+        self.mesh = mesh
 
     # -------------------------------------------------- queue persistence
     #
@@ -221,9 +272,14 @@ class SweepService:
     # fresh ids can't collide with either.
 
     _META = "meta.json"
+    _REPLICA_PREFIX = "replica."
 
     def _job_path(self, job: str) -> str:
         return os.path.join(self._queue_dir, job + ".json")
+
+    def _replica_path(self, job: str) -> str:
+        return os.path.join(self._queue_dir,
+                            self._REPLICA_PREFIX + job + ".json")
 
     def _load_jobs(self) -> None:
         """Re-adopt queue jobs persisted by a previous daemon over this
@@ -248,10 +304,27 @@ class SweepService:
         except OSError:
             return
         jobs: Dict[str, WorkQueue] = {}
+        replicas: Dict[str, dict] = {}
         for name in sorted(names):
             if not name.endswith(".json") or name == self._META:
                 continue
             path = os.path.join(self._queue_dir, name)
+            if name.startswith(self._REPLICA_PREFIX):
+                # A peer's job snapshot replicated to us: reload it as a
+                # passive replica, not a live job — it only becomes live
+                # if someone asks this daemon about it (_adopt_job).
+                job = name[len(self._REPLICA_PREFIX):-len(".json")]
+                try:
+                    with open(path) as f:
+                        blob = json.load(f)
+                    if not isinstance(blob, dict):
+                        raise ValueError("bad replica shape")
+                    replicas[job] = blob
+                except OSError:
+                    continue                # transient: keep for next boot
+                except Exception:
+                    self._remove_file(path)
+                continue
             job = name[:-len(".json")]
             try:
                 with open(path) as f:
@@ -264,6 +337,8 @@ class SweepService:
                 continue
         with self._lock:
             self._jobs = jobs
+            self._replica_jobs = {j: b for j, b in replicas.items()
+                                  if j not in jobs}
 
     @staticmethod
     def _remove_file(path: str) -> None:
@@ -303,7 +378,14 @@ class SweepService:
             if q is None:
                 self._remove_file(self._job_path(job))
                 return
-            self._atomic_write(self._job_path(job), q.to_dict())
+            blob = q.to_dict()
+            self._atomic_write(self._job_path(job), blob)
+        # Mesh: push the fresh snapshot to the job's replica successors
+        # (outside the persist lock — a slow peer must not serialize
+        # other jobs' persists). Every enqueue/lease/complete refreshes
+        # the replicas, so a worker that loses this daemon finds the
+        # job's latest persisted state on a sibling.
+        self._replicate_job(job, blob)
 
     def bump(self, counter: str, n: int = 1) -> None:
         with self._lock:
@@ -363,9 +445,21 @@ class SweepService:
 
     def cell_with_source(self, bench: str, cfg: MachineConfig,
                          n_threads: Optional[int] = None, seed: int = 0,
-                         engine: Optional[str] = None
+                         engine: Optional[str] = None,
+                         forwarded: bool = False
                          ) -> Tuple[SimResult, str]:
-        """One cell plus how it was served: "cache" | "simulated" | "dedup"."""
+        """One cell plus how it was served:
+        "cache" | "simulated" | "dedup" | "peer".
+
+        With a mesh configured, a local miss on a cell this daemon does
+        not own first read-throughs to the owner (then the replica
+        successors) before simulating; any peer failure degrades to
+        local simulation. `forwarded` marks a request that *arrived*
+        over ``GET /peer/cell`` — it must never forward again (the
+        owner simulates; rankings agree fleet-wide, so a second hop
+        could only mean membership skew, and a one-hop bound keeps even
+        that converging instead of cycling).
+        """
         key = cell_key(bench, cfg, n_threads, seed)
         res = self.cache.get(key)       # optimistic: no service lock held
         if res is not None:
@@ -394,15 +488,23 @@ class SweepService:
                 self.counters["dedup_waits"] += 1
         if not owner:
             return fut.result(), "dedup"
+        source = "simulated"
         try:
-            res = compute_cell(bench, cfg, n_threads=n_threads, seed=seed,
-                               engine=engine or self.engine,
-                               trace_dir=self.trace_dir,
-                               trace_cache=self.session.trace_cache,
-                               expansion_cache=self.session.expansion_cache)
+            res = None
+            if not forwarded:
+                res = self._peer_fetch(key, bench, cfg, n_threads, seed)
+                if res is not None:
+                    source = "peer"
+            if res is None:
+                res = compute_cell(bench, cfg, n_threads=n_threads,
+                                   seed=seed, engine=engine or self.engine,
+                                   trace_dir=self.trace_dir,
+                                   trace_cache=self.session.trace_cache,
+                                   expansion_cache=self.session.expansion_cache)
             self.cache.put(key, res)
-            with self._lock:
-                self.counters["simulated"] += 1
+            if source == "simulated":
+                with self._lock:
+                    self.counters["simulated"] += 1
             fut.set_result(res)
         except BaseException as e:
             fut.set_exception(e)
@@ -410,17 +512,243 @@ class SweepService:
         finally:
             with self._lock:
                 self._inflight.pop(key, None)
-        # Chaos hook: "daemon dies after N cells". Checked strictly AFTER
-        # the result is cached and the dedup future resolved — a killed
-        # daemon's completed cells stay adopted from the shared cache
-        # root, which is what makes failover re-simulate nothing.
-        fault = self.check_fault("service.cell", marker=key)
-        if fault is not None:
-            if fault.action == "kill":
-                self.kill()
-            raise FaultError(
-                f"injected {fault.action} at service.cell ({key[:12]}…)")
-        return res, "simulated"
+        if source == "simulated":
+            # Mesh durability: push the fresh cell to its replica
+            # successors BEFORE the kill-fault hook below — a daemon
+            # killed right after computing a cell must not take the
+            # fleet's only copy down with its disk.
+            self._replicate_cells([(key, res)])
+            # Chaos hook: "daemon dies after N cells". Checked strictly
+            # AFTER the result is cached, replicated, and the dedup
+            # future resolved — a killed daemon's completed cells stay
+            # reachable (shared root or replicas), which is what makes
+            # failover re-simulate (almost) nothing.
+            fault = self.check_fault("service.cell", marker=key)
+            if fault is not None:
+                if fault.action == "kill":
+                    self.kill()
+                raise FaultError(
+                    f"injected {fault.action} at service.cell ({key[:12]}…)")
+        return res, source
+
+    # -------------------------------------------------------------- mesh
+
+    def _peer_fetch(self, key: str, bench: str, cfg: MachineConfig,
+                    n_threads: Optional[int], seed: int
+                    ) -> Optional[SimResult]:
+        """Read-through to the cell's owner (then replicas) on a local
+        miss; None when this daemon should simulate itself.
+
+        The owner is asked with ``simulate=1`` (it computes on a miss —
+        that is the point of ownership: one designated simulator per
+        cell fleet-wide, so concurrent misses across daemons collapse
+        onto its in-flight dedup table). Replica successors are asked
+        cache-only (``simulate=0``): if the owner is down, a replica
+        *serving* a copy is a win, but a replica *simulating* would race
+        other members doing the same. Every failure — dead peer,
+        draining 503, key-version skew, injected ``peer.forward`` fault
+        — falls through to the next candidate, then to local simulation
+        (the partition degrade: correctness never depends on the mesh).
+        """
+        mesh = self.mesh
+        if mesh is None:
+            return None
+        order = mesh.fetch_order(key)
+        if not order:
+            return None                     # we own it: simulate locally
+        params = {f.name: str(getattr(cfg, f.name))
+                  for f in dataclasses.fields(MachineConfig)}
+        params.update(bench=bench, seed=str(seed), key=key)
+        if n_threads is not None:
+            params["n_threads"] = str(n_threads)
+        for rank, target in enumerate(order):
+            self.bump("peer_forwards")
+            fault = self.check_fault("peer.forward",
+                                     marker=f"{key}@{target}")
+            if fault is not None:
+                continue                    # injected: peer unreachable
+            params["simulate"] = "1" if rank == 0 else "0"
+            try:
+                resp = _http_json(
+                    target + "/peer/cell?" + urlencode(params),
+                    timeout=mesh.peer_timeout)
+            except ServiceError:
+                continue
+            if resp.get("found"):
+                self.bump("peer_hits")
+                return SimResult(**resp["result"])
+        self.bump("peer_fallbacks")
+        return None
+
+    def peer_cell(self, params: Mapping[str, str]) -> dict:
+        """Serve ``GET /peer/cell``: a peer's read-through request.
+
+        The requester sends every MachineConfig field plus its computed
+        cell key; we recompute the key and reject on mismatch (400) —
+        the one way two daemons disagree on a key is MODEL_VERSION or
+        field-set skew across a rolling upgrade, and serving a result
+        under the wrong key would poison the requester's cache.
+        ``simulate=0`` (replica rank) answers from cache only;
+        ``simulate=1`` (owner rank) runs the full cell path — including
+        its own in-flight dedup, so concurrent forwards collapse.
+        """
+        bench = params["bench"]
+        cfg = resolve_machine(params)
+        n_threads = (int(params["n_threads"])
+                     if "n_threads" in params else None)
+        seed = int(params.get("seed", 0))
+        key = cell_key(bench, cfg, n_threads, seed)
+        claimed = params.get("key")
+        if claimed and claimed != key:
+            raise ValueError(
+                f"peer cell-key mismatch (model/version skew?): "
+                f"ours {key[:12]}… theirs {claimed[:12]}…")
+        self.bump("peer_serves")
+        if params.get("simulate", "1").lower() in _BOOL_FALSE:
+            res = self.cache.get(key)
+            if res is None:
+                return {"found": False, "key": key}
+        else:
+            res, _src = self.cell_with_source(bench, cfg, n_threads, seed,
+                                              forwarded=True)
+        return {"found": True, "key": key,
+                "result": dataclasses.asdict(res)}
+
+    def _replicate_cells(self, items: Sequence[Tuple[str, SimResult]]
+                         ) -> None:
+        """Push completed cells to their replica successors (one batched
+        ``POST /peer/replicate`` per target). Best-effort: a failed push
+        is counted and dropped — the cell is still in our cache, and a
+        reader that misses the lost replica degrades to a forward or a
+        local re-simulation."""
+        mesh = self.mesh
+        if mesh is None or not items:
+            return
+        by_target: Dict[str, List[dict]] = {}
+        for key, res in items:
+            for target in mesh.replica_targets(key):
+                fault = self.check_fault("peer.replicate",
+                                         marker=f"{key}@{target}")
+                if fault is not None:
+                    self.bump("replica_send_failures")
+                    continue
+                by_target.setdefault(target, []).append(
+                    {"key": key, "result": dataclasses.asdict(res)})
+        for target, cells in by_target.items():
+            try:
+                _http_json(target + "/peer/replicate", {"cells": cells},
+                           timeout=mesh.peer_timeout)
+            except ServiceError:
+                self.bump("replica_send_failures", len(cells))
+            else:
+                self.bump("replicas_sent", len(cells))
+
+    def adopt_cell_replicas(self, cells: Iterable[Mapping]) -> int:
+        """Serve ``POST /peer/replicate``: store a peer's pushed cells."""
+        n = 0
+        for ent in cells:
+            try:
+                key, res = ent["key"], SimResult(**ent["result"])
+            except (KeyError, TypeError) as e:
+                raise ValueError(f"bad replica payload: {e}") from e
+            self.cache.put(key, res)
+            n += 1
+        if n:
+            self.bump("replicas_adopted", n)
+        return n
+
+    def _replicate_job(self, job: str, blob: dict) -> None:
+        """Push one job snapshot to its replica successors (best-effort,
+        called after every persist of that job)."""
+        mesh = self.mesh
+        if mesh is None:
+            return
+        sent = 0
+        for target in mesh.job_targets(job):
+            fault = self.check_fault("peer.replicate",
+                                     marker=f"job:{job}@{target}")
+            if fault is not None:
+                self.bump("replica_send_failures")
+                continue
+            try:
+                _http_json(target + "/peer/job",
+                           {"job": job, "queue": blob},
+                           timeout=mesh.peer_timeout)
+            except ServiceError:
+                self.bump("replica_send_failures")
+            else:
+                sent += 1
+        if sent:
+            self.bump("jobs_replicated")
+
+    # Passive job replicas held before the oldest are dropped — same
+    # bounded-daemon principle as MAX_JOBS.
+    MAX_REPLICA_JOBS = 128
+
+    def adopt_job_replica(self, job: str, blob: Mapping) -> None:
+        """Serve ``POST /peer/job``: hold a peer's job snapshot, inert,
+        until someone asks this daemon about that job (_adopt_job)."""
+        if not isinstance(blob, Mapping) or "chunks" not in blob:
+            raise ValueError(f"bad job replica for {job!r}")
+        with self._lock:
+            if job in self._jobs:
+                return      # we already own it live: replica is stale
+            self._replica_jobs[job] = dict(blob)
+            stale = list(self._replica_jobs)
+            for j in stale[:max(0, len(stale) - self.MAX_REPLICA_JOBS)]:
+                del self._replica_jobs[j]
+                self._remove_file(self._replica_path(j))
+        self.bump("job_replicas_received")
+        with self._persist_lock:
+            self._atomic_write(self._replica_path(job), dict(blob))
+
+    def _adopt_job(self, job: str) -> Optional[WorkQueue]:
+        """Promote an unknown job from the replica table — or from a
+        peer's live/replica tables (``GET /peer/job``) — into this
+        daemon's live jobs.
+
+        The cross-daemon visibility contract: a worker or status poller
+        pointed at *any* mesh member finds the job. Lease clocks restart
+        from the snapshot's remaining time (same degrade as a daemon
+        restart). If the original owner is still alive both daemons may
+        briefly lease chunks independently — completes are idempotent
+        and cells deterministic, so the cost is bounded duplicate work,
+        never wrong records.
+        """
+        with self._lock:
+            blob = self._replica_jobs.pop(job, None)
+        mesh = self.mesh
+        if blob is None and mesh is not None:
+            for target in mesh.peers:
+                fault = self.check_fault("peer.forward",
+                                         marker=f"job:{job}@{target}")
+                if fault is not None:
+                    continue
+                try:
+                    resp = _http_json(
+                        target + "/peer/job?" + urlencode({"job": job}),
+                        timeout=mesh.peer_timeout)
+                except ServiceError:
+                    continue
+                if resp.get("found"):
+                    blob = resp["queue"]
+                    break
+        if blob is None:
+            return None
+        try:
+            q = WorkQueue.from_dict(blob, clock=self._clock)
+        except Exception as e:      # noqa: BLE001 — corrupt replica
+            raise ValueError(f"unusable job replica for {job!r}: "
+                             f"{e.__class__.__name__}: {e}") from e
+        with self._lock:
+            live = self._jobs.get(job)
+            if live is not None:
+                return live         # lost the adoption race: use theirs
+            self._jobs[job] = q
+        self._remove_file(self._replica_path(job))
+        self.bump("jobs_adopted_from_peers")
+        self._persist_job(job)
+        return q
 
     # ------------------------------------------------------------ sweeps
 
@@ -451,7 +779,7 @@ class SweepService:
         exp0 = (ecache.hits, ecache.misses)
         trc0 = (tcache.hits, tcache.misses, tcache.disk_hits)
         by_cell: Dict[tuple, SimResult] = {}
-        counts = {"cache": 0, "simulated": 0, "dedup": 0}
+        counts = {"cache": 0, "simulated": 0, "dedup": 0, "peer": 0}
         sim_groups, sim_families = set(), set()
 
         families: List[List] = []
@@ -480,7 +808,9 @@ class SweepService:
 
         for (mname, cfg, bench, n_threads, seed), (res, src) in done:
             counts[src] += 1
-            if src != "cache":
+            if src not in ("cache", "peer"):
+                # Peer-served cells were never expanded locally — they
+                # must not inflate the expansion/trace sharing stats.
                 fam = (bench, n_threads, seed)
                 sim_families.add(fam)
                 sim_groups.add(fam + (cfg.expansion_key(),))
@@ -489,8 +819,9 @@ class SweepService:
         stats = dict(
             cells=len(cells),
             cache_hits=counts["cache"],
-            cache_misses=uncached,
+            cache_misses=uncached + counts["peer"],
             simulated=counts["simulated"],
+            peer_hits=counts["peer"],
             dedup_waits=counts["dedup"],
             expansion_groups=len(sim_groups),
             expansions_saved=uncached - len(sim_groups),
@@ -565,6 +896,10 @@ class SweepService:
         with self._lock:
             q = self._jobs.get(job)
         if q is None:
+            # Mesh: a job another daemon minted may live here as a
+            # passive replica, or on a peer — adopt before giving up.
+            q = self._adopt_job(job)
+        if q is None:
             raise ValueError(f"unknown job {job!r}")
         return q
 
@@ -605,11 +940,17 @@ class SweepService:
         """
         q = self._job(job)
         n = 0
+        adopted: List[Tuple[str, SimResult]] = []
         for ent in results:
-            self.cache.put(ent["key"], SimResult(**ent["result"]))
+            res = SimResult(**ent["result"])
+            self.cache.put(ent["key"], res)
+            adopted.append((ent["key"], res))
             n += 1
         if n:
             self.bump("queue_cells_adopted", n)
+            # Worker-computed cells get the same durability as locally
+            # simulated ones: replicate to their successors.
+            self._replicate_cells(adopted)
         ok = q.complete(int(chunk), worker)
         self._persist_job(job)
         return {"ok": ok, "job": job, "chunk": int(chunk), "done": q.done}
@@ -618,6 +959,26 @@ class SweepService:
         return {"job": job, **self._job(job).status()}
 
     # ------------------------------------------------------ observability
+
+    _MESH_COUNTERS = (
+        "peer_forwards", "peer_hits", "peer_fallbacks", "peer_serves",
+        "replicas_sent", "replica_send_failures", "replicas_adopted",
+        "jobs_replicated", "job_replicas_received",
+        "jobs_adopted_from_peers",
+    )
+
+    def mesh_stats(self) -> dict:
+        """Mesh state for ``/stats``/``/healthz``: membership + the
+        forward/replication counters (``{"enabled": False}`` when this
+        daemon is not federated)."""
+        if self.mesh is None:
+            return {"enabled": False}
+        with self._lock:
+            snap = {k: self.counters.get(k, 0)
+                    for k in self._MESH_COUNTERS}
+            held = len(self._replica_jobs)
+        return {"enabled": True, **self.mesh.describe(),
+                "job_replicas_held": held, **snap}
 
     def healthz(self) -> dict:
         native = _native.status(probe=True)
@@ -642,6 +1003,8 @@ class SweepService:
             "pallas": pallas,
             "draining": self.draining,
             "cache_root": os.path.abspath(self.cache.root),
+            "mesh": ({"enabled": True, **self.mesh.describe()}
+                     if self.mesh is not None else {"enabled": False}),
             "uptime_s": round(time.time() - self.started, 3),
         }
 
@@ -679,6 +1042,7 @@ class SweepService:
                 "builds": self.session.trace_cache.builds,
             },
             "jobs": jobs,
+            "mesh": self.mesh_stats(),
             "last_sweep": last_sweep,
             "uptime_s": round(time.time() - self.started, 3),
         }
@@ -777,7 +1141,12 @@ class SweepRequestHandler(BaseHTTPRequestHandler):
         resp_fault = svc.check_fault("response" + path, marker)
         if resp_fault is not None and resp_fault.action == "drop":
             self._drop_response = True
-        if svc.draining and path in ("/cell", "/study", "/sweep"):
+        # A draining daemon refuses new simulation work — including a
+        # peer's read-through (the requester's degrade path simulates
+        # locally). /peer/replicate and /peer/job stay open: accepting a
+        # sibling's replicas is cheap and loses nothing on shutdown.
+        if svc.draining and path in ("/cell", "/study", "/sweep",
+                                     "/peer/cell"):
             svc.bump("requests")
             self._try_send({"error": "draining: not accepting new work"}, 503)
             return
@@ -826,6 +1195,20 @@ class SweepRequestHandler(BaseHTTPRequestHandler):
                     "machine": cfg.name, "source": src,
                     "result": dataclasses.asdict(res),
                 })
+            elif path == "/peer/cell":
+                self._send(svc.peer_cell(params))
+            elif path == "/peer/job":
+                job = params["job"]
+                with svc._lock:
+                    q = svc._jobs.get(job)
+                    blob = (None if q is not None
+                            else svc._replica_jobs.get(job))
+                if q is not None:
+                    blob = q.to_dict()
+                # Local tables only — never forwards, so adoption scans
+                # across the fleet terminate in one hop.
+                self._send({"job": job, "found": blob is not None,
+                            "queue": blob})
             elif path == "/queue/lease":
                 self._send(svc.queue_lease(params["job"],
                                            params.get("worker", "anon")))
@@ -862,6 +1245,12 @@ class SweepRequestHandler(BaseHTTPRequestHandler):
                     "stats": stats,
                     "seeds": list(spec.seeds),
                 })
+            elif path == "/peer/replicate":
+                n = svc.adopt_cell_replicas(body.get("cells", []))
+                self._send({"ok": True, "adopted": n})
+            elif path == "/peer/job":
+                svc.adopt_job_replica(body["job"], body.get("queue"))
+                self._send({"ok": True, "job": body["job"]})
             elif path == "/queue/complete":
                 self._send(svc.queue_complete(
                     body["job"], body["chunk"], body.get("worker", "anon"),
@@ -1281,20 +1670,50 @@ def main(argv: Optional[List[str]] = None) -> None:
                     help="don't snapshot thread traces under the cache dir")
     ap.add_argument("--lease-seconds", type=float, default=60.0,
                     help="work-queue lease duration")
+    ap.add_argument("--peers", default=None,
+                    help="comma-separated peer daemon URLs: join a "
+                         f"federated mesh (default: ${mesh_mod.ENV_PEERS})")
+    ap.add_argument("--advertise-url", default=None,
+                    help="this daemon's own peer-visible URL (default: "
+                         f"${mesh_mod.ENV_SELF}, else http://<host>:<port> "
+                         "after bind)")
+    ap.add_argument("--replication", type=int, default=None,
+                    help="copies per cell/job across the mesh (default: "
+                         f"${mesh_mod.ENV_REPLICATION}, else "
+                         f"{mesh_mod.DEFAULT_REPLICATION})")
     ap.add_argument("--verbose", action="store_true",
                     help="log every request to stderr")
     args = ap.parse_args(argv)
 
+    # mesh=False: the env path needs the self URL, which for an
+    # ephemeral --port 0 only exists after bind — configure below.
     service = SweepService(
         args.cache_dir, engine=args.engine,
         persist_traces=not args.no_persist_traces,
-        lease_seconds=args.lease_seconds)
+        lease_seconds=args.lease_seconds, mesh=False)
     httpd = serve(service, host=args.host, port=args.port,
                   quiet=not args.verbose)
     host, port = httpd.server_address[:2]
+    peers = args.peers or os.environ.get(mesh_mod.ENV_PEERS, "")
+    mesh_line = ""
+    if peers.strip():
+        self_url = (args.advertise_url
+                    or os.environ.get(mesh_mod.ENV_SELF)
+                    or f"http://{host}:{port}")
+        replication = args.replication
+        if replication is None:
+            rep_env = os.environ.get(mesh_mod.ENV_REPLICATION)
+            replication = int(rep_env) if rep_env else None
+        mesh = MeshConfig.build(
+            self_url, [p for p in peers.split(",") if p.strip()],
+            replication=replication)
+        service.configure_mesh(mesh)
+        mesh_line = (f", mesh={len(mesh.members)} members "
+                     f"x{mesh.replication} as {mesh.self_url}")
     # Machine-parseable startup line (the smoke harness reads the URL).
     print(f"warpsim-sweep-service listening on http://{host}:{port} "
-          f"(cache={os.path.abspath(args.cache_dir)}, engine={args.engine})",
+          f"(cache={os.path.abspath(args.cache_dir)}, engine={args.engine}"
+          f"{mesh_line})",
           flush=True)
     try:
         httpd.serve_forever()

@@ -1067,6 +1067,9 @@ def run_sweep_with_stats(
         cache_hits=run_cache_hits,
         cache_misses=len(todo) if cache is not None else 0,
         simulated=len(todo),
+        # Stats-shape parity with the service's mesh path: in-process
+        # sweeps have no peers, so this is identically zero here.
+        peer_hits=0,
         expansion_groups=n_groups,
         expansions_saved=len(todo) - n_groups,
         trace_families=n_families,

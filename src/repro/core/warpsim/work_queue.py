@@ -311,7 +311,33 @@ def _http_json(url: str, body: Optional[dict] = None,
             url=base, path=path) from e
 
 
-def run_worker(base_url: str, job: str, worker_id: Optional[str] = None,
+def _worker_urls(base_url) -> List[str]:
+    """Normalize ``run_worker``'s first argument into an ordered URL list.
+
+    Accepts a single URL, a comma-separated fleet (the
+    ``$WARPSIM_SERVICE_URLS`` wire format), any sequence of URLs, or a
+    client object (e.g. :class:`~repro.core.warpsim.service.ResilientClient`
+    via its ``urls``, or a plain SweepClient via ``base_url``).
+    """
+    if hasattr(base_url, "urls"):
+        urls = list(base_url.urls)
+    elif hasattr(base_url, "base_url"):
+        urls = [base_url.base_url]
+    elif isinstance(base_url, str):
+        urls = [u for u in (p.strip() for p in base_url.split(",")) if u]
+    else:
+        urls = [str(u).strip() for u in base_url]
+    out: List[str] = []
+    for u in urls:
+        u = u.rstrip("/")
+        if u and u not in out:
+            out.append(u)
+    if not out:
+        raise ValueError("run_worker needs at least one service URL")
+    return out
+
+
+def run_worker(base_url, job: str, worker_id: Optional[str] = None,
                engine: str = "auto", poll_seconds: float = 0.5,
                max_chunks: Optional[int] = None,
                timeout: float = 300.0, max_retries: int = 3,
@@ -326,28 +352,43 @@ def run_worker(base_url: str, job: str, worker_id: Optional[str] = None,
     `max_chunks` bounds the number of chunks processed (tests use it to
     simulate a worker dying mid-job).
 
+    `base_url` names the daemon — or the *fleet*: a comma-separated
+    string (the ``$WARPSIM_SERVICE_URLS`` format), a sequence of URLs,
+    or a client object with ``.urls`` (a ``ResilientClient``). With more
+    than one URL the worker is no longer pinned to the enqueuing daemon:
+    transient failures rotate to the next endpoint, and a definite
+    "unknown job" (400) also rotates — under a mesh a sibling daemon
+    adopts the job from its replicas, and under a shared cache root a
+    successor daemon reloads it — raising only once *every* endpoint has
+    given a definite refusal.
+
     Resilience: every HTTP call retries transient failures (connection
     loss, 5xx, injected faults) up to `max_retries` times with capped
-    exponential backoff before giving up. A renew that still fails (or is
-    refused) abandons the chunk — the lease expires and a sibling worker
-    requeues it. A complete that still fails is *dropped silently*: the
-    chunk requeues via lease expiry and completes are idempotent, so the
-    recomputation is wasted effort, never wrong or double-adopted data.
-    Only a persistently unreachable ``/queue/lease`` raises (the daemon is
-    gone and there is nothing useful left to do). `sleep` is injectable so
+    exponential backoff before giving up, rotating endpoints between
+    attempts. A renew that still fails (or is refused) abandons the
+    chunk — the lease expires and a sibling worker requeues it. A
+    complete that still fails is *dropped silently*: the chunk requeues
+    via lease expiry and completes are idempotent, so the recomputation
+    is wasted effort, never wrong or double-adopted data. Only a
+    persistently unreachable ``/queue/lease`` raises (the fleet is gone
+    and there is nothing useful left to do). `sleep` is injectable so
     tests drive retries and lease expiry with a fake clock; `fault_plan`
     (default: ``$WARPSIM_FAULTS``) injects ``worker.lease`` /
     ``worker.renew`` / ``worker.complete`` faults: ``drop`` simulates
     connection loss, ``corrupt`` mangles the POST body so the server
     rejects it (the retry must then adopt results exactly once).
     """
-    base = base_url.rstrip("/")
+    bases = _worker_urls(base_url)
     wid = worker_id or f"{os.uname().nodename}:{os.getpid()}"
     plan = FaultPlan.from_env() if fault_plan is None else fault_plan
+    active = [0]    # sticky endpoint index, shared across calls
 
-    def call(kind: str, url: str, body: Optional[dict] = None) -> dict:
+    def call(kind: str, path: str, body: Optional[dict] = None) -> dict:
         last: Optional[ServiceError] = None
-        for attempt in range(max_retries + 1):
+        refused = set()     # endpoints that gave a definite non-transient no
+        attempt = 0
+        while True:
+            base = bases[active[0] % len(bases)]
             send = body
             fault = plan.check(f"worker.{kind}") if plan is not None else None
             try:
@@ -357,14 +398,24 @@ def run_worker(base_url: str, job: str, worker_id: Optional[str] = None,
                     else:
                         raise ServiceUnavailable(
                             f"injected worker fault ({fault.action}) at "
-                            f"worker.{kind}", url=url, path=f"/{kind}")
-                return _http_json(url, send, timeout=timeout)
+                            f"worker.{kind}", url=base, path=f"/{kind}")
+                return _http_json(base + path, send, timeout=timeout)
             except ServiceError as e:
                 if not e.is_transient:
-                    raise
+                    # Definite refusal (e.g. 400 unknown job) from this
+                    # endpoint: a sibling may still know the job — raise
+                    # only when the whole fleet has refused.
+                    refused.add(base)
+                    if len(refused) >= len(bases):
+                        raise
+                    active[0] = (active[0] + 1) % len(bases)
+                    continue
                 last = e
-                if attempt < max_retries:
-                    sleep(min(2.0, retry_backoff * (2 ** attempt)))
+                if attempt >= max_retries:
+                    break
+                sleep(min(2.0, retry_backoff * (2 ** attempt)))
+                attempt += 1
+                active[0] = (active[0] + 1) % len(bases)
         last.attempts = max_retries + 1
         raise last
 
@@ -373,7 +424,7 @@ def run_worker(base_url: str, job: str, worker_id: Optional[str] = None,
     while True:
         if max_chunks is not None and chunks_done >= max_chunks:
             return computed
-        got = call("lease", f"{base}/queue/lease?job={job}&worker={wid}")
+        got = call("lease", f"/queue/lease?job={job}&worker={wid}")
         if got.get("chunk") is None:
             if got.get("done"):
                 return computed
@@ -396,7 +447,7 @@ def run_worker(base_url: str, job: str, worker_id: Optional[str] = None,
                 # (only a single cell slower than the lease can forfeit).
                 try:
                     renewed = call(
-                        "renew", f"{base}/queue/renew?job={job}"
+                        "renew", f"/queue/renew?job={job}"
                         f"&chunk={got['chunk']}&worker={wid}")
                 except ServiceError:
                     abandoned = True    # daemon unreachable: let it requeue
@@ -406,7 +457,7 @@ def run_worker(base_url: str, job: str, worker_id: Optional[str] = None,
                     break
         if not abandoned:
             try:
-                call("complete", f"{base}/queue/complete", {
+                call("complete", "/queue/complete", {
                     "job": job, "chunk": got["chunk"], "worker": wid,
                     "results": results,
                 })
@@ -420,14 +471,23 @@ def run_worker(base_url: str, job: str, worker_id: Optional[str] = None,
 def main(argv: Optional[List[str]] = None) -> None:
     ap = argparse.ArgumentParser(
         description="warpsim sweep worker: drain a job from a sweep service")
-    ap.add_argument("--url", required=True,
-                    help="service base URL, e.g. http://127.0.0.1:8321")
+    ap.add_argument("--url", default=None,
+                    help="service base URL(s), comma-separated for a fleet "
+                         "(default: $WARPSIM_SERVICE_URLS, else "
+                         "$WARPSIM_SERVICE_URL)")
     ap.add_argument("--job", required=True, help="job id from POST /sweep")
     ap.add_argument("--worker-id", default=None)
     ap.add_argument("--engine", default="auto")
     ap.add_argument("--poll-seconds", type=float, default=0.5)
     args = ap.parse_args(argv)
-    n = run_worker(args.url, args.job, worker_id=args.worker_id,
+    # Env names are literals here: service.py imports this module, so the
+    # constants (service.ENV_URL/ENV_URLS) can't be imported back.
+    urls = (args.url or os.environ.get("WARPSIM_SERVICE_URLS")
+            or os.environ.get("WARPSIM_SERVICE_URL"))
+    if not urls:
+        ap.error("--url is required (or set WARPSIM_SERVICE_URLS / "
+                 "WARPSIM_SERVICE_URL)")
+    n = run_worker(urls, args.job, worker_id=args.worker_id,
                    engine=args.engine, poll_seconds=args.poll_seconds)
     print(f"worker drained: {n} cells computed", file=sys.stderr)
 

@@ -592,3 +592,86 @@ def test_forced_backend_with_partially_dead_fleet_works(tmp_path,
         session = Session.from_env()
         assert isinstance(session.backend, ServiceBackend)
         assert isinstance(session.backend.client(), ResilientClient)
+
+
+# ------------------------------------------------- mesh peer.* faults
+
+def test_fault_plan_peer_points_schedule():
+    """peer.forward / peer.replicate ride the standard grammar: marker-
+    keyed (a retried forward to the same peer passes), times-capped, and
+    addressable per (key, target) since the marker embeds both."""
+    plan = FaultPlan.from_spec(
+        "peer.forward:drop,times=2;peer.replicate:drop,times=inf;seed=3")
+    assert plan.check("peer.forward", marker="k1@http://b:2") is not None
+    # Same logical forward again (a retry): already decided, passes.
+    assert plan.check("peer.forward", marker="k1@http://b:2") is None
+    # A different target of the same key is a distinct marker.
+    assert plan.check("peer.forward", marker="k1@http://c:3") is not None
+    # times=2 exhausted: further forwards pass.
+    assert plan.check("peer.forward", marker="k2@http://b:2") is None
+    for i in range(5):      # times=inf never exhausts
+        assert plan.check("peer.replicate",
+                          marker=f"k{i}@http://b:2") is not None
+    stats = plan.stats()
+    assert stats["fired"] == {"peer.forward": 2, "peer.replicate": 5}
+
+
+def _mesh_pair(tmp_path, plans):
+    """Two meshed daemons over disjoint roots (helper for peer faults)."""
+    from repro.core.warpsim.mesh import MeshConfig
+    svcs = [SweepService(str(tmp_path / f"m{i}"), persist_traces=False,
+                         mesh=False, fault_plan=plans[i])
+            for i in range(2)]
+    return svcs
+
+
+def test_peer_forward_fault_forces_local_simulation(tmp_path):
+    """An injected peer.forward drop makes every peer look unreachable:
+    the requester degrades to local simulation (partition fallback) and
+    the owner never sees the request — records still correct."""
+    from repro.core.warpsim.mesh import MeshConfig
+    from repro.core.warpsim.sweep import cell_key
+    plans = (FaultPlan.from_spec("peer.forward:drop,times=inf"), None)
+    svcs = _mesh_pair(tmp_path, plans)
+    with _daemon(svcs[0]) as u0, _daemon(svcs[1]) as u1:
+        for svc, u in zip(svcs, (u0, u1)):
+            svc.configure_mesh(MeshConfig.build(u, [u0, u1],
+                                                replication=2))
+        cfg = machines.baseline(8)
+        seed = next(s for s in range(64)
+                    if svcs[0].mesh.owner(cell_key("BFS", cfg, 128, s))
+                    == u1)
+        res, src = svcs[0].cell_with_source("BFS", cfg, 128, seed)
+        assert src == "simulated"
+        assert svcs[0].counters["peer_fallbacks"] == 1
+        assert svcs[1].counters["peer_serves"] == 0
+        assert svcs[0].counters["faults_injected"] >= 1
+        assert res == api.Session().run(
+            Study(machines={"ws8": cfg}, benches=("BFS",), n_threads=128,
+                  seeds=(seed,))).records[0].result
+
+
+def test_peer_replicate_fault_drops_replica(tmp_path):
+    """An injected peer.replicate drop loses the pushed copy (counted,
+    not raised): the successor's cache stays cold and a later miss there
+    degrades to read-through — durability is lost, correctness is not."""
+    from repro.core.warpsim.mesh import MeshConfig
+    from repro.core.warpsim.sweep import cell_key
+    plans = (FaultPlan.from_spec("peer.replicate:drop,times=inf"), None)
+    svcs = _mesh_pair(tmp_path, plans)
+    with _daemon(svcs[0]) as u0, _daemon(svcs[1]) as u1:
+        for svc, u in zip(svcs, (u0, u1)):
+            svc.configure_mesh(MeshConfig.build(u, [u0, u1],
+                                                replication=2))
+        cfg = machines.baseline(8)
+        seed = next(s for s in range(64)
+                    if svcs[0].mesh.owner(cell_key("BFS", cfg, 128, s))
+                    == u0)
+        key = cell_key("BFS", cfg, 128, seed)
+        svcs[0].cell("BFS", cfg, 128, seed)
+        assert not svcs[1].cache.contains(key)
+        assert svcs[0].counters["replica_send_failures"] == 1
+        assert svcs[0].counters["replicas_sent"] == 0
+        # The cell is still served mesh-wide via read-through.
+        res, src = svcs[1].cell_with_source("BFS", cfg, 128, seed)
+        assert src == "peer" and svcs[1].cache.contains(key)

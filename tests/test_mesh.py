@@ -1,0 +1,479 @@
+"""Federated daemon mesh tests: rendezvous ownership, peer read-through,
+N-way replication over disjoint cache roots, queue-job adoption, and the
+degrade-to-local paths (drain, partition, key skew).
+
+The structural invariant everywhere: the mesh may only change *where* a
+cell is computed and how many copies exist — records are always
+bit-identical to the in-process backend, and any peer failure degrades
+to local simulation."""
+
+import contextlib
+import socket
+import threading
+
+import pytest
+
+from repro.core.warpsim import api, machines
+from repro.core.warpsim import mesh as mesh_mod
+from repro.core.warpsim.api import (
+    QueueBackend, ServiceBackend, Session, Study,
+)
+from repro.core.warpsim.faults import FaultPlan, ServiceError
+from repro.core.warpsim.mesh import MeshConfig, rendezvous_ranking
+from repro.core.warpsim.service import (
+    ResilientClient, SweepClient, SweepService, serve,
+)
+from repro.core.warpsim.sweep import cell_key
+from repro.core.warpsim.work_queue import _worker_urls, run_worker
+
+SMALL = dict(benches=("BFS", "DYN"), n_threads=128)
+
+
+def _study(**kw):
+    base = dict(machines={"ws8": machines.baseline(8),
+                          "SW+": machines.sw_plus()}, **SMALL)
+    base.update(kw)
+    return Study(**base)
+
+
+def _noop_sleep(_seconds):
+    pass
+
+
+def _dead_url():
+    """A URL that is guaranteed to refuse connections right now."""
+    s = socket.socket()
+    s.bind(("127.0.0.1", 0))
+    port = s.getsockname()[1]
+    s.close()
+    return f"http://127.0.0.1:{port}"
+
+
+class _daemon:
+    """Context manager: serve `svc` on an ephemeral port, yield its URL."""
+
+    def __init__(self, svc):
+        self.svc = svc
+
+    def __enter__(self):
+        self.httpd = serve(self.svc)
+        threading.Thread(target=self.httpd.serve_forever,
+                         daemon=True).start()
+        return "http://%s:%d" % self.httpd.server_address[:2]
+
+    def __exit__(self, *exc):
+        self.httpd.shutdown()
+        self.httpd.server_close()
+
+
+@contextlib.contextmanager
+def mesh_trio(tmp_path, replication=2, fault_plans=(None, None, None)):
+    """Three live daemons over DISJOINT cache roots, meshed together.
+
+    Yields ``(services, urls)``. The self URL is only known after bind,
+    so services are constructed with ``mesh=False`` and join via
+    ``configure_mesh`` — the same dance the CLI does for ``--port 0``.
+    """
+    svcs = [SweepService(str(tmp_path / f"root{i}"), persist_traces=False,
+                         mesh=False, fault_plan=fault_plans[i])
+            for i in range(3)]
+    with contextlib.ExitStack() as stack:
+        urls = [stack.enter_context(_daemon(s)) for s in svcs]
+        for svc, url in zip(svcs, urls):
+            svc.configure_mesh(
+                MeshConfig.build(url, urls, replication=replication))
+        yield svcs, urls
+
+
+def _fleet_client(urls):
+    return ResilientClient(urls, max_retries=8, breaker_threshold=99,
+                           seed=0, sleep=_noop_sleep, timeout=120.0)
+
+
+def _total_simulated(svcs):
+    return sum(s.counters["simulated"] for s in svcs)
+
+
+# ---------------------------------------------------- rendezvous hashing
+
+def test_rendezvous_ranking_deterministic_and_monotone():
+    """Same inputs -> same ranking, and removing one member never
+    reorders the survivors (the property failover leans on: the ranking
+    minus a dead owner IS the replica walk order)."""
+    members = [f"http://node{i}:8321" for i in range(5)]
+    keys = [f"key-{i}" for i in range(50)]
+    for key in keys:
+        full = rendezvous_ranking(key, members)
+        assert full == rendezvous_ranking(key, list(reversed(members)))
+        for gone in members:
+            survivors = rendezvous_ranking(
+                key, [m for m in members if m != gone])
+            assert survivors == [m for m in full if m != gone]
+    # Ownership spreads: with 50 keys over 5 members, no member owns
+    # everything (sha256 would have to be wildly biased).
+    owners = {rendezvous_ranking(k, members)[0] for k in keys}
+    assert len(owners) > 1
+
+
+def test_mesh_config_build_normalizes():
+    cfg = MeshConfig.build(
+        "http://a:1/", ["http://b:2/", "http://a:1", " http://b:2 ",
+                        "http://c:3", ""], replication=3)
+    assert cfg.self_url == "http://a:1"
+    assert cfg.peers == ("http://b:2", "http://c:3")
+    assert cfg.members == ("http://a:1", "http://b:2", "http://c:3")
+    assert cfg.replication == 3
+    # Replication beyond membership is capped by targets(), not rejected.
+    big = MeshConfig.build("http://a:1", ["http://b:2"], replication=5)
+    assert len(big.targets("anything")) == 2
+    with pytest.raises(ValueError):
+        MeshConfig.build("http://a:1", [], replication=0)
+    with pytest.raises(ValueError):
+        MeshConfig(self_url="", peers=())
+
+
+def test_mesh_config_ranking_roles():
+    cfg = MeshConfig.build("http://a:1", ["http://b:2", "http://c:3"],
+                           replication=2)
+    for key in (f"k{i}" for i in range(20)):
+        ranking = cfg.ranking(key)
+        assert cfg.owner(key) == ranking[0]
+        assert cfg.targets(key) == ranking[:2]
+        assert cfg.self_url not in cfg.replica_targets(key)
+        order = cfg.fetch_order(key)
+        if cfg.owner(key) == cfg.self_url:
+            assert order == []          # we own it: simulate, don't ask
+        else:
+            assert order[0] == cfg.owner(key)
+            assert cfg.self_url not in order
+
+
+def test_mesh_config_from_env(monkeypatch):
+    monkeypatch.delenv(mesh_mod.ENV_PEERS, raising=False)
+    monkeypatch.delenv(mesh_mod.ENV_SELF, raising=False)
+    assert MeshConfig.from_env() is None
+    monkeypatch.setenv(mesh_mod.ENV_PEERS, "http://a:1, http://b:2")
+    with pytest.raises(ValueError):    # peers without a self URL: loud
+        MeshConfig.from_env()
+    monkeypatch.setenv(mesh_mod.ENV_SELF, "http://a:1")
+    monkeypatch.setenv(mesh_mod.ENV_REPLICATION, "3")
+    cfg = MeshConfig.from_env()
+    assert cfg.self_url == "http://a:1"
+    assert cfg.peers == ("http://b:2",)
+    assert cfg.replication == 3
+
+
+def test_sweep_service_reads_mesh_env(tmp_path, monkeypatch):
+    monkeypatch.setenv(mesh_mod.ENV_PEERS, "http://a:1,http://b:2")
+    monkeypatch.setenv(mesh_mod.ENV_SELF, "http://a:1")
+    svc = SweepService(str(tmp_path / "env"), persist_traces=False)
+    assert svc.mesh is not None and svc.mesh.peers == ("http://b:2",)
+    # mesh=False suppresses the env path (the CLI's pre-bind state).
+    off = SweepService(str(tmp_path / "off"), persist_traces=False,
+                       mesh=False)
+    assert off.mesh is None
+    assert off.mesh_stats() == {"enabled": False}
+
+
+# ------------------------------------------- read-through + replication
+
+def _pick_cell(mesh_cfg, owner_url):
+    """A (bench, cfg, seed) whose rendezvous owner is `owner_url`."""
+    cfg = machines.baseline(8)
+    for seed in range(64):
+        key = cell_key("BFS", cfg, 128, seed)
+        if mesh_cfg.owner(key) == owner_url:
+            return "BFS", cfg, seed, key
+    raise AssertionError("no cell owned by that daemon in 64 seeds")
+
+
+def test_local_miss_reads_through_to_owner(tmp_path):
+    """A non-owner's cold /cell is served by the owner: exactly one
+    simulation fleet-wide, source "peer" at the requester, and the
+    result is adopted into the requester's own (disjoint) cache."""
+    with mesh_trio(tmp_path) as (svcs, urls):
+        bench, cfg, seed, key = _pick_cell(svcs[0].mesh, urls[0])
+        requester = next(s for s, u in zip(svcs, urls) if u != urls[0])
+        res, src = requester.cell_with_source(bench, cfg, 128, seed)
+        assert src == "peer"
+        assert svcs[0].counters["simulated"] == 1
+        assert svcs[0].counters["peer_serves"] == 1
+        assert requester.counters["simulated"] == 0
+        assert requester.counters["peer_hits"] == 1
+        assert requester.cache.contains(key)    # adopted locally
+        # Owner asked directly: plain simulation, no forward loop.
+        assert _total_simulated(svcs) == 1
+        ref = api.Session().run(
+            Study(machines={"ws8": cfg}, benches=(bench,), n_threads=128,
+                  seeds=(seed,)))
+        assert res == ref.records[0].result
+
+
+def test_owner_simulation_replicates_to_successors(tmp_path):
+    """The owner's freshly simulated cell lands on exactly the
+    replication-1 successors — and NOT on the remaining member."""
+    with mesh_trio(tmp_path, replication=2) as (svcs, urls):
+        bench, cfg, seed, key = _pick_cell(svcs[0].mesh, urls[0])
+        svcs[0].cell(bench, cfg, 128, seed)
+        targets = svcs[0].mesh.targets(key)
+        assert targets[0] == urls[0] and len(targets) == 2
+        for svc, url in zip(svcs, urls):
+            if url == urls[0]:
+                continue
+            assert svc.cache.contains(key) == (url in targets)
+        assert svcs[0].counters["replicas_sent"] == 1
+        replica = next(s for s, u in zip(svcs, urls)
+                       if u in targets and u != urls[0])
+        assert replica.counters["replicas_adopted"] == 1
+
+
+def test_mesh_study_disjoint_roots_bit_identical(tmp_path):
+    """The tentpole contract, fault-free half: a study through a 3-daemon
+    mesh over disjoint roots simulates every cell exactly once
+    fleet-wide, returns records bit-identical to in-process, and a warm
+    re-study via a *different* daemon simulates nothing new (read-through
+    + replicas serve it all)."""
+    study = _study(seeds=(0, 1))
+    cells = len(study.cells())
+    reference = api.Session().run(study)
+    with mesh_trio(tmp_path) as (svcs, urls):
+        res = Session(backend=ServiceBackend(
+            client=_fleet_client(urls))).run(study)
+        assert res.records == reference.records
+        assert _total_simulated(svcs) == cells
+        assert res.stats["simulated"] + res.stats["peer_hits"] \
+            + res.stats["cache_hits"] + res.stats["dedup_waits"] == cells
+        # Warm pass pointed at one *other* daemon only: zero new sims.
+        warm = SweepClient(urls[2], timeout=120.0).study(study)
+        assert warm.records == reference.records
+        assert _total_simulated(svcs) == cells
+        assert warm.stats["simulated"] == 0
+
+
+def test_owner_killed_mid_study_bounded_duplicates(tmp_path):
+    """The tentpole acceptance scenario: the daemon serving the /study
+    dies after K simulated cells; the ResilientClient fails over, the
+    successor re-serves from replicas + read-through, records stay
+    bit-identical, and duplicate simulations are bounded by the
+    replication factor. No raw urllib exception escapes Session.run.
+
+    Ownership depends on the daemons' ephemeral-port URLs, so the victim
+    is picked after bind: the daemon owning the most of the study's
+    cells (pigeonhole over 8 cells / 3 members: >= 3) serves the study
+    and is killed on its 3rd simulated cell — the kill always fires."""
+    study = _study(seeds=(0, 1))
+    spec = study.to_spec()
+    cells = len(spec.cells())
+    reference = api.Session().run(study)
+    replication = 2
+    with mesh_trio(tmp_path, replication=replication) as (svcs, urls):
+        owned = {u: 0 for u in urls}
+        for _m, cfg, bench, n_threads, seed in spec.cells():
+            owned[svcs[0].mesh.owner(
+                cell_key(bench, cfg, n_threads, seed))] += 1
+        victim = max(urls, key=lambda u: owned[u])
+        vidx = urls.index(victim)
+        assert owned[victim] >= 3, owned
+        svcs[vidx].fault_plan = FaultPlan.from_spec(
+            "service.cell:kill,after=2")
+        client = _fleet_client([victim] + [u for u in urls if u != victim])
+        res = Session(backend=ServiceBackend(client=client)).run(study)
+        assert res.records == reference.records
+        assert svcs[vidx].dead, "injected kill never fired"
+        assert client.client_stats()["failovers"] >= 1
+        duplicates = _total_simulated(svcs) - cells
+        assert 0 <= duplicates <= replication, \
+            f"{duplicates} duplicate sims for replication={replication}"
+
+
+def test_drain_during_forward_falls_back_locally(tmp_path):
+    """A draining owner 503s the forwarded read-through; the requester
+    counts a fallback and simulates locally — correct result, no error."""
+    with mesh_trio(tmp_path) as (svcs, urls):
+        bench, cfg, seed, key = _pick_cell(svcs[0].mesh, urls[0])
+        out = SweepClient(urls[0], timeout=30.0).drain(wait_seconds=0.1)
+        assert out["draining"]
+        requester = next(s for s, u in zip(svcs, urls) if u != urls[0])
+        res, src = requester.cell_with_source(bench, cfg, 128, seed)
+        assert src == "simulated"
+        assert requester.counters["peer_fallbacks"] == 1
+        assert requester.counters["peer_hits"] == 0
+        assert svcs[0].counters["simulated"] == 0
+        ref = api.Session().run(
+            Study(machines={"ws8": cfg}, benches=(bench,), n_threads=128,
+                  seeds=(seed,)))
+        assert res == ref.records[0].result
+
+
+def test_full_partition_degrades_to_local_simulation(tmp_path):
+    """Every peer unreachable: the daemon simulates everything itself,
+    records bit-identical, peer_hits zero — the mesh is an optimization,
+    never a correctness dependency."""
+    study = _study(seeds=(0, 1))
+    reference = api.Session().run(study)
+    svc = SweepService(str(tmp_path / "lone"), persist_traces=False,
+                       mesh=False)
+    with _daemon(svc) as url:
+        svc.configure_mesh(MeshConfig.build(
+            url, [url, _dead_url(), _dead_url()], replication=2))
+        res = SweepClient(url, timeout=120.0).study(study)
+    assert res.records == reference.records
+    assert svc.counters["simulated"] == len(study.cells())
+    assert svc.counters["peer_hits"] == 0
+    assert svc.counters["peer_fallbacks"] >= 1
+    assert res.stats["peer_hits"] == 0
+
+
+def test_peer_cell_key_mismatch_rejected(tmp_path):
+    """Version/model skew guard: a forwarded request whose claimed key
+    doesn't match the peer's own computation is a 400, not a silent
+    wrong-key cache poisoning."""
+    with mesh_trio(tmp_path) as (svcs, urls):
+        with pytest.raises(ServiceError) as ei:
+            SweepClient(urls[0], timeout=30.0)._get(
+                "/peer/cell?bench=BFS&machine=ws8&n_threads=128"
+                "&key=deadbeef")
+        assert ei.value.code == 400
+        assert not ei.value.is_transient
+
+
+# -------------------------------------------------- queue-job federation
+
+def test_queue_job_replicated_and_adopted_cross_daemon(tmp_path):
+    """A job enqueued on daemon A is leaseable from a sibling even after
+    A dies: the snapshot was replicated on enqueue and the sibling
+    adopts it on first touch."""
+    spec = _study(benches=("BFS",)).to_spec()
+    cells = len(spec.cells())
+    with mesh_trio(tmp_path) as (svcs, urls):
+        job = svcs[0].enqueue(spec, chunk_size=2, lease_seconds=60.0)
+        assert svcs[0].counters["jobs_replicated"] >= 1
+        assert sum(s.counters["job_replicas_received"]
+                   for s in svcs[1:]) >= 1
+        svcs[0].kill()      # enqueuing daemon plays dead
+        n = run_worker(urls, job["job"], worker_id="mesh-w1",
+                       poll_seconds=0.01, sleep=_noop_sleep)
+        assert n == cells
+        adopters = [s for s in svcs[1:]
+                    if s.counters["jobs_adopted_from_peers"]]
+        assert len(adopters) == 1
+        status = adopters[0].queue_status(job["job"])
+        assert status["completed"] == status["chunks"] > 0
+
+
+def test_queue_backend_survives_enqueuing_daemon_death(tmp_path):
+    """The QueueBackend un-pinning satellite, end-to-end: the daemon that
+    took the enqueue is killed on the first lease; the worker rotates to
+    a sibling, which adopts the job from its replica; the study result
+    is bit-identical to in-process."""
+    study = _study(seeds=(0, 1))
+    reference = api.Session().run(study)
+    plans = (FaultPlan.from_spec("server/queue/lease:kill,times=1"),
+             None, None)
+    with mesh_trio(tmp_path, fault_plans=plans) as (svcs, urls):
+        client = _fleet_client(urls)
+        res = Session(backend=QueueBackend(
+            client=client, chunk_size=2, poll_seconds=0.01)).run(study)
+        assert res.records == reference.records
+        assert svcs[0].dead, "injected kill never fired"
+        assert res.stats["queue_cells_computed"] == len(study.cells())
+        assert sum(s.counters["jobs_adopted_from_peers"]
+                   for s in svcs[1:]) == 1
+
+
+def test_job_replica_survives_daemon_restart(tmp_path):
+    """replica.<job>.json round-trips a restart: a fresh daemon over the
+    replica holder's root still adopts the job with no peers alive."""
+    spec = _study(benches=("BFS",), seeds=(0,)).to_spec()
+    with mesh_trio(tmp_path) as (svcs, urls):
+        job = svcs[0].enqueue(spec, chunk_size=4, lease_seconds=60.0)
+        holder_idx = next(i for i in (1, 2)
+                          if svcs[i].counters["job_replicas_received"])
+    heir = SweepService(str(tmp_path / f"root{holder_idx}"),
+                        persist_traces=False, mesh=False)
+    status = heir.queue_status(job["job"])      # adopts from replica file
+    assert status["chunks"] == job["chunks"]
+    assert heir.counters["jobs_adopted_from_peers"] == 1
+
+
+# ----------------------------------------------------- worker fleet arg
+
+def test_worker_urls_accepts_all_fleet_shapes():
+    assert _worker_urls("http://a:1") == ["http://a:1"]
+    assert _worker_urls(" http://a:1/ , http://b:2,http://a:1") \
+        == ["http://a:1", "http://b:2"]
+    assert _worker_urls(["http://a:1/", "http://b:2"]) \
+        == ["http://a:1", "http://b:2"]
+    rc = ResilientClient(["http://a:1", "http://b:2"])
+    assert _worker_urls(rc) == ["http://a:1", "http://b:2"]
+    sc = SweepClient("http://a:1/")
+    assert _worker_urls(sc) == ["http://a:1"]
+    with pytest.raises(ValueError):
+        _worker_urls("  ,  ")
+
+
+def test_worker_rotates_on_unknown_job_and_raises_when_all_refuse(
+        tmp_path):
+    """Two NON-mesh daemons over disjoint roots: the job lives only on
+    B. A worker given [A, B] gets A's definite 400, rotates to B, and
+    drains — but a job nobody knows still dies loudly fleet-wide."""
+    svc_a = SweepService(str(tmp_path / "a"), persist_traces=False,
+                         mesh=False)
+    svc_b = SweepService(str(tmp_path / "b"), persist_traces=False,
+                         mesh=False)
+    spec = _study(benches=("BFS",), seeds=(0,)).to_spec()
+    with _daemon(svc_a) as url_a, _daemon(svc_b) as url_b:
+        job = svc_b.enqueue(spec, chunk_size=4, lease_seconds=60.0)
+        n = run_worker([url_a, url_b], job["job"], worker_id="rot-w1",
+                       poll_seconds=0.01, sleep=_noop_sleep)
+        assert n == len(spec.cells())
+        assert svc_b.queue_status(job["job"])["completed"] > 0
+        with pytest.raises(ServiceError) as ei:
+            run_worker([url_a, url_b], "job-nobody-1", sleep=_noop_sleep)
+        assert ei.value.code == 400
+
+
+def test_worker_survives_enqueuing_daemon_death_via_fleet(tmp_path):
+    """The satellite headline: run_worker given the whole fleet keeps
+    draining when the enqueuing daemon dies mid-job (transient failures
+    rotate; the mesh sibling adopts)."""
+    spec = _study(seeds=(0,)).to_spec()
+    cells = len(spec.cells())
+    plans = (FaultPlan.from_spec("server/queue/renew:kill,times=1"),
+             None, None)
+    with mesh_trio(tmp_path, fault_plans=plans) as (svcs, urls):
+        job = svcs[0].enqueue(spec, chunk_size=2, lease_seconds=60.0)
+        n = run_worker(urls, job["job"], worker_id="die-w1",
+                       poll_seconds=0.01, sleep=_noop_sleep)
+        assert svcs[0].dead
+        assert n >= cells   # >= — the killed daemon's chunk may recompute
+        survivor = next(s for s in svcs[1:]
+                        if s.counters["jobs_adopted_from_peers"])
+        assert survivor.queue_status(job["job"])["completed"] > 0
+
+
+# ------------------------------------------------------- observability
+
+def test_stats_and_healthz_surface_mesh_state(tmp_path):
+    with mesh_trio(tmp_path) as (svcs, urls):
+        svcs[1].cell("BFS", machines.baseline(8), 128, 0)
+        client = SweepClient(urls[1], timeout=30.0)
+        stats = client.stats()["mesh"]
+        assert stats["enabled"] is True
+        assert stats["self"] == urls[1]
+        assert sorted(stats["peers"]) == sorted(
+            [urls[0], urls[2]])
+        assert stats["replication"] == 2
+        for k in ("peer_forwards", "peer_hits", "peer_fallbacks",
+                  "peer_serves", "replicas_sent", "replicas_adopted",
+                  "replica_send_failures", "jobs_replicated",
+                  "jobs_adopted_from_peers", "job_replicas_held"):
+            assert k in stats
+        health = client.healthz()["mesh"]
+        assert health["enabled"] is True and health["self"] == urls[1]
+    lone = SweepService(str(tmp_path / "nomesh"), persist_traces=False,
+                        mesh=False)
+    with _daemon(lone) as url:
+        c = SweepClient(url, timeout=30.0)
+        assert c.stats()["mesh"] == {"enabled": False}
+        assert c.healthz()["mesh"] == {"enabled": False}
