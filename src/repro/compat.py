@@ -37,6 +37,20 @@ def pallas():
     return pl
 
 
+def jax_modules():
+    """``(jax, jax.numpy, jax.sharding)`` via the blessed import point.
+
+    Modules outside the jax-containment allowlist (``compat.py``,
+    ``warpsim/_pallas.py`` — see the ``jax-containment`` rule of
+    :mod:`repro.core.warpsim.lint`) must not ``import jax`` directly;
+    they bind the modules from here instead, so version-drift shims keep
+    one choke point and new jax surface is reviewed in one place.
+    """
+    import jax.numpy
+    import jax.sharding
+    return jax, jax.numpy, jax.sharding
+
+
 def enable_x64():
     """Context manager scoping 64-bit jax types to the enclosed block.
 

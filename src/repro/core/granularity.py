@@ -30,13 +30,16 @@ from __future__ import annotations
 
 from typing import Optional, Tuple
 
-import jax
-import jax.numpy as jnp
-from jax.sharding import Mesh, PartitionSpec as P
-
+# jax-containment (warpsim-lint): repro.core modules bind jax through the
+# compat choke point instead of importing it — version-drift shims stay
+# in one reviewed place.
 from repro import compat
 from repro.models import moe as moe_mod
 from repro.models.config import ModelConfig
+
+jax, jnp, _jax_sharding = compat.jax_modules()
+Mesh = _jax_sharding.Mesh
+P = _jax_sharding.PartitionSpec
 
 _MESH: Optional[Mesh] = None
 _DP = None

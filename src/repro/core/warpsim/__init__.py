@@ -32,6 +32,39 @@ Timing engines (``simulate(..., engine=...)`` — all bit-identical):
     event         reference event loop (the model's ground truth)
     ============= ===================================================
 
+Environment variables (the full table; every read goes through
+``repro.core.warpsim.envcfg``, which owns each name, default, and doc —
+the ``env-registry`` rule of ``repro.core.warpsim.lint`` rejects raw
+``os.environ`` reads, and ``tests/test_lint.py`` keeps this list in sync
+with the registry):
+
+    ====================== ==============================================
+    variable               meaning (default)
+    ====================== ==============================================
+    WARPSIM_BACKEND        force the Session backend: inprocess |
+                           service | queue (unset: prefer a live daemon)
+    WARPSIM_SERVICE_URL    single daemon URL -> plain SweepClient
+    WARPSIM_SERVICE_URLS   comma-separated fleet -> ResilientClient
+    WARPSIM_PEERS          comma-separated mesh peers (disjoint roots)
+    WARPSIM_SELF_URL       this daemon's own peer-visible URL
+    WARPSIM_REPLICATION    copies per cell/job across the mesh (2)
+    WARPSIM_FAULTS         chaos plan; grammar + points in ``faults``
+    WARPSIM_NATIVE         C core kill switch: 0|no|off -> pure Python
+                           engines (on; re-read per call)
+    WARPSIM_NATIVE_DIR     build dir for the compiled C core (per-user
+                           tmpdir; refused when not owner-writable-only)
+    WARPSIM_PALLAS         device engine kill switch: 0|no|off -> flat
+                           CSR engines (on; re-read per call)
+    ====================== ==============================================
+
+Static invariants: ``python -m repro.core.warpsim.lint`` (CI job
+``invariant-lint``) enforces jax containment behind ``repro.compat``,
+typed ``ServiceError`` HTTP boundaries, ``# guarded-by:`` lock
+discipline on module state, determinism of the cache-key/timing
+modules, the ``faults.KNOWN_POINTS`` fault-point registry, and the env
+registry above. See the ``lint`` module docstring for the rule table
+and the suppression syntax.
+
 Serving runbook (the daemon fleet; full details in ROADMAP.md):
 
     WARPSIM_SERVICE_URLS   comma-separated daemon URLs; clients built by

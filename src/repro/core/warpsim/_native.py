@@ -36,6 +36,8 @@ from typing import Optional
 
 import numpy as np
 
+from repro.core.warpsim import envcfg
+
 _C_SOURCE = r"""
 #include <stdint.h>
 #include <stdlib.h>
@@ -665,15 +667,13 @@ _load_attempted = False
 _load_error: Optional[str] = None   # why the core is unavailable, if it is
 _warned = False
 
-_DISABLED_VALUES = ("0", "no", "off")
-
 
 def _env_disabled() -> bool:
-    return os.environ.get("WARPSIM_NATIVE", "1") in _DISABLED_VALUES
+    return not envcfg.enabled("WARPSIM_NATIVE")
 
 
 def _build_dir() -> Optional[str]:
-    d = os.environ.get("WARPSIM_NATIVE_DIR")
+    d = envcfg.get("WARPSIM_NATIVE_DIR")
     if not d:
         d = os.path.join(tempfile.gettempdir(),
                          f"warpsim-native-{os.getuid()}")

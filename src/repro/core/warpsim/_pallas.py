@@ -44,7 +44,7 @@ from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
-_DISABLED_VALUES = ("0", "no", "off")
+from repro.core.warpsim import envcfg
 
 # Completed device launches (one per simulated family batch), for the
 # one-launch-per-family assertions in tests and bench smoke.
@@ -59,7 +59,7 @@ _warned = False
 
 def _env_disabled() -> bool:
     """Kill switch, re-read per call (live daemons honor flips)."""
-    return os.environ.get("WARPSIM_PALLAS", "1") in _DISABLED_VALUES
+    return not envcfg.enabled("WARPSIM_PALLAS")
 
 
 def _modules():

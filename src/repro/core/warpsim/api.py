@@ -69,6 +69,7 @@ import os
 import threading
 from typing import Dict, Iterator, Mapping, Optional, Tuple
 
+from repro.core.warpsim import envcfg
 from repro.core.warpsim import machines as machines_mod
 from repro.core.warpsim import sweep as sweep_mod
 from repro.core.warpsim.config import MachineConfig
@@ -618,12 +619,12 @@ class Session:
         fallback on the same URL is entitled to.
         """
         from repro.core.warpsim import service as service_mod
-        choice = (os.environ.get(ENV_BACKEND) or "").strip().lower() or None
+        choice = (envcfg.get(ENV_BACKEND) or "").strip().lower() or None
         if choice in ("inprocess", "in-process", "local"):
             return cls(cache_dir=cache_dir, persist_traces=persist_traces)
         if choice in ("queue", "service"):
-            fleet = (os.environ.get(service_mod.ENV_URLS) or "").strip()
-            url = os.environ.get(service_mod.ENV_URL)
+            fleet = (envcfg.get(service_mod.ENV_URLS) or "").strip()
+            url = envcfg.get(service_mod.ENV_URL)
             if not fleet and not url:
                 raise ValueError(
                     f"{ENV_BACKEND}={choice} requires {service_mod.ENV_URL} "

@@ -1,0 +1,123 @@
+"""Central registry of every ``WARPSIM_*`` environment variable.
+
+PR 8 left ten-plus scattered ``os.environ`` call sites across the
+warpsim package, each with its own inline default and its own docs (or
+none — ``WARPSIM_NATIVE_DIR`` was read but documented nowhere). This
+module is the single source of truth: every variable has a name, a
+default, and a doc string here, and every *read* goes through the
+accessors below. The ``env-registry`` rule of
+:mod:`repro.core.warpsim.lint` mechanically enforces the routing — a raw
+``os.environ`` read of a ``WARPSIM_*`` name anywhere else in the tree is
+a lint error.
+
+Reads are live (no caching): kill switches like ``WARPSIM_NATIVE=0`` /
+``WARPSIM_PALLAS=0`` are re-read per call so a flip on a running daemon
+takes effect without a restart, and tests monkeypatching ``os.environ``
+see their patches immediately.
+
+Writes are out of scope — tests and the smoke harnesses set
+``os.environ`` directly to configure child processes, and that is fine;
+the invariant is that *consumption* is centralized.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Dict, Optional, Tuple
+
+#: Values that switch an enabled-by-default feature off (the historical
+#: ``WARPSIM_NATIVE`` contract; deliberately NOT including "false" so the
+#: accepted spellings never drift between engines).
+DISABLED_VALUES: Tuple[str, ...] = ("0", "no", "off")
+
+
+@dataclasses.dataclass(frozen=True)
+class EnvVar:
+    """One registered variable: its name, default, and operator docs."""
+
+    name: str
+    default: Optional[str]
+    doc: str
+
+
+#: Every WARPSIM_* variable the stack reads, in one table. The runbook in
+#: ``warpsim/__init__`` renders from the same facts, and
+#: ``tests/test_lint.py`` asserts the two stay in sync.
+VARIABLES: Tuple[EnvVar, ...] = (
+    EnvVar("WARPSIM_BACKEND", None,
+           "Force the Session backend: inprocess | service | queue. "
+           "Forced remote backends fail loudly when no daemon is live."),
+    EnvVar("WARPSIM_SERVICE_URL", None,
+           "Single sweep-daemon URL; clients get a plain SweepClient "
+           "(legacy, superseded by WARPSIM_SERVICE_URLS)."),
+    EnvVar("WARPSIM_SERVICE_URLS", None,
+           "Comma-separated daemon fleet; clients get a ResilientClient "
+           "(retry + backoff + failover + circuit breaker)."),
+    EnvVar("WARPSIM_PEERS", "",
+           "Comma-separated peer URLs: federate daemons into a mesh over "
+           "disjoint cache roots (rendezvous-hash ownership, "
+           "read-through, replication)."),
+    EnvVar("WARPSIM_SELF_URL", "",
+           "This daemon's own peer-visible URL; required whenever "
+           "WARPSIM_PEERS is set (or pass --advertise-url)."),
+    EnvVar("WARPSIM_REPLICATION", None,
+           "Copies of each cell/queue-job across the mesh, owner "
+           "included (default 2)."),
+    EnvVar("WARPSIM_FAULTS", None,
+           "Deterministic fault-injection plan for chaos tests; grammar "
+           "and the known fault points live in warpsim.faults "
+           "(KNOWN_POINTS)."),
+    EnvVar("WARPSIM_NATIVE", "1",
+           "Kill switch for the compiled C timing/aggregation core: "
+           "0|no|off falls back to the pure-Python engines. Re-read per "
+           "call."),
+    EnvVar("WARPSIM_NATIVE_DIR", None,
+           "Directory for the compiled C core's build artifacts (default "
+           "a per-user tmpdir; refused if another user could write it)."),
+    EnvVar("WARPSIM_PALLAS", "1",
+           "Kill switch for the JAX/Pallas device engine: 0|no|off falls "
+           "back to the flat-CSR engines. Re-read per call."),
+)
+
+# Name -> EnvVar lookup for the accessors.
+REGISTRY: Dict[str, EnvVar] = {v.name: v for v in VARIABLES}  # guarded-by: frozen
+
+
+def get(name: str) -> Optional[str]:
+    """The live value of a *registered* variable (else its default).
+
+    Unregistered names raise ``KeyError`` — registration (name, default,
+    doc) is the point of this module, and the lint rule's allowlist only
+    trusts reads that went through here.
+    """
+    try:
+        var = REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"{name!r} is not a registered warpsim env var; add it to "
+            f"repro.core.warpsim.envcfg.VARIABLES (known: "
+            f"{', '.join(sorted(REGISTRY))})") from None
+    return os.environ.get(var.name, var.default)
+
+
+def enabled(name: str) -> bool:
+    """True unless the variable is set to one of :data:`DISABLED_VALUES`.
+
+    The contract of the ``WARPSIM_NATIVE`` / ``WARPSIM_PALLAS`` kill
+    switches: on by default, and only the historical spellings disable.
+    """
+    return (get(name) or "") not in DISABLED_VALUES
+
+
+def get_int(name: str) -> Optional[int]:
+    """Integer value of a registered variable, or None when unset/empty."""
+    raw = get(name)
+    if raw is None or not str(raw).strip():
+        return None
+    return int(raw)
+
+
+def describe() -> Dict[str, Dict[str, Optional[str]]]:
+    """The full table (name -> default/doc), for /stats-style surfaces."""
+    return {v.name: {"default": v.default, "doc": v.doc} for v in VARIABLES}

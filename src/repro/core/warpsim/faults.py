@@ -59,14 +59,54 @@ from __future__ import annotations
 
 import dataclasses
 import fnmatch
-import os
 import random
 import threading
 from typing import Dict, List, Optional, Sequence
 
+from repro.core.warpsim import envcfg
+
 ENV_FAULTS = "WARPSIM_FAULTS"
 
 ACTIONS = ("drop", "kill", "corrupt", "error", "delay")
+
+#: Every fault point the stack consults, pattern -> one-line doc. This is
+#: the registry behind the ``WARPSIM_FAULTS`` grammar above: a ``point``
+#: in a spec only ever matches operations that flow through one of these,
+#: and every ``fault_point(...)`` call site is validated against it — at
+#: runtime by :func:`fault_point`, statically by the ``fault-registry``
+#: rule of :mod:`repro.core.warpsim.lint`. Chaos plans therefore cannot
+#: silently drift from the points the daemons actually check:
+#: registering a new point here (with its docstring entry above) is the
+#: only way to add one.
+KNOWN_POINTS: Dict[str, str] = {  # guarded-by: frozen
+    "server/*": "daemon, before a request to <path> is handled",
+    "response/*": "daemon, after handling <path>: drop the response",
+    "service.cell": "daemon, per simulated cell (marker = cell key)",
+    "worker.lease": "work_queue.run_worker, around the lease call",
+    "worker.renew": "work_queue.run_worker, around the renew call",
+    "worker.complete": "work_queue.run_worker, around the complete call",
+    "client.request": "ResilientClient, before an attempt leaves",
+    "peer.forward": "mesh daemon, before a cell/job read-through",
+    "peer.replicate": "mesh daemon, before a replica push",
+}
+
+
+def fault_point(point: str) -> str:
+    """Validate ``point`` against :data:`KNOWN_POINTS` and return it.
+
+    Every ``FaultPlan.check`` call site names its point through this
+    helper, so a typo'd or unregistered point fails the *instrumented
+    code* immediately instead of silently never matching any chaos plan.
+    Dynamic points (``"server" + path``, ``f"worker.{kind}"``) are
+    validated here at runtime; literal points are additionally checked
+    statically by warpsim-lint.
+    """
+    for pattern in KNOWN_POINTS:
+        if point == pattern or fnmatch.fnmatchcase(point, pattern):
+            return point
+    raise ValueError(
+        f"unknown fault point {point!r}: register it in "
+        f"faults.KNOWN_POINTS (known: {', '.join(sorted(KNOWN_POINTS))})")
 
 
 class ServiceError(RuntimeError):
@@ -262,7 +302,7 @@ class FaultPlan:
     @classmethod
     def from_env(cls, var: str = ENV_FAULTS) -> Optional["FaultPlan"]:
         """Plan from ``$WARPSIM_FAULTS``, or ``None`` when unset/empty."""
-        spec = os.environ.get(var)
+        spec = envcfg.get(var)
         if not spec or not spec.strip():
             return None
         return cls.from_spec(spec)

@@ -46,8 +46,9 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
-import os
 from typing import List, Optional, Sequence, Tuple
+
+from repro.core.warpsim import envcfg
 
 ENV_PEERS = "WARPSIM_PEERS"
 ENV_SELF = "WARPSIM_SELF_URL"
@@ -128,19 +129,18 @@ class MeshConfig:
         itself in the ranking would silently forward work it owns, so a
         half-configured mesh fails loudly instead.
         """
-        peers = os.environ.get(ENV_PEERS, "")
+        peers = envcfg.get(ENV_PEERS) or ""
         peer_list = [p for p in (s.strip() for s in peers.split(","))
                      if p]
         if not peer_list:
             return None
-        me = self_url or os.environ.get(ENV_SELF, "")
+        me = self_url or envcfg.get(ENV_SELF) or ""
         if not _norm_url(me):
             raise ValueError(
                 f"${ENV_PEERS} is set but this daemon's own URL is "
                 f"unknown — set ${ENV_SELF} (or pass --advertise-url)")
-        rep = os.environ.get(ENV_REPLICATION)
         return cls.build(me, peer_list,
-                         replication=int(rep) if rep else None)
+                         replication=envcfg.get_int(ENV_REPLICATION))
 
     # ------------------------------------------------------------ ranking
 

@@ -89,8 +89,10 @@ from repro.core.warpsim.api import (
     RunRecord, Session, Study, StudyResult,
 )
 from repro.core.warpsim.config import MachineConfig
+from repro.core.warpsim import envcfg
 from repro.core.warpsim.faults import (
     Fault, FaultError, FaultPlan, ServiceError, ServiceUnavailable,
+    fault_point,
 )
 from repro.core.warpsim import mesh as mesh_mod
 from repro.core.warpsim.mesh import MeshConfig
@@ -129,7 +131,7 @@ def _coerce(value: str, proto) -> object:
 
 
 _CONFIG_PROTO = MachineConfig()
-_CONFIG_FIELDS = {f.name: getattr(_CONFIG_PROTO, f.name)
+_CONFIG_FIELDS = {f.name: getattr(_CONFIG_PROTO, f.name)  # guarded-by: frozen
                   for f in dataclasses.fields(MachineConfig)}
 
 
@@ -523,7 +525,7 @@ class SweepService:
             # future resolved — a killed daemon's completed cells stay
             # reachable (shared root or replicas), which is what makes
             # failover re-simulate (almost) nothing.
-            fault = self.check_fault("service.cell", marker=key)
+            fault = self.check_fault(fault_point("service.cell"), marker=key)
             if fault is not None:
                 if fault.action == "kill":
                     self.kill()
@@ -563,7 +565,7 @@ class SweepService:
             params["n_threads"] = str(n_threads)
         for rank, target in enumerate(order):
             self.bump("peer_forwards")
-            fault = self.check_fault("peer.forward",
+            fault = self.check_fault(fault_point("peer.forward"),
                                      marker=f"{key}@{target}")
             if fault is not None:
                 continue                    # injected: peer unreachable
@@ -627,7 +629,7 @@ class SweepService:
         by_target: Dict[str, List[dict]] = {}
         for key, res in items:
             for target in mesh.replica_targets(key):
-                fault = self.check_fault("peer.replicate",
+                fault = self.check_fault(fault_point("peer.replicate"),
                                          marker=f"{key}@{target}")
                 if fault is not None:
                     self.bump("replica_send_failures")
@@ -665,7 +667,7 @@ class SweepService:
             return
         sent = 0
         for target in mesh.job_targets(job):
-            fault = self.check_fault("peer.replicate",
+            fault = self.check_fault(fault_point("peer.replicate"),
                                      marker=f"job:{job}@{target}")
             if fault is not None:
                 self.bump("replica_send_failures")
@@ -720,7 +722,7 @@ class SweepService:
         mesh = self.mesh
         if blob is None and mesh is not None:
             for target in mesh.peers:
-                fault = self.check_fault("peer.forward",
+                fault = self.check_fault(fault_point("peer.forward"),
                                          marker=f"job:{job}@{target}")
                 if fault is not None:
                     continue
@@ -1123,7 +1125,7 @@ class SweepRequestHandler(BaseHTTPRequestHandler):
         # of a GET also passes — the path including the query IS the op).
         marker = self.headers.get(OP_HEADER) or f"{self.command} {self.path}"
         self._drop_response = False
-        fault = svc.check_fault("server" + path, marker)
+        fault = svc.check_fault(fault_point("server" + path), marker)
         if fault is not None:
             if fault.action == "kill":
                 svc.kill()
@@ -1138,7 +1140,7 @@ class SweepRequestHandler(BaseHTTPRequestHandler):
                 return
             if fault.action == "delay":
                 time.sleep(fault.delay_s)
-        resp_fault = svc.check_fault("response" + path, marker)
+        resp_fault = svc.check_fault(fault_point("response" + path), marker)
         if resp_fault is not None and resp_fault.action == "drop":
             self._drop_response = True
         # A draining daemon refuses new simulation work — including a
@@ -1542,7 +1544,8 @@ class ResilientClient(SweepClient):
             prev_ep = ep
             attempts += 1
             self._bump("attempts")
-            fault = (self.fault_plan.check("client.request", marker=op)
+            fault = (self.fault_plan.check(fault_point("client.request"),
+                                           marker=op)
                      if self.fault_plan is not None else None)
             try:
                 if fault is not None:
@@ -1596,7 +1599,7 @@ class ResilientClient(SweepClient):
 # Dead URLs already warned about (once per (env var, url) per process):
 # every sweep of a figure run probing the same dead daemon must not emit
 # its own copy of the identical warning.
-_WARNED_DEAD_URLS: set = set()
+_WARNED_DEAD_URLS: set = set()  # guarded-by: _WARNED_LOCK
 _WARNED_LOCK = threading.Lock()
 
 
@@ -1627,7 +1630,7 @@ def from_env(var: str = ENV_URL, probe: bool = True
     (env var, URL): repeat callers get the silent fallback.
     """
     if var == ENV_URL:
-        fleet = os.environ.get(ENV_URLS)
+        fleet = envcfg.get(ENV_URLS)
         if fleet and fleet.strip():
             client = ResilientClient(fleet)
             if probe:
@@ -1637,7 +1640,7 @@ def from_env(var: str = ENV_URL, probe: bool = True
                     _warn_dead(ENV_URLS, fleet, e)
                     return None
             return client
-    url = os.environ.get(var)
+    url = envcfg.get(var)
     if not url:
         return None
     client = SweepClient(url)
@@ -1694,16 +1697,15 @@ def main(argv: Optional[List[str]] = None) -> None:
     httpd = serve(service, host=args.host, port=args.port,
                   quiet=not args.verbose)
     host, port = httpd.server_address[:2]
-    peers = args.peers or os.environ.get(mesh_mod.ENV_PEERS, "")
+    peers = args.peers or envcfg.get(mesh_mod.ENV_PEERS) or ""
     mesh_line = ""
     if peers.strip():
         self_url = (args.advertise_url
-                    or os.environ.get(mesh_mod.ENV_SELF)
+                    or envcfg.get(mesh_mod.ENV_SELF)
                     or f"http://{host}:{port}")
         replication = args.replication
         if replication is None:
-            rep_env = os.environ.get(mesh_mod.ENV_REPLICATION)
-            replication = int(rep_env) if rep_env else None
+            replication = envcfg.get_int(mesh_mod.ENV_REPLICATION)
         mesh = MeshConfig.build(
             self_url, [p for p in peers.split(",") if p.strip()],
             replication=replication)

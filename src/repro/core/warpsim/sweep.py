@@ -593,7 +593,7 @@ TRACE_CACHE = TraceCache(TRACE_CACHE_SIZE)
 # callers import it by value; updates are atomic under _STATS_LOCK.
 # Reads go through the module ``__getattr__`` below, which emits a
 # DeprecationWarning — no in-repo caller reads it anymore.
-_LAST_SWEEP_STATS: Dict[str, int] = {}
+_LAST_SWEEP_STATS: Dict[str, int] = {}  # guarded-by: _STATS_LOCK
 _STATS_LOCK = threading.Lock()
 
 

@@ -452,7 +452,7 @@ def _sr2() -> Workload:
     return Workload("SR2", prog, description="SRAD (small)")
 
 
-_FACTORIES = {
+_FACTORIES = {  # guarded-by: frozen
     "BFS": _bfs, "BKP": _bkp, "DYN": _dyn, "FWAL": _fwal, "GAS": _gas,
     "HSPT": _hspt, "MP": _mp, "MTM": _mtm, "MU": _mu, "NNC": _nnc,
     "NQU": _nqu, "NW": _nw, "SCN": _sc, "SR1": _sr1, "SR2": _sr2,

@@ -42,8 +42,9 @@ import urllib.request
 from typing import Dict, List, Mapping, Optional
 
 from repro.core.warpsim.config import MachineConfig
+from repro.core.warpsim import envcfg
 from repro.core.warpsim.faults import (
-    FaultPlan, ServiceError, ServiceUnavailable,
+    FaultPlan, ServiceError, ServiceUnavailable, fault_point,
 )
 from repro.core.warpsim.sweep import (
     Cell, cell_key, compute_cell, family_major_cells,
@@ -390,7 +391,8 @@ def run_worker(base_url, job: str, worker_id: Optional[str] = None,
         while True:
             base = bases[active[0] % len(bases)]
             send = body
-            fault = plan.check(f"worker.{kind}") if plan is not None else None
+            fault = (plan.check(fault_point(f"worker.{kind}"))
+                     if plan is not None else None)
             try:
                 if fault is not None:
                     if fault.action == "corrupt" and body is not None:
@@ -482,8 +484,8 @@ def main(argv: Optional[List[str]] = None) -> None:
     args = ap.parse_args(argv)
     # Env names are literals here: service.py imports this module, so the
     # constants (service.ENV_URL/ENV_URLS) can't be imported back.
-    urls = (args.url or os.environ.get("WARPSIM_SERVICE_URLS")
-            or os.environ.get("WARPSIM_SERVICE_URL"))
+    urls = (args.url or envcfg.get("WARPSIM_SERVICE_URLS")
+            or envcfg.get("WARPSIM_SERVICE_URL"))
     if not urls:
         ap.error("--url is required (or set WARPSIM_SERVICE_URLS / "
                  "WARPSIM_SERVICE_URL)")

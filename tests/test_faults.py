@@ -355,10 +355,14 @@ def test_server_error_fault_fires_once_per_operation(tmp_path):
     with _daemon(svc) as url:
         req = urllib.request.Request(url + "/healthz")
         with pytest.raises(urllib.error.HTTPError) as ei:
-            urllib.request.urlopen(req, timeout=5)
+            # Raw request on purpose: asserting the injected 503
+            # itself, which the typed client would retry away.
+            urllib.request.urlopen(  # warpsim-lint: disable=typed-http-boundary
+                req, timeout=5)
         assert ei.value.code == 503
         # A *retry* of the same logical op (same marker) goes through.
-        with urllib.request.urlopen(req, timeout=5) as resp:
+        with urllib.request.urlopen(  # warpsim-lint: disable=typed-http-boundary
+                req, timeout=5) as resp:
             assert resp.status == 200
     assert svc.counters["faults_injected"] == 1
 

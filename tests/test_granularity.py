@@ -1,6 +1,7 @@
 """The paper-technique engine: SW+ expert-parallel dispatch and the int8
 KV cache (the §Perf hillclimb features), tested on a real 2x2 device mesh."""
 
+import ast
 import dataclasses
 
 import jax
@@ -8,9 +9,30 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import compat
 from repro.core import granularity
 from repro.models import model as M, moe as moe_mod
 from repro.models.config import ModelConfig
+
+
+def test_granularity_binds_jax_through_compat():
+    """jax-containment regression: granularity.py must not import jax
+    directly — it binds the modules via ``compat.jax_modules()`` so
+    version-drift shims stay in one reviewed place."""
+    with open(granularity.__file__, encoding="utf-8") as fh:
+        tree = ast.parse(fh.read())
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            assert not any(a.name.split(".")[0] == "jax" for a in node.names), (
+                f"direct `import jax` at line {node.lineno}")
+        elif isinstance(node, ast.ImportFrom):
+            assert (node.module or "").split(".")[0] != "jax", (
+                f"direct `from jax ...` import at line {node.lineno}")
+    # The bound names are still the real modules, so behavior is intact.
+    assert granularity.jax is compat.jax
+    assert granularity.jnp is jnp
+    assert granularity.Mesh is jax.sharding.Mesh
+    assert granularity.P is jax.sharding.PartitionSpec
 
 
 def _mesh():

@@ -1,0 +1,431 @@
+"""warpsim-lint: fixture-driven tests for every rule, suppression
+handling, the CLI contract, registry/doc sync — and the tier-1 ratchet
+that the real tree stays clean.
+
+Each rule gets at least one *failing* fixture (asserting the exact
+``file:line rule-id`` anchor) and one *passing* fixture (the blessed way
+to do the same thing). Fixtures are linted via :func:`lint_source` with
+a virtual path, which is how path-scoped rules (warpsim-only,
+allowlists) are exercised without writing into the real tree.
+"""
+
+import ast
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro import compat
+from repro.core.warpsim import envcfg, faults
+import repro.core.warpsim as warpsim_pkg
+from repro.core.warpsim.lint import (
+    DETERMINISM_MODULES, RULES, Finding, lint_file, lint_paths, lint_source,
+)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+WS = "src/repro/core/warpsim/"       # virtual path prefix for fixtures
+
+
+def findings_of(code, path):
+    return lint_source(textwrap.dedent(code), path)
+
+
+def hits(code, path):
+    """(rule, line) pairs for a fixture."""
+    return [(f.rule, f.line) for f in findings_of(code, path)]
+
+
+# ---------------------------------------------------------------------------
+# Rule fixtures: failing + passing per rule
+# ---------------------------------------------------------------------------
+
+# (id, virtual path, code, [(rule, line), ...] expected)
+FAILING = [
+    ("jax-import", "src/repro/core/newmod.py",
+     "import jax\n",
+     [("jax-containment", 1)]),
+    ("jax-import-submodule", "src/repro/core/newmod.py",
+     "x = 1\nimport jax.numpy as jnp\n",
+     [("jax-containment", 2)]),
+    ("jax-from-import", "src/repro/core/warpsim/newmod.py",
+     "from jax.sharding import Mesh\n",
+     [("jax-containment", 1)]),
+    ("jax-unbound-name", "src/repro/core/newmod.py",
+     "y = jax.numpy.zeros(3)\n",
+     [("jax-containment", 1)]),
+    ("http-raw-urlopen", "tests/test_new.py",
+     "import urllib.request\nurllib.request.urlopen('http://x')\n",
+     [("typed-http-boundary", 2)]),
+    ("http-from-import-urlopen", "benchmarks/new_bench.py",
+     "from urllib.request import urlopen\nurlopen('http://x')\n",
+     [("typed-http-boundary", 2)]),
+    ("http-handler-swallows", "src/repro/core/warpsim/newmod.py",
+     """\
+     import urllib.error
+     import urllib.request
+     def f(url):
+         try:
+             return 1
+         except urllib.error.URLError:
+             return None
+     """,
+     [("typed-http-boundary", 6)]),
+    ("http-handler-bare-reraise", "src/anywhere.py",
+     """\
+     import urllib.error
+     def f():
+         try:
+             return 1
+         except urllib.error.HTTPError:
+             raise
+     """,
+     [("typed-http-boundary", 5)]),
+    ("lock-unannotated", WS + "newmod.py",
+     "PENDING = {}\n",
+     [("lock-discipline", 1)]),
+    ("lock-unguarded-mutation", WS + "newmod.py",
+     """\
+     import threading
+     _LOCK = threading.Lock()
+     PENDING = {}  # guarded-by: _LOCK
+     def f():
+         PENDING["x"] = 1
+     """,
+     [("lock-discipline", 5)]),
+    ("lock-unguarded-method", WS + "newmod.py",
+     """\
+     import threading
+     _LOCK = threading.Lock()
+     SEEN = set()  # guarded-by: _LOCK
+     def f(k):
+         SEEN.add(k)
+     """,
+     [("lock-discipline", 5)]),
+    ("lock-frozen-mutated", WS + "newmod.py",
+     """\
+     TABLE = {"a": 1}  # guarded-by: frozen
+     def f():
+         TABLE.update(b=2)
+     """,
+     [("lock-discipline", 3)]),
+    ("det-wall-clock", WS + "sweep.py",
+     "import time\ndef key():\n    return time.time()\n",
+     [("determinism", 3)]),
+    ("det-datetime-now", WS + "trace.py",
+     "from datetime import datetime\nstamp = datetime.now()\n",
+     [("determinism", 2)]),
+    ("det-global-rng", WS + "timing.py",
+     "import random\nx = random.random()\n",
+     [("determinism", 2)]),
+    ("det-unseeded-default-rng", WS + "divergence.py",
+     "import numpy as np\nrng = np.random.default_rng()\n",
+     [("determinism", 2)]),
+    ("det-set-iteration", WS + "sweep.py",
+     "for name in {'a', 'b'}:\n    pass\n",
+     [("determinism", 1)]),
+    ("det-set-comprehension-iter", WS + "config.py",
+     "def f():\n    return [k for k in {'a', 'b'}]\n",
+     [("determinism", 2)]),
+    ("fault-unregistered-literal", "src/repro/core/warpsim/newmod.py",
+     "from repro.core.warpsim.faults import fault_point\n"
+     "fault_point('server.study')\n",     # typo: '.' for '/'
+     [("fault-registry", 2)]),
+    ("env-raw-literal", "benchmarks/new_bench.py",
+     "import os\nv = os.environ.get('WARPSIM_NATIVE')\n",
+     [("env-registry", 2)]),
+    ("env-raw-getenv", "src/anywhere.py",
+     "import os\nv = os.getenv('WARPSIM_FAULTS')\n",
+     [("env-registry", 2)]),
+    ("env-raw-subscript", "tests/test_new.py",
+     "import os\nv = os.environ['WARPSIM_PALLAS']\n",
+     [("env-registry", 2)]),
+    ("env-via-module-constant", "src/anywhere.py",
+     "import os\nENV_URL = 'WARPSIM_SERVICE_URL'\nv = os.environ.get(ENV_URL)\n",
+     [("env-registry", 3)]),
+    ("env-dynamic-inside-warpsim", WS + "newmod.py",
+     "import os\ndef read(var):\n    return os.environ.get(var)\n",
+     [("env-registry", 3)]),
+]
+
+PASSING = [
+    ("jax-via-compat", "src/repro/core/newmod.py",
+     "from repro import compat\njax, jnp, shd = compat.jax_modules()\n"
+     "y = jax.device_count()\n"),
+    ("jax-allowlisted-pallas", WS + "_pallas.py", "import jax\n"),
+    ("jax-outside-core", "src/repro/kernels/newkernel.py", "import jax\n"),
+    ("http-blessed-wrapper", WS + "work_queue.py",
+     "import urllib.request\nurllib.request.urlopen('http://x')\n"),
+    ("http-handler-raises-typed", "src/anywhere.py",
+     """\
+     import urllib.error
+     from repro.core.warpsim.faults import ServiceError, ServiceUnavailable
+     def f(url):
+         try:
+             return 1
+         except urllib.error.HTTPError as e:
+             detail = str(e)
+             raise ServiceError(detail, code=e.code)
+         except urllib.error.URLError as e:
+             if "refused" in str(e):
+                 raise ServiceUnavailable(str(e))
+             else:
+                 raise ServiceUnavailable("no response")
+     """),
+    ("lock-annotated-and-guarded", WS + "newmod.py",
+     """\
+     import threading
+     _LOCK = threading.Lock()
+     PENDING = {}  # guarded-by: _LOCK
+     def f(k, v):
+         with _LOCK:
+             PENDING[k] = v
+             PENDING.pop("old", None)
+     """),
+    ("lock-frozen-constant", WS + "newmod.py",
+     "TABLE = {'a': 1}  # guarded-by: frozen\nx = TABLE['a']\n"),
+    ("lock-tuple-needs-nothing", WS + "newmod.py",
+     "NAMES = ('a', 'b')\n"),
+    ("det-seeded-rng", WS + "trace.py",
+     "import numpy as np\ndef gen(seed):\n"
+     "    return np.random.default_rng(seed)\n"),
+    ("det-sorted-set", WS + "sweep.py",
+     "for name in sorted({'a', 'b'}):\n    pass\n"),
+    ("det-clock-outside-scope", WS + "service.py",
+     "import time\nstarted = time.time()\n"),
+    ("fault-registered-literal", "src/anywhere.py",
+     "from repro.core.warpsim.faults import fault_point\n"
+     "fault_point('service.cell')\n"),
+    ("fault-glob-pattern-match", "src/anywhere.py",
+     "from repro.core.warpsim.faults import fault_point\n"
+     "fault_point('server/queue/lease')\n"),
+    ("env-via-envcfg", WS + "newmod.py",
+     "from repro.core.warpsim import envcfg\n"
+     "v = envcfg.get('WARPSIM_NATIVE')\n"),
+    ("env-write-is-fine", "tests/test_new.py",
+     "import os\nos.environ['WARPSIM_PALLAS'] = '0'\n"),
+    ("env-non-warpsim-outside", "tests/conftest2.py",
+     "import os\nv = os.environ.get('XLA_FLAGS', '')\n"),
+]
+
+
+@pytest.mark.parametrize("case", FAILING, ids=[c[0] for c in FAILING])
+def test_failing_fixture(case):
+    _, path, code, expected = case
+    assert hits(code, path) == expected
+
+
+@pytest.mark.parametrize("case", PASSING, ids=[c[0] for c in PASSING])
+def test_passing_fixture(case):
+    _, path, code = case
+    assert findings_of(code, path) == []
+
+
+def test_every_rule_has_failing_and_passing_fixture():
+    """The acceptance contract: all six rules covered from both sides."""
+    core_rules = set(RULES) - {"bad-suppression", "parse-error"}
+    failing_rules = {r for _, _, _, exp in FAILING for r, _ in exp}
+    passing_rules = {c[0].split("-")[0] for c in PASSING}
+    assert failing_rules == core_rules
+    # passing ids are prefixed with the rule family they exercise
+    assert {"jax", "http", "lock", "det", "fault", "env"} <= passing_rules
+
+
+# ---------------------------------------------------------------------------
+# Suppressions
+# ---------------------------------------------------------------------------
+
+
+def test_suppression_silences_exactly_one_rule_on_one_line():
+    code = (
+        "import os\n"
+        "a = os.getenv('WARPSIM_FAULTS')  # warpsim-lint: disable=env-registry\n"
+        "b = os.getenv('WARPSIM_FAULTS')\n")
+    assert hits(code, "src/x.py") == [("env-registry", 3)]
+
+
+def test_suppression_does_not_silence_other_rules_on_the_line():
+    code = ("import urllib.request\n"
+            "urllib.request.urlopen('u')  # warpsim-lint: disable=determinism\n")
+    assert hits(code, "src/x.py") == [("typed-http-boundary", 2)]
+
+
+def test_suppression_of_unknown_rule_is_a_finding():
+    code = "x = 1  # warpsim-lint: disable=no-such-rule\n"
+    fs = findings_of(code, "src/x.py")
+    assert [(f.rule, f.line) for f in fs] == [("bad-suppression", 1)]
+    assert "no-such-rule" in fs[0].message
+
+
+def test_suppression_list_and_unknown_mix():
+    # The valid id still suppresses; the bogus one is still reported.
+    code = ("import os\n"
+            "a = os.getenv('WARPSIM_NATIVE')"
+            "  # warpsim-lint: disable=env-registry,bogus\n")
+    assert hits(code, "src/x.py") == [("bad-suppression", 2)]
+
+
+def test_suppression_inside_string_literal_is_inert():
+    # tokenize-based comment scan: a string that *looks* like a
+    # suppression neither suppresses nor reports bad-suppression.
+    code = ("s = '# warpsim-lint: disable=bogus'\n"
+            "import os\n"
+            "a = os.getenv('WARPSIM_NATIVE')\n")
+    assert hits(code, "src/x.py") == [("env-registry", 3)]
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+def _run_cli(args, cwd):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(REPO, "src") + os.pathsep
+                         + env.get("PYTHONPATH", ""))
+    return subprocess.run(
+        [sys.executable, "-m", "repro.core.warpsim.lint", *args],
+        cwd=cwd, env=env, capture_output=True, text=True, timeout=120)
+
+
+@pytest.fixture
+def fixture_tree(tmp_path):
+    """A tiny tree with one clean file and one three-violation file,
+    under paths that trigger the path-scoped rules."""
+    pkg = tmp_path / "src" / "repro" / "core" / "warpsim"
+    pkg.mkdir(parents=True)
+    (pkg / "clean.py").write_text(
+        "from repro.core.warpsim import envcfg\n"
+        "v = envcfg.get('WARPSIM_NATIVE')\n")
+    (pkg / "dirty.py").write_text(
+        "import os\n"
+        "import time\n"
+        "CACHE = {}\n"                                      # lock (line 3)
+        "v = os.getenv('WARPSIM_NATIVE')\n")                # env  (line 4)
+    return tmp_path
+
+
+def test_cli_exit_1_and_format_on_findings(fixture_tree):
+    proc = _run_cli(["src"], cwd=str(fixture_tree))
+    assert proc.returncode == 1
+    lines = proc.stdout.strip().splitlines()
+    dirty = os.path.join("src", "repro", "core", "warpsim", "dirty.py")
+    assert f"{dirty}:3 lock-discipline" in lines[0]
+    assert f"{dirty}:4 env-registry" in lines[1]
+    assert "2 finding(s)" in proc.stderr
+
+
+def test_cli_exit_0_on_clean_file(fixture_tree):
+    clean = os.path.join("src", "repro", "core", "warpsim", "clean.py")
+    proc = _run_cli([clean], cwd=str(fixture_tree))
+    assert proc.returncode == 0
+    assert proc.stdout.strip() == ""
+
+
+def test_cli_json_output(fixture_tree):
+    proc = _run_cli(["--json", "src"], cwd=str(fixture_tree))
+    assert proc.returncode == 1
+    blob = json.loads(proc.stdout)
+    assert [(f["rule"], f["line"]) for f in blob] == [
+        ("lock-discipline", 3), ("env-registry", 4)]
+    assert set(blob[0]) == {"path", "line", "rule", "message"}
+
+
+def test_cli_list_rules():
+    proc = _run_cli(["--list-rules"], cwd=REPO)
+    assert proc.returncode == 0
+    for rule in RULES:
+        assert rule in proc.stdout
+
+
+# ---------------------------------------------------------------------------
+# Registries: envcfg and fault points
+# ---------------------------------------------------------------------------
+
+
+def test_envcfg_registered_names_cover_the_tree():
+    """Every WARPSIM_* spelled anywhere in src/ is a registered name."""
+    import re
+    spelled = set()
+    for root, dirs, files in os.walk(os.path.join(REPO, "src")):
+        dirs[:] = [d for d in dirs if not d.startswith(".")]
+        for name in files:
+            if not name.endswith(".py"):
+                continue
+            with open(os.path.join(root, name), encoding="utf-8") as fh:
+                spelled.update(re.findall(r"WARPSIM_[A-Z_]+[A-Z]", fh.read()))
+    assert spelled <= set(envcfg.REGISTRY), (
+        f"unregistered WARPSIM_* names: {spelled - set(envcfg.REGISTRY)}")
+
+
+def test_envcfg_table_documented_in_runbook():
+    doc = warpsim_pkg.__doc__
+    for var in envcfg.VARIABLES:
+        assert var.name in doc, f"{var.name} missing from warpsim runbook"
+        assert var.doc, f"{var.name} has no registry doc"
+
+
+def test_envcfg_accessors(monkeypatch):
+    monkeypatch.delenv("WARPSIM_NATIVE", raising=False)
+    assert envcfg.get("WARPSIM_NATIVE") == "1"          # registry default
+    assert envcfg.enabled("WARPSIM_NATIVE") is True
+    for off in envcfg.DISABLED_VALUES:
+        monkeypatch.setenv("WARPSIM_NATIVE", off)
+        assert envcfg.enabled("WARPSIM_NATIVE") is False
+    monkeypatch.setenv("WARPSIM_NATIVE", "false")       # historical: NOT off
+    assert envcfg.enabled("WARPSIM_NATIVE") is True
+    monkeypatch.delenv("WARPSIM_REPLICATION", raising=False)
+    assert envcfg.get_int("WARPSIM_REPLICATION") is None
+    monkeypatch.setenv("WARPSIM_REPLICATION", "3")
+    assert envcfg.get_int("WARPSIM_REPLICATION") == 3
+    with pytest.raises(KeyError):
+        envcfg.get("WARPSIM_NOT_A_THING")
+    with pytest.raises(KeyError):
+        envcfg.get("PATH")
+
+
+def test_fault_point_runtime_validation():
+    assert faults.fault_point("service.cell") == "service.cell"
+    assert faults.fault_point("server/study") == "server/study"
+    assert faults.fault_point("worker.renew") == "worker.renew"
+    with pytest.raises(ValueError, match="KNOWN_POINTS"):
+        # '.' typo for '/' — deliberately invalid, hence the suppression
+        faults.fault_point("server.study")  # warpsim-lint: disable=fault-registry
+    with pytest.raises(ValueError, match="KNOWN_POINTS"):
+        faults.fault_point("peer.gossip")  # warpsim-lint: disable=fault-registry
+
+
+def test_known_points_documented_in_faults_grammar():
+    """KNOWN_POINTS feeds the WARPSIM_FAULTS grammar doc: every pattern
+    appears in the faults module docstring (globs as ``<path>``)."""
+    doc = faults.__doc__
+    for pattern in faults.KNOWN_POINTS:
+        rendered = pattern.replace("/*", "/<path>")
+        assert rendered in doc, (
+            f"fault point {pattern!r} not documented in faults docstring")
+
+
+# ---------------------------------------------------------------------------
+# The ratchet: the real tree is clean
+# ---------------------------------------------------------------------------
+
+
+def test_real_tree_is_clean():
+    paths = [os.path.join(REPO, p) for p in ("src", "tests", "benchmarks")]
+    findings = lint_paths(paths)
+    assert findings == [], "\n".join(f.render() for f in findings)
+
+
+def test_determinism_scope_matches_real_modules():
+    """The determinism module set names files that actually exist — a
+    rename would silently unscope the rule."""
+    for base in DETERMINISM_MODULES:
+        assert os.path.exists(os.path.join(
+            REPO, "src", "repro", "core", "warpsim", base)), base
+
+
+def test_finding_render_format():
+    f = Finding("a/b.py", 7, "determinism", "msg")
+    assert f.render() == "a/b.py:7 determinism msg"

@@ -151,7 +151,11 @@ def test_cell_after_sweep_is_cache_hit(tmp_path):
 
 def test_http_healthz_reports_live_engine(live):
     _svc, url = live
-    with urllib.request.urlopen(url + "/healthz", timeout=10) as resp:
+    # Raw wire-protocol probes in this file bypass the typed transport
+    # on purpose: they assert HTTP statuses the typed client would
+    # translate into ServiceError (hence the lint suppressions).
+    with urllib.request.urlopen(  # warpsim-lint: disable=typed-http-boundary
+            url + "/healthz", timeout=10) as resp:
         h = json.loads(resp.read())
     assert h["ok"] is True and h["model"] == sweep_mod.MODEL_VERSION
     native = h["native"]
@@ -193,14 +197,16 @@ def test_http_cell_field_overrides(live):
 def test_http_errors(live):
     _svc, url = live
     with pytest.raises(urllib.error.HTTPError) as e:
-        urllib.request.urlopen(url + "/cell?bench=BFS&machine=nope",
-                               timeout=10)
+        urllib.request.urlopen(  # warpsim-lint: disable=typed-http-boundary
+            url + "/cell?bench=BFS&machine=nope", timeout=10)
     assert e.value.code == 400
     with pytest.raises(urllib.error.HTTPError) as e:
-        urllib.request.urlopen(url + "/cell", timeout=10)  # missing bench
+        urllib.request.urlopen(  # warpsim-lint: disable=typed-http-boundary
+            url + "/cell", timeout=10)  # missing bench
     assert e.value.code == 400
     with pytest.raises(urllib.error.HTTPError) as e:
-        urllib.request.urlopen(url + "/nope", timeout=10)
+        urllib.request.urlopen(  # warpsim-lint: disable=typed-http-boundary
+            url + "/nope", timeout=10)
     assert e.value.code == 404
 
 
@@ -453,7 +459,7 @@ def test_queue_end_to_end_with_worker_death(tmp_path):
         assert job["chunks"] == 4 and job["cells"] == len(spec.cells())
 
         # Worker that leases one chunk and never completes it.
-        with urllib.request.urlopen(
+        with urllib.request.urlopen(  # warpsim-lint: disable=typed-http-boundary
                 url + f"/queue/lease?job={job['job']}&worker=w-dead",
                 timeout=10) as resp:
             dead_lease = json.loads(resp.read())
