@@ -301,7 +301,13 @@ class FaultPlan:
 
     @classmethod
     def from_env(cls, var: str = ENV_FAULTS) -> Optional["FaultPlan"]:
-        """Plan from ``$WARPSIM_FAULTS``, or ``None`` when unset/empty."""
+        """Plan from ``$WARPSIM_FAULTS``, or ``None`` when unset/empty.
+
+        `var` must be a ``WARPSIM_*`` name registered in
+        :mod:`repro.core.warpsim.envcfg` — the read goes through the
+        registry, which raises ``KeyError`` for unregistered names
+        rather than silently returning ``None``.
+        """
         spec = envcfg.get(var)
         if not spec or not spec.strip():
             return None

@@ -50,8 +50,14 @@ A finding is suppressed by a trailing comment on its line::
 
     data = urllib.request.urlopen(url)  # warpsim-lint: disable=typed-http-boundary
 
+For a *simple* statement that spans multiple lines (a wrapped call,
+a parenthesized assignment), the comment may sit on any line of the
+statement — findings anchor on the first line, but the natural home
+for a trailing comment is often the closing one, and both work.
+Compound statements (``def``/``if``/``with``/...) get no such
+spreading: a comment inside a body never silences the header.
 Each suppression silences exactly the named rule(s) on exactly that
-line; an unknown rule id in a suppression is itself a finding
+statement; an unknown rule id in a suppression is itself a finding
 (``bad-suppression``). Suppressions are for deliberate exceptions (tests
 speaking raw HTTP at a daemon to assert protocol behavior) — document
 the why next to them.
@@ -71,6 +77,7 @@ import sys
 import tokenize
 from typing import Dict, Iterable, Iterator, List, Optional, Set, Tuple
 
+from repro.core.warpsim import faults as _faults
 from repro.core.warpsim.faults import KNOWN_POINTS
 
 #: rule-id -> one-line description (the ``--list-rules`` output and the
@@ -115,8 +122,13 @@ DETERMINISM_MODULES = frozenset({
     "timing.py", "machines.py", "_native.py", "_pallas.py",
 })
 
-#: Exception names accepted as "typed" raises at an urllib boundary.
-SERVICE_ERROR_NAMES = frozenset({"ServiceError", "ServiceUnavailable"})
+#: Exception names accepted as "typed" raises at an urllib boundary:
+#: exactly the faults.ServiceError family, derived from the module so
+#: the set cannot drift from faults.py. Other exceptions that merely
+#: live in faults (e.g. FaultError) do NOT satisfy the boundary rule.
+SERVICE_ERROR_NAMES = frozenset(
+    name for name, obj in vars(_faults).items()
+    if isinstance(obj, type) and issubclass(obj, _faults.ServiceError))
 
 #: Container methods that mutate in place (dict/list/set/OrderedDict/deque).
 MUTATOR_METHODS = frozenset({
@@ -357,9 +369,9 @@ def _is_service_raise(stmt: ast.Raise, ctx: _FileContext) -> bool:
         exc = exc.func
     canonical = ctx.resolve(exc)
     if canonical:
-        last = canonical.rsplit(".", 1)[-1]
-        return (last in SERVICE_ERROR_NAMES
-                or ".faults." in canonical or canonical.startswith("faults."))
+        # Only the ServiceError family counts — `faults.FaultError` and
+        # other faults-module exceptions are not typed boundary raises.
+        return canonical.rsplit(".", 1)[-1] in SERVICE_ERROR_NAMES
     # Locally-defined name (e.g. a subclass in the same file).
     if isinstance(exc, ast.Name):
         return exc.id in SERVICE_ERROR_NAMES
@@ -646,6 +658,35 @@ _CHECKS = (
 )
 
 
+def _spread_suppressions(tree: ast.Module,
+                         suppressed: Dict[int, Set[str]]) -> None:
+    """Spread suppressions across multi-line *simple* statements.
+
+    Findings anchor on a construct's first line, but a trailing
+    ``# warpsim-lint: disable=`` comment naturally lands on whatever
+    line the statement ends on. A simple (non-compound) statement is
+    one construct, so a suppression on any of its lines applies to all
+    of them. Compound statements (anything with a ``body``) are
+    excluded: a comment inside a function must not silence a finding
+    anchored on the enclosing header.
+    """
+    if not suppressed:
+        return
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.stmt) or hasattr(node, "body"):
+            continue
+        end = getattr(node, "end_lineno", None) or node.lineno
+        if end == node.lineno:
+            continue
+        span = range(node.lineno, end + 1)
+        rules: Set[str] = set()
+        for line in span:
+            rules |= suppressed.get(line, set())
+        if rules:
+            for line in span:
+                suppressed.setdefault(line, set()).update(rules)
+
+
 def lint_source(source: str, path: str) -> List[Finding]:
     """All findings for one file's source, suppressions applied.
 
@@ -658,6 +699,7 @@ def lint_source(source: str, path: str) -> List[Finding]:
         return [Finding(path, e.lineno or 1, "parse-error", e.msg or "")]
     ctx = _FileContext(path, source, tree)
     suppressed, findings = ctx.suppressions()
+    _spread_suppressions(tree, suppressed)
     for check in _CHECKS:
         findings.extend(check(ctx))
     return sorted(

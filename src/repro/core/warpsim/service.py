@@ -1628,6 +1628,11 @@ def from_env(var: str = ENV_URL, probe: bool = True
     instead of failing, so the env vars can stay exported even when no
     daemon is up. The warning fires exactly once per process for a given
     (env var, URL): repeat callers get the silent fallback.
+
+    `var` must be a ``WARPSIM_*`` name registered in
+    :mod:`repro.core.warpsim.envcfg` — the read goes through the
+    registry, which raises ``KeyError`` for unregistered names rather
+    than returning None.
     """
     if var == ENV_URL:
         fleet = envcfg.get(ENV_URLS)

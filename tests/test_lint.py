@@ -83,6 +83,19 @@ FAILING = [
              raise
      """,
      [("typed-http-boundary", 5)]),
+    # Living in the faults module is not enough: only the ServiceError
+    # family satisfies the boundary, not e.g. faults.FaultError.
+    ("http-handler-raises-untyped-fault", "src/anywhere.py",
+     """\
+     import urllib.error
+     from repro.core.warpsim import faults
+     def f():
+         try:
+             return 1
+         except urllib.error.HTTPError as e:
+             raise faults.FaultError(str(e))
+     """,
+     [("typed-http-boundary", 6)]),
     ("lock-unannotated", WS + "newmod.py",
      "PENDING = {}\n",
      [("lock-discipline", 1)]),
@@ -265,6 +278,31 @@ def test_suppression_list_and_unknown_mix():
             "a = os.getenv('WARPSIM_NATIVE')"
             "  # warpsim-lint: disable=env-registry,bogus\n")
     assert hits(code, "src/x.py") == [("bad-suppression", 2)]
+
+
+def test_suppression_on_closing_line_of_multiline_statement():
+    # Findings anchor on a statement's first line, but the trailing
+    # comment naturally lands on the closing line of a wrapped call —
+    # for simple statements the whole span is one construct, so either
+    # placement suppresses.
+    code = ("import os\n"
+            "a = os.getenv(\n"
+            "    'WARPSIM_NATIVE',\n"
+            ")  # warpsim-lint: disable=env-registry\n")
+    assert hits(code, "src/x.py") == []
+
+
+def test_suppression_in_compound_body_does_not_leak_to_header():
+    # Span-spreading is simple-statements only: a suppression inside a
+    # handler body must not silence the finding anchored on the
+    # `except` header itself.
+    code = ("import urllib.error\n"
+            "def f():\n"
+            "    try:\n"
+            "        return 1\n"
+            "    except urllib.error.HTTPError:\n"
+            "        pass  # warpsim-lint: disable=typed-http-boundary\n")
+    assert hits(code, "src/x.py") == [("typed-http-boundary", 5)]
 
 
 def test_suppression_inside_string_literal_is_inert():
