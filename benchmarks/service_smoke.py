@@ -12,7 +12,10 @@ The CI `service-smoke` job's driver (also runnable locally):
    the ROADMAP "figure generation never re-simulates" contract, enforced;
 4. fire two concurrent ``GET /cell`` requests for one *uncomputed* cell
    and assert exactly one simulation happened (in-flight dedup, observed
-   end-to-end over HTTP).
+   end-to-end over HTTP);
+5. scrape ``GET /metrics`` and assert it parses as valid Prometheus text
+   exposition whose ``warpsim_cells_simulated_total`` matches the legacy
+   ``/stats`` counter — the registry and the dict views are one store.
 
 Exit code 0 iff every assertion holds.
 
@@ -143,6 +146,24 @@ def main(argv=None) -> None:
         print(f"service-smoke: concurrent cold cell -> 1 simulation "
               f"(served as {sorted(served)}, "
               f"dedup_waits={after['dedup_waits'] - before['dedup_waits']})")
+
+        # The observability surface: /metrics must serve valid Prometheus
+        # text exposition backed by the SAME counters /stats reports.
+        from repro.core.warpsim.obs import parse_exposition
+        with urllib.request.urlopen(url + "/metrics", timeout=30) as resp:
+            ctype = resp.headers.get("Content-Type", "")
+            text = resp.read().decode()
+        assert ctype.startswith("text/plain"), ctype
+        assert "# TYPE warpsim_cells_simulated_total counter" in text
+        samples = parse_exposition(text)   # raises on any malformed line
+        sim_total = samples["warpsim_cells_simulated_total"]
+        stats_sim = _get(url + "/stats")["counters"]["simulated"]
+        assert sim_total > 0, "warpsim_cells_simulated_total never moved"
+        assert sim_total == stats_sim, (sim_total, stats_sim)
+        assert samples['warpsim_stage_seconds_count{stage="engine"}'] > 0
+        print(f"service-smoke: /metrics exposition valid — "
+              f"{len(samples)} samples, warpsim_cells_simulated_total="
+              f"{int(sim_total)} (== /stats counters.simulated)")
         print("service-smoke OK")
 
 

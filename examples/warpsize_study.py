@@ -42,8 +42,34 @@ import time
 sys.path.insert(0, "src")
 
 from repro.core.warpsim import api, machines
+from repro.core.warpsim import obs
 
 CACHE_DIR = "benchmarks/results/sweep_cache"
+
+
+def print_obs_snapshot(session):
+    """Where the time went, from the warpsim.obs registry — the same
+    store a daemon serves at ``GET /metrics`` — instead of hand-rolled
+    counter dicts."""
+    print("\nobservability (warpsim.obs registry snapshot):")
+    stages = obs.default().registry.snapshot().get("warpsim_stage_seconds",
+                                                   {})
+    rows = sorted(label[:-len(".count")] for label in stages
+                  if label.endswith(".count") and stages[label])
+    for label in rows:
+        n = int(stages[label + ".count"])
+        total = stages[label + ".sum"]
+        stage = (label[len('{stage="'):-len('"}')]
+                 if label.startswith('{stage="') else label)
+        print(f"  {stage:24s} {n:6d} x {1e3 * total / n:8.3f} ms "
+              f"= {total:7.3f} s")
+    if not rows:
+        print("  (no local stages timed", end="")
+        if isinstance(session.backend, api.ServiceBackend):
+            print(f" — the daemon did the work; scrape "
+                  f"{session.backend.url}/metrics for its histograms)")
+        else:
+            print(")")
 
 
 def main():
@@ -108,6 +134,8 @@ def main():
     for m in dres.machines:
         print(f"  {m:6s} geomean IPC "
               f"{runner.mean_ipc(dres.per_bench(m)):6.3f}")
+
+    print_obs_snapshot(session)
 
     runner.save_results(res.legacy_grid(),
                         "benchmarks/results/warpsim_suite.json")

@@ -55,6 +55,14 @@ with the registry):
                            tmpdir; refused when not owner-writable-only)
     WARPSIM_PALLAS         device engine kill switch: 0|no|off -> flat
                            CSR engines (on; re-read per call)
+    WARPSIM_OBS            observability kill switch: 0|no|off -> span
+                           recording, stage histograms and trace header
+                           propagation become near-no-ops (on; re-read
+                           per call; counters keep counting)
+    WARPSIM_OBS_RING       span ring-buffer capacity per daemon/process
+                           behind ``GET /debug/trace`` (2048)
+    WARPSIM_OBS_SAMPLE     trace sampling rate in [0,1] (1.0); a
+                           deterministic hash of the trace id, never RNG
     ====================== ==============================================
 
 Static invariants: ``python -m repro.core.warpsim.lint`` (CI job
@@ -123,6 +131,24 @@ Serving runbook (the daemon fleet; full details in ROADMAP.md):
                            finish in-flight cells, persist queue jobs.
                            ``healthz()["draining"]`` flips true and probe
                            re-admission skips draining daemons.
+    GET /metrics           Prometheus text exposition over the daemon's
+                           ``warpsim.obs`` registry — the same counters
+                           ``/stats`` serves as the legacy dict, plus
+                           ``warpsim_stage_seconds{stage=...}`` latency
+                           histograms (trace build, aggregate, engine,
+                           cache/peer/queue hops) and in-flight gauges.
+    GET /debug/trace       span ring dump: ``?id=<trace>`` returns that
+                           trace's spans (bounded ring, WARPSIM_OBS_RING
+                           spans, default 2048 — oldest evicted); without
+                           ``id``, per-trace summaries. One study = one
+                           trace across clients, daemons, peer forwards,
+                           replication pushes and queue workers (ids ride
+                           the ``X-Warpsim-Op`` header); merge the
+                           fleet's dumps to reconstruct which daemon
+                           simulated/cached/forwarded each cell. Overhead
+                           is a clock pair + one ring append per span —
+                           negligible next to a cell simulation; set
+                           WARPSIM_OBS=0 to reduce hooks to near-no-ops.
 
 Workers (``work_queue.run_worker``) retry transient lease/renew/complete
 failures with backoff, abandon chunks on lost leases (lease expiry

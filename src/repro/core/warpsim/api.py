@@ -71,6 +71,7 @@ from typing import Dict, Iterator, Mapping, Optional, Tuple
 
 from repro.core.warpsim import envcfg
 from repro.core.warpsim import machines as machines_mod
+from repro.core.warpsim import obs as obs_mod
 from repro.core.warpsim import sweep as sweep_mod
 from repro.core.warpsim.config import MachineConfig
 # Typed client errors, re-exported at the facade boundary: callers catch
@@ -544,11 +545,19 @@ class Session:
 
     def run(self, study, backend: Optional[Backend] = None) -> StudyResult:
         """Execute a :class:`Study` (or legacy :class:`SweepSpec`) through
-        `backend` (default: the session's)."""
+        `backend` (default: the session's).
+
+        Every run is one trace: remote backends propagate its id over the
+        ``X-Warpsim-Op`` header, so the study's hops across a daemon mesh
+        reassemble from the fleet's ``/debug/trace`` dumps. Inside an
+        already-active trace (a daemon running a forwarded study) this
+        nests a span instead of forking a new trace.
+        """
         if isinstance(study, sweep_mod.SweepSpec):
             study = Study.from_spec(study)
-        return (backend if backend is not None else self.backend).run(
-            study, self)
+        b = backend if backend is not None else self.backend
+        with obs_mod.start_trace("study", backend=b.name):
+            return b.run(study, self)
 
     def cell(self, bench: str, machine, n_threads: Optional[int] = None,
              seed: int = 0, engine: str = "auto") -> SimResult:

@@ -78,6 +78,22 @@ VARIABLES: Tuple[EnvVar, ...] = (
     EnvVar("WARPSIM_PALLAS", "1",
            "Kill switch for the JAX/Pallas device engine: 0|no|off falls "
            "back to the flat-CSR engines. Re-read per call."),
+    EnvVar("WARPSIM_OBS", "1",
+           "Kill switch for the observability subsystem (warpsim.obs): "
+           "0|no|off turns span recording, stage histograms, and trace "
+           "header propagation into near-no-ops. Metrics counters keep "
+           "counting (the legacy stats() views are backed by them). "
+           "Re-read per call."),
+    EnvVar("WARPSIM_OBS_RING", None,
+           "Capacity of the in-memory span ring buffer behind GET "
+           "/debug/trace (finished spans per daemon/process; default "
+           "2048). Oldest spans are evicted first; read once at "
+           "Observability construction."),
+    EnvVar("WARPSIM_OBS_SAMPLE", None,
+           "Trace sampling rate in [0,1] (default 1.0 = record every "
+           "trace). Deterministic per trace id — a hash, not an RNG — so "
+           "every daemon a study touches makes the same keep/drop "
+           "decision. Stage histograms are never sampled."),
 )
 
 # Name -> EnvVar lookup for the accessors.
@@ -116,6 +132,14 @@ def get_int(name: str) -> Optional[int]:
     if raw is None or not str(raw).strip():
         return None
     return int(raw)
+
+
+def get_float(name: str) -> Optional[float]:
+    """Float value of a registered variable, or None when unset/empty."""
+    raw = get(name)
+    if raw is None or not str(raw).strip():
+        return None
+    return float(raw)
 
 
 def describe() -> Dict[str, Dict[str, Optional[str]]]:

@@ -64,6 +64,7 @@ import threading
 from typing import Dict, List, Optional, Sequence
 
 from repro.core.warpsim import envcfg
+from repro.core.warpsim import obs as obs_mod
 
 ENV_FAULTS = "WARPSIM_FAULTS"
 
@@ -244,6 +245,10 @@ class FaultPlan:
                     continue
                 state.fired += 1
                 self.fired[point] = self.fired.get(point, 0) + 1
+                # Every injected fault is a trace event: chaos runs read
+                # which hop of which study a fault actually hit straight
+                # out of /debug/trace. No-op without an active trace.
+                obs_mod.event("fault", point=point, action=rule.action)
                 return Fault(point=point, action=rule.action, code=rule.code,
                              delay_s=rule.delay_s, rule_index=i)
         return None

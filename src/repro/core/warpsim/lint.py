@@ -30,7 +30,8 @@ ratchet instead of eroding:
     unseeded RNG constructors / iteration over ``set`` literals inside
     the cache-key/expansion/timing modules. Bit-identity of cached
     records depends on these modules being pure functions of their
-    inputs.
+    inputs. Scope is the ``DETERMINISM_MODULES`` list below; ``obs.py``
+    is deliberately outside it (see the note on the list).
 ``fault-registry``
     Every literal ``fault_point("...")`` must match a pattern in
     ``faults.KNOWN_POINTS`` — the chaos harness's grammar cannot drift
@@ -117,6 +118,19 @@ HTTP_TRANSPORTS = (
 
 #: Warpsim modules whose outputs feed cache keys / cached records.
 #: Anything nondeterministic here silently poisons bit-identity.
+#:
+#: ``obs.py`` is *deliberately absent*: observability is the one module
+#: whose whole job is reading a clock, and it is allowed
+#: ``time.monotonic`` because (a) the clock is injectable
+#: (``Observability(clock=...)`` / ``MetricsRegistry(clock=...)``) so
+#: tests pin it, and (b) nothing obs measures — span durations, stage
+#: histograms — ever feeds a cache key or a cached record; it only
+#: annotates them. The determinism modules themselves stay clock-free
+#: by calling ``obs.stage(...)`` / ``obs.span(...)``: the context
+#: manager is imported *into* e.g. ``sweep.py``, but the clock reads
+#: resolve inside ``obs.py``, outside this scope. Timing a stage from
+#: a determinism module directly (``time.monotonic()`` in ``sweep.py``)
+#: is still a finding — route it through obs.
 DETERMINISM_MODULES = frozenset({
     "config.py", "trace.py", "divergence.py", "coalesce.py", "sweep.py",
     "timing.py", "machines.py", "_native.py", "_pallas.py",

@@ -95,6 +95,7 @@ from repro.core.warpsim.faults import (
     fault_point,
 )
 from repro.core.warpsim import mesh as mesh_mod
+from repro.core.warpsim import obs as obs_mod
 from repro.core.warpsim.mesh import MeshConfig
 from repro.core.warpsim.sweep import (
     MODEL_VERSION, SweepSpec, cell_key, compute_cell, family_major_cells,
@@ -112,7 +113,85 @@ ENV_URLS = "WARPSIM_SERVICE_URLS"
 # Logical-operation id a ResilientClient stamps on every request; the
 # daemon uses it as the fault-plan marker, so injected request faults fire
 # once per *operation*, not once per retry attempt (retries must pass).
-OP_HEADER = "X-Warpsim-Op"
+# Since PR 10 the header also carries the trace context
+# (``<op>;trace=<id>;span=<id>``) — the canonical constant and codec live
+# in :mod:`repro.core.warpsim.obs`; re-exported here for existing callers.
+OP_HEADER = obs_mod.OP_HEADER
+
+# Legacy counter key -> (registry metric name, help). The keys are the
+# exact shape ``stats()["counters"]`` has always had (plus the queue_*
+# lease counters mirrored from each WorkQueue); the values now live in the
+# daemon's metrics registry and surface verbatim at ``GET /metrics``.
+# tests/test_obs.py asserts this table and the registry can't drift.
+_COUNTER_METRICS = {  # guarded-by: frozen
+    "requests": ("warpsim_http_requests_total",
+                 "HTTP requests accepted (every route)"),
+    "errors": ("warpsim_http_errors_total",
+               "requests that ended in an error response"),
+    "cells_served": ("warpsim_cells_served_total",
+                     "cell lookups served (any source)"),
+    "cache_hits": ("warpsim_cell_cache_hits_total",
+                   "cells served from the result cache"),
+    "simulated": ("warpsim_cells_simulated_total",
+                  "cells simulated by this daemon"),
+    "dedup_waits": ("warpsim_dedup_waits_total",
+                    "requests parked on another request's in-flight cell"),
+    "sweeps": ("warpsim_studies_total",
+               "study/sweep bodies executed"),
+    "sweep_cells": ("warpsim_study_cells_total",
+                    "cells requested by study/sweep bodies"),
+    "queue_cells_adopted": ("warpsim_queue_cells_adopted_total",
+                            "worker-computed cells adopted via "
+                            "/queue/complete"),
+    "faults_injected": ("warpsim_faults_injected_total",
+                        "injected faults fired by the daemon's plan"),
+    "peer_forwards": ("warpsim_peer_forwards_total",
+                      "outbound /peer/cell read-through attempts"),
+    "peer_hits": ("warpsim_peer_hits_total",
+                  "cells served by a mesh peer"),
+    "peer_fallbacks": ("warpsim_peer_fallbacks_total",
+                       "peer read-throughs that fell back to local sim"),
+    "peer_serves": ("warpsim_peer_serves_total",
+                    "inbound /peer/cell requests served"),
+    "replicas_sent": ("warpsim_replicas_sent_total",
+                      "cells pushed to replica successors"),
+    "replica_send_failures": ("warpsim_replica_send_failures_total",
+                              "replica pushes that failed (cells or jobs)"),
+    "replicas_adopted": ("warpsim_replicas_adopted_total",
+                         "cells adopted from /peer/replicate pushes"),
+    "jobs_replicated": ("warpsim_jobs_replicated_total",
+                        "queue-job snapshots pushed to peers"),
+    "job_replicas_received": ("warpsim_job_replicas_received_total",
+                              "peer job snapshots received"),
+    "jobs_adopted_from_peers": ("warpsim_jobs_adopted_from_peers_total",
+                                "jobs promoted from peer replicas"),
+    "queue_leases_granted": ("warpsim_queue_leases_granted_total",
+                             "work-queue chunk leases granted"),
+    "queue_leases_expired": ("warpsim_queue_leases_expired_total",
+                             "work-queue leases expired and requeued"),
+    "queue_stale_completions": ("warpsim_queue_stale_completions_total",
+                                "completions accepted from expired leases"),
+}
+
+# ResilientClient's legacy client_stats() counter keys, same contract.
+_CLIENT_COUNTER_METRICS = {  # guarded-by: frozen
+    "requests": ("warpsim_client_requests_total",
+                 "logical client operations issued"),
+    "attempts": ("warpsim_client_attempts_total",
+                 "transport attempts (includes retries)"),
+    "retries": ("warpsim_client_retries_total",
+                "attempts beyond the first for one operation"),
+    "failovers": ("warpsim_client_failovers_total",
+                  "attempts that switched endpoint"),
+    "breaker_opens": ("warpsim_client_breaker_opens_total",
+                      "circuit breakers opened"),
+    "breaker_closes": ("warpsim_client_breaker_closes_total",
+                       "circuit breakers closed (probe or success)"),
+    "probes": ("warpsim_client_probes_total",
+               "healthz probes of cooling endpoints"),
+    "exhausted": ("warpsim_client_exhausted_total",
+                  "operations that ran out of retries/endpoints"),
+}
 
 _BOOL_TRUE = ("1", "true", "yes", "on")
 _BOOL_FALSE = ("0", "false", "no", "off")
@@ -230,22 +309,21 @@ class SweepService:
         # WorkQueue.to_dict blob): held inert until this daemon is asked
         # about an unknown job, then promoted by _adopt_job.
         self._replica_jobs: Dict[str, dict] = {}
-        self.counters: Dict[str, int] = {
-            "requests": 0, "errors": 0, "cells_served": 0, "cache_hits": 0,
-            "simulated": 0, "dedup_waits": 0, "sweeps": 0, "sweep_cells": 0,
-            "queue_cells_adopted": 0, "faults_injected": 0,
-            # Mesh counters (all zero when no mesh is configured):
-            "peer_forwards": 0,        # outbound /peer/cell attempts
-            "peer_hits": 0,            # cells served by a peer
-            "peer_fallbacks": 0,       # all peers failed -> local sim
-            "peer_serves": 0,          # inbound /peer/cell requests
-            "replicas_sent": 0,        # cells pushed to successors
-            "replica_send_failures": 0,
-            "replicas_adopted": 0,     # inbound /peer/replicate cells
-            "jobs_replicated": 0,      # job snapshots pushed to peers
-            "job_replicas_received": 0,
-            "jobs_adopted_from_peers": 0,
-        }
+        # Observability domain of this daemon: the metrics registry behind
+        # GET /metrics and the span ring behind GET /debug/trace, on the
+        # same injectable clock as the lease machinery. The legacy
+        # counters dict survives as a read-only view over the registry
+        # (same keys, same integer reads) so /stats and every existing
+        # assertion keep their shape while Prometheus scrapes the truth.
+        self.obs = obs_mod.Observability(clock=clock)
+        self.counters = obs_mod.CounterView(self.obs.registry,
+                                            _COUNTER_METRICS)
+        self._g_inflight = self.obs.registry.gauge(
+            "warpsim_inflight_cells",
+            "cells currently being simulated (in-flight dedup table size)")
+        self._g_draining = self.obs.registry.gauge(
+            "warpsim_draining",
+            "1 while the daemon is draining (refusing new work)")
         self.last_sweep_stats: Dict[str, float] = {}
         self._load_jobs()
 
@@ -331,7 +409,8 @@ class SweepService:
             try:
                 with open(path) as f:
                     jobs[job] = WorkQueue.from_dict(json.load(f),
-                                                    clock=self._clock)
+                                                    clock=self._clock,
+                                                    on_count=self._queue_note)
             except OSError:
                 continue                    # transient: keep for next boot
             except Exception:
@@ -390,8 +469,16 @@ class SweepService:
         self._replicate_job(job, blob)
 
     def bump(self, counter: str, n: int = 1) -> None:
-        with self._lock:
-            self.counters[counter] = self.counters.get(counter, 0) + n
+        # The registry's own locks guard the increment — deliberately not
+        # self._lock, so call sites already holding the service lock can
+        # bump without a (non-reentrant) deadlock. Unknown names raise:
+        # every counter must be declared in _COUNTER_METRICS.
+        self.counters.inc(counter, n)
+
+    def _queue_note(self, counter: str) -> None:
+        # WorkQueue lease-counter hook: mirror each increment into the
+        # registry (the queues keep their own ints for persistence).
+        self.counters.inc("queue_" + counter)
 
     # ---------------------------------------------------- faults / drain
 
@@ -425,6 +512,7 @@ class SweepService:
         with self._lock:
             self.draining = True
             jobs = list(self._jobs)
+        self._g_draining.set(1)
         deadline = time.monotonic() + wait_seconds
         while time.monotonic() < deadline:
             with self._lock:
@@ -439,6 +527,11 @@ class SweepService:
                 "jobs_persisted": len(jobs), "in_flight": in_flight}
 
     # ------------------------------------------------------------- cells
+
+    def _note_cell(self, key: str, source: str) -> None:
+        # Trace event per cell decision: /debug/trace answers "which
+        # daemon simulated / cached / peer-served this cell" directly.
+        obs_mod.event("cell", key=key[:12], source=source)
 
     def cell(self, bench: str, cfg: MachineConfig,
              n_threads: Optional[int] = None, seed: int = 0,
@@ -463,15 +556,16 @@ class SweepService:
         that converging instead of cycling).
         """
         key = cell_key(bench, cfg, n_threads, seed)
-        res = self.cache.get(key)       # optimistic: no service lock held
+        with obs_mod.stage("cache_get", key=key[:12]):
+            res = self.cache.get(key)   # optimistic: no service lock held
         if res is not None:
-            with self._lock:
-                self.counters["cells_served"] += 1
-                self.counters["cache_hits"] += 1
+            self.bump("cells_served")
+            self.bump("cache_hits")
+            self._note_cell(key, "cache")
             return res, "cache"
         owner = False
         with self._lock:
-            self.counters["cells_served"] += 1
+            self.bump("cells_served")
             fut = self._inflight.get(key)
             if fut is None:
                 # Re-probe under the lock: the owner of a just-finished
@@ -481,15 +575,19 @@ class SweepService:
                 # cold path doesn't double-count the optimistic miss.
                 res = self.cache.get(key) if self.cache.contains(key) else None
                 if res is not None:
-                    self.counters["cache_hits"] += 1
+                    self.bump("cache_hits")
+                    self._note_cell(key, "cache")
                     return res, "cache"
                 fut = concurrent.futures.Future()
                 self._inflight[key] = fut
+                self._g_inflight.set(len(self._inflight))
                 owner = True
             else:
-                self.counters["dedup_waits"] += 1
+                self.bump("dedup_waits")
         if not owner:
-            return fut.result(), "dedup"
+            res = fut.result()
+            self._note_cell(key, "dedup")
+            return res, "dedup"
         source = "simulated"
         try:
             res = None
@@ -503,10 +601,10 @@ class SweepService:
                                    trace_dir=self.trace_dir,
                                    trace_cache=self.session.trace_cache,
                                    expansion_cache=self.session.expansion_cache)
-            self.cache.put(key, res)
+            with obs_mod.stage("cache_put", key=key[:12]):
+                self.cache.put(key, res)
             if source == "simulated":
-                with self._lock:
-                    self.counters["simulated"] += 1
+                self.bump("simulated")
             fut.set_result(res)
         except BaseException as e:
             fut.set_exception(e)
@@ -514,6 +612,8 @@ class SweepService:
         finally:
             with self._lock:
                 self._inflight.pop(key, None)
+                self._g_inflight.set(len(self._inflight))
+        self._note_cell(key, source)
         if source == "simulated":
             # Mesh durability: push the fresh cell to its replica
             # successors BEFORE the kill-fault hook below — a daemon
@@ -571,9 +671,14 @@ class SweepService:
                 continue                    # injected: peer unreachable
             params["simulate"] = "1" if rank == 0 else "0"
             try:
-                resp = _http_json(
-                    target + "/peer/cell?" + urlencode(params),
-                    timeout=mesh.peer_timeout)
+                # The trace headers carry the study's trace id to the
+                # peer: its server span for this /peer/cell chains to
+                # ours, so cross-daemon hops reconstruct from the dumps.
+                with obs_mod.stage("peer_forward", target=target, rank=rank):
+                    resp = _http_json(
+                        target + "/peer/cell?" + urlencode(params),
+                        timeout=mesh.peer_timeout,
+                        headers=obs_mod.trace_headers())
             except ServiceError:
                 continue
             if resp.get("found"):
@@ -638,8 +743,11 @@ class SweepService:
                     {"key": key, "result": dataclasses.asdict(res)})
         for target, cells in by_target.items():
             try:
-                _http_json(target + "/peer/replicate", {"cells": cells},
-                           timeout=mesh.peer_timeout)
+                with obs_mod.stage("replicate", target=target,
+                                   cells=len(cells)):
+                    _http_json(target + "/peer/replicate", {"cells": cells},
+                               timeout=mesh.peer_timeout,
+                               headers=obs_mod.trace_headers())
             except ServiceError:
                 self.bump("replica_send_failures", len(cells))
             else:
@@ -673,9 +781,11 @@ class SweepService:
                 self.bump("replica_send_failures")
                 continue
             try:
-                _http_json(target + "/peer/job",
-                           {"job": job, "queue": blob},
-                           timeout=mesh.peer_timeout)
+                with obs_mod.stage("replicate", target=target, job=job):
+                    _http_json(target + "/peer/job",
+                               {"job": job, "queue": blob},
+                               timeout=mesh.peer_timeout,
+                               headers=obs_mod.trace_headers())
             except ServiceError:
                 self.bump("replica_send_failures")
             else:
@@ -738,7 +848,8 @@ class SweepService:
         if blob is None:
             return None
         try:
-            q = WorkQueue.from_dict(blob, clock=self._clock)
+            q = WorkQueue.from_dict(blob, clock=self._clock,
+                                    on_count=self._queue_note)
         except Exception as e:      # noqa: BLE001 — corrupt replica
             raise ValueError(f"unusable job replica for {job!r}: "
                              f"{e.__class__.__name__}: {e}") from e
@@ -791,12 +902,19 @@ class SweepService:
                 families.append([fam, []])
             families[-1][1].append(cell)
 
+        # Pool threads don't inherit contextvars: capture the request's
+        # trace context here and re-activate it per family task, so every
+        # cell/stage/peer-hop span of a fanned-out study stays in the one
+        # trace its HTTP server span started.
+        ctx = obs_mod.current()
+
         def run_family(group):
             out = []
-            for mname, cfg, bench, n_threads, seed in group:
-                out.append(((mname, cfg, bench, n_threads, seed),
-                            self.cell_with_source(bench, cfg, n_threads,
-                                                  seed, engine=engine)))
+            with obs_mod.activate(ctx):
+                for mname, cfg, bench, n_threads, seed in group:
+                    out.append(((mname, cfg, bench, n_threads, seed),
+                                self.cell_with_source(bench, cfg, n_threads,
+                                                      seed, engine=engine)))
             return out
 
         workers = min(8, os.cpu_count() or 1, len(families)) or 1
@@ -836,9 +954,9 @@ class SweepService:
             trace_disk_hits=tcache.disk_hits - trc0[2],
             elapsed_s=round(time.time() - t0, 6),
         )
+        self.bump("sweeps")
+        self.bump("sweep_cells", len(cells))
         with self._lock:
-            self.counters["sweeps"] += 1
-            self.counters["sweep_cells"] += len(cells)
             self.last_sweep_stats = stats
         # Records in the study's fixed cell order, independent of the
         # family-major execution order above.
@@ -871,9 +989,15 @@ class SweepService:
         """Shard a grid's *uncached* cells onto a new lease-based job."""
         todo = [c for c in family_major_cells(spec.cells())
                 if not self.cache.contains(cell_key(c[2], c[1], c[3], c[4]))]
+        # Stamp the enqueuing study's trace id onto the job: it persists
+        # with the snapshot and rides every lease response, so worker
+        # hops (possibly on other hosts, days later) join the same trace.
+        ctx = obs_mod.current()
         q = WorkQueue(todo, chunk_size=chunk_size,
                       lease_seconds=lease_seconds or self.lease_seconds,
-                      clock=self._clock)
+                      clock=self._clock,
+                      trace_id=(ctx.trace_id or None) if ctx else None,
+                      on_count=self._queue_note)
         evicted = []
         with self._lock:
             self._job_seq += 1
@@ -917,9 +1041,15 @@ class SweepService:
         if chunk is None:
             return {"job": job, "chunk": None, "done": q.done}
         self._persist_job(job)
+        # "trace"/"trace_span": the job's trace id plus THIS grant's
+        # server span, so a worker (maybe another process entirely) can
+        # parent its chunk span to the lease hop that handed it the work.
+        ctx = obs_mod.current()
         return {"job": job, "chunk": chunk.chunk_id,
                 "cells": [cell_to_wire(c) for c in chunk.cells],
-                "lease_seconds": q.lease_seconds, "done": False}
+                "lease_seconds": q.lease_seconds, "done": False,
+                "trace": q.trace_id,
+                "trace_span": (ctx.span_id or None) if ctx else None}
 
     def queue_renew(self, job: str, chunk: int, worker: str) -> dict:
         # Deliberately not persisted: workers renew between every cell, so
@@ -1045,6 +1175,7 @@ class SweepService:
             },
             "jobs": jobs,
             "mesh": self.mesh_stats(),
+            "obs": self.obs.describe(),
             "last_sweep": last_sweep,
             "uptime_s": round(time.time() - self.started, 3),
         }
@@ -1100,6 +1231,21 @@ class SweepRequestHandler(BaseHTTPRequestHandler):
         self.end_headers()
         self.wfile.write(data)
 
+    def _send_text(self, text: str, code: int = 200,
+                   content_type: str =
+                   "text/plain; version=0.0.4; charset=utf-8") -> None:
+        """Plain-text twin of :meth:`_send` (the Prometheus exposition
+        content type is the stated default)."""
+        if getattr(self, "_drop_response", False) and code == 200:
+            self.close_connection = True
+            return
+        data = text.encode()
+        self.send_response(code)
+        self.send_header("Content-Type", content_type)
+        self.send_header("Content-Length", str(len(data)))
+        self.end_headers()
+        self.wfile.write(data)
+
     def _try_send(self, obj, code: int) -> None:
         try:
             self._send(obj, code)
@@ -1123,55 +1269,75 @@ class SweepRequestHandler(BaseHTTPRequestHandler):
         # ResilientClient stamps on the request (so its *retries* of one
         # op pass), else method+path (so a plain client's identical retry
         # of a GET also passes — the path including the query IS the op).
-        marker = self.headers.get(OP_HEADER) or f"{self.command} {self.path}"
+        # The same header may carry the caller's trace context; only the
+        # op portion is the fault marker, so markers — and therefore
+        # marker-keyed fault schedules — are identical with and without
+        # tracing, and stable across the retries of one operation.
+        op, tid, sid = obs_mod.parse_op_header(self.headers.get(OP_HEADER))
+        marker = op or f"{self.command} {self.path}"
         self._drop_response = False
-        fault = svc.check_fault(fault_point("server" + path), marker)
-        if fault is not None:
-            if fault.action == "kill":
-                svc.kill()
-                self._drop()
-                return
-            if fault.action in ("drop", "corrupt"):
-                self._drop()
-                return
-            if fault.action == "error":
+        # Everything below — fault checks included — runs inside this
+        # request's server span: injected faults land as events in the
+        # caller's trace, and a retried op shows one attempt span chain.
+        # Untraced (legacy-client) requests still bind this daemon's
+        # domain, so stage histograms always land in ITS /metrics.
+        joined = (obs_mod.join_trace(tid, "server" + path, obs=svc.obs,
+                                     parent=sid, method=self.command)
+                  if tid else obs_mod.bind(svc.obs))
+        with joined:
+            fault = svc.check_fault(fault_point("server" + path), marker)
+            if fault is not None:
+                if fault.action == "kill":
+                    svc.kill()
+                    self._drop()
+                    return
+                if fault.action in ("drop", "corrupt"):
+                    self._drop()
+                    return
+                if fault.action == "error":
+                    self._try_send(
+                        {"error": f"injected fault at server{path}"},
+                        fault.code)
+                    return
+                if fault.action == "delay":
+                    time.sleep(fault.delay_s)
+            resp_fault = svc.check_fault(fault_point("response" + path),
+                                         marker)
+            if resp_fault is not None and resp_fault.action == "drop":
+                self._drop_response = True
+            # A draining daemon refuses new simulation work — including a
+            # peer's read-through (the requester's degrade path simulates
+            # locally). /peer/replicate and /peer/job stay open: accepting
+            # a sibling's replicas is cheap and loses nothing on shutdown.
+            if svc.draining and path in ("/cell", "/study", "/sweep",
+                                         "/peer/cell"):
+                svc.bump("requests")
                 self._try_send(
-                    {"error": f"injected fault at server{path}"}, fault.code)
+                    {"error": "draining: not accepting new work"}, 503)
                 return
-            if fault.action == "delay":
-                time.sleep(fault.delay_s)
-        resp_fault = svc.check_fault(fault_point("response" + path), marker)
-        if resp_fault is not None and resp_fault.action == "drop":
-            self._drop_response = True
-        # A draining daemon refuses new simulation work — including a
-        # peer's read-through (the requester's degrade path simulates
-        # locally). /peer/replicate and /peer/job stay open: accepting a
-        # sibling's replicas is cheap and loses nothing on shutdown.
-        if svc.draining and path in ("/cell", "/study", "/sweep",
-                                     "/peer/cell"):
             svc.bump("requests")
-            self._try_send({"error": "draining: not accepting new work"}, 503)
-            return
-        svc.bump("requests")
-        try:
-            fn()
-        except (KeyError, ValueError) as e:
-            svc.bump("errors")
-            self._try_send({"error": f"{e.__class__.__name__}: {e}"}, 400)
-        except ConnectionError:
-            pass             # client went away mid-response (reset or pipe)
-        except FaultError as e:
-            # An injected fault fired mid-handling. A kill means the
-            # daemon is now dead: drop the connection like the real
-            # thing. Anything else reports as a server error.
-            if svc.dead:
-                self._drop()
-                return
-            svc.bump("errors")
-            self._try_send({"error": f"{e.__class__.__name__}: {e}"}, 500)
-        except Exception as e:           # noqa: BLE001 — report, don't die
-            svc.bump("errors")
-            self._try_send({"error": f"{e.__class__.__name__}: {e}"}, 500)
+            try:
+                fn()
+            except (KeyError, ValueError) as e:
+                svc.bump("errors")
+                self._try_send({"error": f"{e.__class__.__name__}: {e}"},
+                               400)
+            except ConnectionError:
+                pass         # client went away mid-response (reset or pipe)
+            except FaultError as e:
+                # An injected fault fired mid-handling. A kill means the
+                # daemon is now dead: drop the connection like the real
+                # thing. Anything else reports as a server error.
+                if svc.dead:
+                    self._drop()
+                    return
+                svc.bump("errors")
+                self._try_send({"error": f"{e.__class__.__name__}: {e}"},
+                               500)
+            except Exception as e:       # noqa: BLE001 — report, don't die
+                svc.bump("errors")
+                self._try_send({"error": f"{e.__class__.__name__}: {e}"},
+                               500)
 
     def do_GET(self):  # noqa: N802 — stdlib naming
         path = urlparse(self.path).path
@@ -1184,6 +1350,18 @@ class SweepRequestHandler(BaseHTTPRequestHandler):
                 self._send(svc.healthz())
             elif path == "/stats":
                 self._send(svc.stats())
+            elif path == "/metrics":
+                # Prometheus text exposition over the daemon's registry —
+                # the same counters /stats serves as the legacy dict.
+                self._send_text(svc.obs.registry.render())
+            elif path == "/debug/trace":
+                tid = params.get("id")
+                if tid:
+                    self._send({"trace": tid,
+                                "spans": svc.obs.spans.dump(tid)})
+                else:
+                    self._send({"traces": svc.obs.spans.traces(),
+                                **svc.obs.describe()})
             elif path == "/cell":
                 bench = params["bench"]
                 cfg = resolve_machine(params)
@@ -1431,11 +1609,16 @@ class ResilientClient(SweepClient):
         self._op_seq = 0
         self._preferred = 0
         self.last_url = urls[0]
-        self.counters: Dict[str, int] = {
-            "requests": 0, "attempts": 0, "retries": 0, "failovers": 0,
-            "breaker_opens": 0, "breaker_closes": 0, "probes": 0,
-            "exhausted": 0,
-        }
+        # Client-side observability domain (separate registry from any
+        # daemon living in the same process): the legacy client_stats()
+        # counter dict becomes a view over it, same keys and values.
+        self.obs = obs_mod.Observability(clock=clock)
+        self.counters = obs_mod.CounterView(self.obs.registry,
+                                            _CLIENT_COUNTER_METRICS)
+        self._h_request = self.obs.registry.histogram(
+            "warpsim_client_request_seconds",
+            "end-to-end duration of one logical client operation "
+            "(all retries and failovers included)")
 
     @property
     def urls(self) -> List[str]:
@@ -1450,8 +1633,9 @@ class ResilientClient(SweepClient):
         return self._request(path, body)
 
     def _bump(self, counter: str, n: int = 1) -> None:
-        with self._rlock:
-            self.counters[counter] += n
+        # Registry-locked, not rlock-guarded: callers already inside
+        # `with self._rlock:` (breaker transitions) may bump safely.
+        self.counters.inc(counter, n)
 
     def _backoff(self, n_failures: int) -> float:
         with self._rlock:
@@ -1489,7 +1673,7 @@ class ResilientClient(SweepClient):
             if ok:
                 ep.state = "closed"
                 ep.failures = 0
-                self.counters["breaker_closes"] += 1
+                self._bump("breaker_closes")
             else:
                 ep.open_until = self._clock() + self.breaker_cooldown
         return ok
@@ -1502,7 +1686,7 @@ class ResilientClient(SweepClient):
                 ep.state = "open"
                 ep.open_until = self._clock() + self.breaker_cooldown
                 ep.opens += 1
-                self.counters["breaker_opens"] += 1
+                self._bump("breaker_opens")
             # Point the next attempt at a different endpoint right away —
             # failover is immediate; the breaker only governs when a
             # *failing* endpoint may be tried again.
@@ -1516,7 +1700,7 @@ class ResilientClient(SweepClient):
             ep.failures = 0
             if ep.state == "open":
                 ep.state = "closed"
-                self.counters["breaker_closes"] += 1
+                self._bump("breaker_closes")
             self._preferred = self.endpoints.index(ep)
             self.last_url = ep.url
 
@@ -1524,47 +1708,56 @@ class ResilientClient(SweepClient):
         with self._rlock:
             self._op_seq += 1
             op = f"{path.split('?')[0]}#{self._op_seq}"
-            self.counters["requests"] += 1
+        self._bump("requests")
         last_err: Optional[ServiceError] = None
         attempts = 0
         prev_ep: Optional[_Endpoint] = None
-        for attempt in range(self.max_retries + 1):
-            if attempt:
-                self._bump("retries")
-                self._sleep(self._backoff(attempt - 1))
-            ep = self._select()
-            if ep is None:
-                # Every breaker open and no probe passed: burn the
-                # attempt and back off — a later attempt may find a
-                # cooldown elapsed and a daemon back up.
+        with self._h_request.time():
+            for attempt in range(self.max_retries + 1):
+                if attempt:
+                    self._bump("retries")
+                    self._sleep(self._backoff(attempt - 1))
+                ep = self._select()
+                if ep is None:
+                    # Every breaker open and no probe passed: burn the
+                    # attempt and back off — a later attempt may find a
+                    # cooldown elapsed and a daemon back up.
+                    attempts += 1
+                    continue
+                if prev_ep is not None and ep is not prev_ep:
+                    self._bump("failovers")
+                prev_ep = ep
                 attempts += 1
-                continue
-            if prev_ep is not None and ep is not prev_ep:
-                self._bump("failovers")
-            prev_ep = ep
-            attempts += 1
-            self._bump("attempts")
-            fault = (self.fault_plan.check(fault_point("client.request"),
-                                           marker=op)
-                     if self.fault_plan is not None else None)
-            try:
-                if fault is not None:
-                    raise ServiceUnavailable(
-                        f"injected client fault ({fault.action}) before "
-                        f"{ep.url}{path}", url=ep.url, path=path)
-                out = self._transport(
-                    ep.url + path, body,
-                    timeout=self.attempt_timeout or self.timeout,
-                    headers={OP_HEADER: op})
-            except ServiceError as e:
-                if not e.is_transient:
-                    e.attempts = attempts
-                    raise
-                last_err = e
-                self._record_failure(ep)
-                continue
-            self._record_success(ep)
-            return out
+                self._bump("attempts")
+                fault = (self.fault_plan.check(fault_point("client.request"),
+                                               marker=op)
+                         if self.fault_plan is not None else None)
+                try:
+                    if fault is not None:
+                        raise ServiceUnavailable(
+                            f"injected client fault ({fault.action}) before "
+                            f"{ep.url}{path}", url=ep.url, path=path)
+                    # Each attempt is its own span; the header carries the
+                    # *stable* op (the fault/retry marker) plus this
+                    # attempt's span id, so the daemon's server span
+                    # chains under the attempt that actually reached it —
+                    # a retried op stays one trace, attempts appended.
+                    with obs_mod.span("client.attempt", url=ep.url, op=op,
+                                      attempt=attempts):
+                        out = self._transport(
+                            ep.url + path, body,
+                            timeout=self.attempt_timeout or self.timeout,
+                            headers={OP_HEADER: obs_mod.format_op_header(
+                                op, obs_mod.current())})
+                except ServiceError as e:
+                    if not e.is_transient:
+                        e.attempts = attempts
+                        raise
+                    last_err = e
+                    self._record_failure(ep)
+                    continue
+                self._record_success(ep)
+                return out
         self._bump("exhausted")
         err = ServiceUnavailable(
             f"no endpoint served {path.split('?')[0]} after {attempts} "

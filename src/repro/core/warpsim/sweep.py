@@ -84,6 +84,7 @@ import numpy as np
 
 from repro.core.warpsim import _native, _pallas
 from repro.core.warpsim import machines as machines_mod
+from repro.core.warpsim import obs as obs_mod
 from repro.core.warpsim.config import MachineConfig
 from repro.core.warpsim.divergence import (
     WarpStream, aggregate_stream, build_thread_trace, expand_stream,
@@ -770,7 +771,11 @@ def _run_group(args: _GroupPayload,
     wl, stream = _group_stream(args, tcache, ecache)
     engine = args[4]
     ops = stream.to_warp_ops() if engine == "event" else stream
-    return [simulate(wl.name, ops, cfg, engine=engine) for cfg in args[3]]
+    out = []
+    for cfg in args[3]:
+        with obs_mod.stage("engine", engine=engine, bench=wl.name):
+            out.append(simulate(wl.name, ops, cfg, engine=engine))
+    return out
 
 
 def _group_stream(args: _GroupPayload, tcache: TraceCache,
@@ -779,17 +784,29 @@ def _group_stream(args: _GroupPayload, tcache: TraceCache,
     (shared by the per-group worker path and the pallas family launcher)."""
     bench, n_threads, seed, cfgs, _engine, reuse, share, tdir = args
     wl = get_workload(bench, n_threads=n_threads, seed=seed)
-    if reuse:
-        if share:
-            stream = ecache.get(
-                wl, cfgs[0],
-                trace_fn=lambda: tcache.get(wl, root=tdir))
+    # The aggregate stage covers the expansion-LRU resolution; a cold
+    # trace build nests a trace_build span/stage inside it, so the
+    # histogram pair separates re-aggregation cost from trace cost.
+    with obs_mod.stage("aggregate", bench=bench):
+        if reuse:
+            if share:
+                stream = ecache.get(
+                    wl, cfgs[0],
+                    trace_fn=lambda: _traced_build(tcache, wl, tdir))
+            else:
+                stream = ecache.get(wl, cfgs[0], single_phase=True)
         else:
-            stream = ecache.get(wl, cfgs[0], single_phase=True)
-    else:
-        stream = (expand_stream(wl, cfgs[0]) if share
-                  else expand_stream_single(wl, cfgs[0]))
+            stream = (expand_stream(wl, cfgs[0]) if share
+                      else expand_stream_single(wl, cfgs[0]))
     return wl, stream
+
+
+def _traced_build(tcache: TraceCache, wl: Workload,
+                  root: Optional[str]) -> "ThreadTrace":
+    """Trace-LRU resolve under the ``trace_build`` stage (only reached on
+    an expansion-LRU miss, so the histogram counts real builds/loads)."""
+    with obs_mod.stage("trace_build", bench=wl.name):
+        return tcache.get(wl, root=root)
 
 
 def _run_family_pallas(fam_payloads: List[_GroupPayload],
@@ -812,7 +829,8 @@ def _run_family_pallas(fam_payloads: List[_GroupPayload],
         cfgs = payload[3]
         groups.append((wl, stream, cfgs))
         pairs.extend((stream, cfg) for cfg in cfgs)
-    raw = _pallas.run_family(pairs)
+    with obs_mod.stage("pallas_family", units=len(pairs)):
+        raw = _pallas.run_family(pairs)
     if raw is None:
         return None, False
     out: List[List[SimResult]] = []
@@ -846,10 +864,12 @@ def compute_cell(bench: str, cfg: MachineConfig,
     tcache = TRACE_CACHE if trace_cache is None else trace_cache
     ecache = EXPANSION_CACHE if expansion_cache is None else expansion_cache
     wl = get_workload(bench, n_threads=n_threads, seed=seed)
-    stream = ecache.get(
-        wl, cfg, trace_fn=lambda: tcache.get(wl, root=trace_dir))
+    with obs_mod.stage("aggregate", bench=bench):
+        stream = ecache.get(
+            wl, cfg, trace_fn=lambda: _traced_build(tcache, wl, trace_dir))
     ops = stream.to_warp_ops() if engine == "event" else stream
-    return simulate(wl.name, ops, cfg, engine=engine)
+    with obs_mod.stage("engine", engine=engine, bench=bench):
+        return simulate(wl.name, ops, cfg, engine=engine)
 
 
 def run_sweep(

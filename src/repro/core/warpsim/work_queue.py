@@ -43,6 +43,7 @@ from typing import Dict, List, Mapping, Optional
 
 from repro.core.warpsim.config import MachineConfig
 from repro.core.warpsim import envcfg
+from repro.core.warpsim import obs as obs_mod
 from repro.core.warpsim.faults import (
     FaultPlan, ServiceError, ServiceUnavailable, fault_point,
 )
@@ -77,13 +78,21 @@ class WorkQueue:
     caller (``run_worker`` renews between cells, so only a *single cell*
     slower than the lease — not a slow chunk — can forfeit work).
     `clock` is injectable for tests (defaults to ``time.monotonic``).
+    `trace_id` ties the job to the study trace that enqueued it: it is
+    persisted, handed to workers in every lease response, and joined by
+    ``run_worker`` so worker hops land in the same trace. `on_count` is
+    an optional ``callback(counter_name)`` fired (under the queue lock)
+    whenever one of the lease counters increments — the sweep service
+    mirrors them into its metrics registry without this module growing a
+    registry dependency of its own.
 
     Thread-safe: one lock guards all state (the sweep service calls this
     from concurrent request threads).
     """
 
     def __init__(self, cells: List[Cell], chunk_size: int = 16,
-                 lease_seconds: float = 60.0, clock=time.monotonic):
+                 lease_seconds: float = 60.0, clock=time.monotonic,
+                 trace_id: Optional[str] = None, on_count=None):
         if chunk_size < 1:
             raise ValueError("chunk_size must be >= 1")
         ordered = family_major_cells(list(cells))
@@ -95,9 +104,15 @@ class WorkQueue:
         self.lease_seconds = lease_seconds
         self._clock = clock
         self._lock = threading.Lock()
+        self.trace_id = trace_id
+        self._on_count = on_count
         self.leases_granted = 0
         self.leases_expired = 0
         self.stale_completions = 0
+
+    def _note(self, counter: str) -> None:
+        if self._on_count is not None:
+            self._on_count(counter)
 
     def _reclaim_expired(self, now: float) -> None:
         for c in self.chunks:
@@ -105,6 +120,7 @@ class WorkQueue:
                 c.state = _PENDING
                 c.worker = None
                 self.leases_expired += 1
+                self._note("leases_expired")
 
     def lease(self, worker_id: str) -> Optional[Chunk]:
         """Grant the next pending chunk to `worker_id`, or None if no chunk
@@ -120,6 +136,7 @@ class WorkQueue:
                     c.deadline = now + self.lease_seconds
                     c.attempts += 1
                     self.leases_granted += 1
+                    self._note("leases_granted")
                     return c
             return None
 
@@ -158,6 +175,7 @@ class WorkQueue:
                 return True
             if c.worker != worker_id:
                 self.stale_completions += 1
+                self._note("stale_completions")
             c.state = _DONE
             c.worker = worker_id
             if all(ch.state == _DONE for ch in self.chunks):
@@ -190,6 +208,7 @@ class WorkQueue:
             return {
                 "total_cells": self.total_cells,
                 "lease_seconds": self.lease_seconds,
+                "trace": self.trace_id,
                 "leases_granted": self.leases_granted,
                 "leases_expired": self.leases_expired,
                 "stale_completions": self.stale_completions,
@@ -205,7 +224,8 @@ class WorkQueue:
             }
 
     @classmethod
-    def from_dict(cls, d: Mapping, clock=time.monotonic) -> "WorkQueue":
+    def from_dict(cls, d: Mapping, clock=time.monotonic,
+                  on_count=None) -> "WorkQueue":
         """Inverse of :meth:`to_dict` — restores chunk boundaries, states,
         workers and counters verbatim (no re-sharding: chunk ids must stay
         stable so in-flight workers' renew/complete calls keep landing)."""
@@ -214,6 +234,8 @@ class WorkQueue:
         q.lease_seconds = float(d["lease_seconds"])
         q._clock = clock
         q._lock = threading.Lock()
+        q.trace_id = d.get("trace")
+        q._on_count = on_count
         q.leases_granted = int(d.get("leases_granted", 0))
         q.leases_expired = int(d.get("leases_expired", 0))
         q.stale_completions = int(d.get("stale_completions", 0))
@@ -312,6 +334,25 @@ def _http_json(url: str, body: Optional[dict] = None,
             url=base, path=path) from e
 
 
+def _http_text(url: str, timeout: float = 60.0) -> str:
+    """One text-over-HTTP GET with the same typed-failure contract as
+    :func:`_http_json` — for non-JSON surfaces, i.e. the daemon's
+    Prometheus ``GET /metrics`` exposition (smokes and scrapers)."""
+    parts = urllib.parse.urlsplit(url)
+    base = f"{parts.scheme}://{parts.netloc}"
+    path = parts.path or "/"
+    try:
+        with urllib.request.urlopen(url, timeout=timeout) as resp:
+            return resp.read().decode()
+    except urllib.error.HTTPError as e:
+        raise ServiceError(f"HTTP {e.code} from {url}",
+                           url=base, path=path, code=e.code) from e
+    except (urllib.error.URLError, http.client.HTTPException, OSError) as e:
+        raise ServiceUnavailable(
+            f"{type(e).__name__} talking to {url}: {e}",
+            url=base, path=path) from e
+
+
 def _worker_urls(base_url) -> List[str]:
     """Normalize ``run_worker``'s first argument into an ordered URL list.
 
@@ -401,7 +442,9 @@ def run_worker(base_url, job: str, worker_id: Optional[str] = None,
                         raise ServiceUnavailable(
                             f"injected worker fault ({fault.action}) at "
                             f"worker.{kind}", url=base, path=f"/{kind}")
-                return _http_json(base + path, send, timeout=timeout)
+                with obs_mod.stage(f"worker.{kind}"):
+                    return _http_json(base + path, send, timeout=timeout,
+                                      headers=obs_mod.trace_headers())
             except ServiceError as e:
                 if not e.is_transient:
                     # Definite refusal (e.g. 400 unknown job) from this
@@ -432,41 +475,50 @@ def run_worker(base_url, job: str, worker_id: Optional[str] = None,
                 return computed
             sleep(poll_seconds)     # live leases elsewhere: wait them out
             continue
-        results = []
-        abandoned = False
-        cells = got["cells"]
-        for i, wire in enumerate(cells):
-            mname, cfg, bench, n_threads, seed = cell_from_wire(wire)
-            res = compute_cell(bench, cfg, n_threads=n_threads, seed=seed,
-                               engine=engine)
-            results.append({
-                "key": cell_key(bench, cfg, n_threads, seed),
-                "result": dataclasses.asdict(res),
-            })
-            computed += 1
-            if i + 1 < len(cells):
-                # Heartbeat between cells so a slow chunk keeps its lease
-                # (only a single cell slower than the lease can forfeit).
-                try:
-                    renewed = call(
-                        "renew", f"/queue/renew?job={job}"
-                        f"&chunk={got['chunk']}&worker={wid}")
-                except ServiceError:
-                    abandoned = True    # daemon unreachable: let it requeue
-                    break
-                if not renewed.get("ok"):
-                    abandoned = True    # lease lost: someone else owns it
-                    break
-        if not abandoned:
-            try:
-                call("complete", "/queue/complete", {
-                    "job": job, "chunk": got["chunk"], "worker": wid,
-                    "results": results,
+        # Leases carry the enqueuing study's trace id: every cell, renew
+        # heartbeat and completion of this chunk lands in that trace (the
+        # spans record into *this worker's* ring; the daemon-side server
+        # spans of the renew/complete hops chain to them via the header).
+        with obs_mod.join_trace(got.get("trace"), "worker.chunk",
+                                parent=got.get("trace_span"), job=job,
+                                chunk=got["chunk"], worker=wid):
+            results = []
+            abandoned = False
+            cells = got["cells"]
+            for i, wire in enumerate(cells):
+                mname, cfg, bench, n_threads, seed = cell_from_wire(wire)
+                res = compute_cell(bench, cfg, n_threads=n_threads,
+                                   seed=seed, engine=engine)
+                results.append({
+                    "key": cell_key(bench, cfg, n_threads, seed),
+                    "result": dataclasses.asdict(res),
                 })
-            except ServiceError:
-                # Lost ack: the lease expires, the chunk requeues, and the
-                # eventual duplicate complete is idempotent by design.
-                pass
+                computed += 1
+                if i + 1 < len(cells):
+                    # Heartbeat between cells so a slow chunk keeps its
+                    # lease (only a single cell slower than the lease can
+                    # forfeit).
+                    try:
+                        renewed = call(
+                            "renew", f"/queue/renew?job={job}"
+                            f"&chunk={got['chunk']}&worker={wid}")
+                    except ServiceError:
+                        abandoned = True  # daemon unreachable: requeue
+                        break
+                    if not renewed.get("ok"):
+                        abandoned = True  # lease lost: someone else owns it
+                        break
+            if not abandoned:
+                try:
+                    call("complete", "/queue/complete", {
+                        "job": job, "chunk": got["chunk"], "worker": wid,
+                        "results": results,
+                    })
+                except ServiceError:
+                    # Lost ack: the lease expires, the chunk requeues, and
+                    # the eventual duplicate complete is idempotent by
+                    # design.
+                    pass
         chunks_done += 1
 
 

@@ -127,6 +127,17 @@ FAILING = [
     ("det-wall-clock", WS + "sweep.py",
      "import time\ndef key():\n    return time.time()\n",
      [("determinism", 3)]),
+    # Even the *monotonic* clock is banned inside the determinism scope:
+    # stage timing belongs in obs.py (route it through obs.stage).
+    ("det-monotonic-in-sweep", WS + "sweep.py",
+     "import time\ndef took():\n    return time.monotonic()\n",
+     [("determinism", 3)]),
+    # obs.py's span ring: a module-level deque without an annotation is
+    # still a lock-discipline finding — the obs module is exempt from
+    # *determinism*, not from lock discipline.
+    ("lock-obs-unannotated-ring", WS + "obs.py",
+     "import collections\n_SPANS = collections.deque(maxlen=8)\n",
+     [("lock-discipline", 2)]),
     ("det-datetime-now", WS + "trace.py",
      "from datetime import datetime\nstamp = datetime.now()\n",
      [("determinism", 2)]),
@@ -208,6 +219,24 @@ PASSING = [
      "for name in sorted({'a', 'b'}):\n    pass\n"),
     ("det-clock-outside-scope", WS + "service.py",
      "import time\nstarted = time.time()\n"),
+    # The documented determinism-scope decision: obs.py is deliberately
+    # NOT in DETERMINISM_MODULES, so the exact code that fails in
+    # sweep.py (det-monotonic-in-sweep) is legal there — the clock is
+    # injectable and span durations never feed cache keys.
+    ("det-monotonic-in-obs-allowed", WS + "obs.py",
+     "import time\ndef took():\n    return time.monotonic()\n"),
+    # ...and the blessed shape for obs's own module state: annotated,
+    # mutated under its lock.
+    ("lock-obs-annotated-ring", WS + "obs.py",
+     """\
+     import collections
+     import threading
+     _RING_LOCK = threading.Lock()
+     _SPANS = collections.deque(maxlen=8)  # guarded-by: _RING_LOCK
+     def record(s):
+         with _RING_LOCK:
+             _SPANS.append(s)
+     """),
     ("fault-registered-literal", "src/anywhere.py",
      "from repro.core.warpsim.faults import fault_point\n"
      "fault_point('service.cell')\n"),
@@ -462,6 +491,12 @@ def test_determinism_scope_matches_real_modules():
     for base in DETERMINISM_MODULES:
         assert os.path.exists(os.path.join(
             REPO, "src", "repro", "core", "warpsim", base)), base
+    # The inverse is load-bearing too: obs.py must stay OUT of the set
+    # (its injectable monotonic clock is the documented exception — see
+    # the note on DETERMINISM_MODULES in lint.py), while sweep.py, which
+    # *calls* obs.stage, must stay in.
+    assert "obs.py" not in DETERMINISM_MODULES
+    assert "sweep.py" in DETERMINISM_MODULES
 
 
 def test_finding_render_format():

@@ -1,0 +1,432 @@
+"""warpsim.obs tests: metric registry semantics + Prometheus exposition,
+the X-Warpsim-Op header codec, span ring bounds, ambient-context
+propagation, deterministic sampling, the counter-drift guard between the
+legacy ``stats()`` views and the registry, and the chaos property that a
+retried request stays ONE logical trace (attempt spans chain, traces
+never fork)."""
+
+import math
+import threading
+
+import pytest
+
+from repro.core.warpsim import machines
+from repro.core.warpsim import obs as obs_mod
+from repro.core.warpsim import service as service_mod
+from repro.core.warpsim.api import Study
+from repro.core.warpsim.faults import FaultPlan
+from repro.core.warpsim.obs import (
+    DEFAULT_RING, OP_HEADER, CounterView, MetricsRegistry, Observability,
+    TraceBuffer, format_op_header, parse_exposition, parse_op_header,
+)
+from repro.core.warpsim.service import ResilientClient, SweepService, serve
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def _noop_sleep(_seconds):
+    pass
+
+
+class _daemon:
+    """Context manager: serve `svc` on an ephemeral port, yield its URL."""
+
+    def __init__(self, svc):
+        self.svc = svc
+
+    def __enter__(self):
+        self.httpd = serve(self.svc)
+        self.thread = threading.Thread(
+            target=self.httpd.serve_forever, daemon=True)
+        self.thread.start()
+        return "http://%s:%d" % self.httpd.server_address[:2]
+
+    def __exit__(self, *exc):
+        self.httpd.shutdown()
+        self.httpd.server_close()
+        return False
+
+
+# ---------------------------------------------------------------------------
+# Metrics registry
+# ---------------------------------------------------------------------------
+
+
+def test_counter_semantics():
+    reg = MetricsRegistry(clock=FakeClock())
+    c = reg.counter("warpsim_test_total", "doc")
+    c.inc()
+    c.inc(3)
+    assert c.value == 4
+    with pytest.raises(ValueError, match="cannot decrease"):
+        c.inc(-1)
+
+
+def test_gauge_semantics():
+    reg = MetricsRegistry(clock=FakeClock())
+    g = reg.gauge("warpsim_test_gauge", "doc")
+    g.set(5)
+    g.inc()
+    g.dec(2)
+    assert g.value == 4
+
+
+def test_histogram_buckets_and_timer():
+    clock = FakeClock()
+    reg = MetricsRegistry(clock=clock)
+    h = reg.histogram("warpsim_test_seconds", "doc",
+                      buckets=(0.1, 1.0, 10.0))
+    h.observe(0.05)
+    h.observe(0.5)
+    h.observe(100.0)     # lands in +Inf
+    with h.time():
+        clock.t += 2.0   # lands in the 10.0 bucket
+    child = h._default()
+    assert child.count == 4
+    assert child.sum == pytest.approx(102.55)
+    # Rendered buckets are cumulative and end at +Inf == count.
+    samples = parse_exposition(reg.render())
+    assert samples['warpsim_test_seconds_bucket{le="0.1"}'] == 1
+    assert samples['warpsim_test_seconds_bucket{le="1"}'] == 2
+    assert samples['warpsim_test_seconds_bucket{le="10"}'] == 3
+    assert samples['warpsim_test_seconds_bucket{le="+Inf"}'] == 4
+    assert samples["warpsim_test_seconds_count"] == 4
+
+
+def test_labels_create_distinct_series():
+    reg = MetricsRegistry(clock=FakeClock())
+    c = reg.counter("warpsim_cells_total", "doc", labelnames=("engine",))
+    c.labels(engine="fast").inc(2)
+    c.labels(engine="native").inc()
+    samples = parse_exposition(reg.render())
+    assert samples['warpsim_cells_total{engine="fast"}'] == 2
+    assert samples['warpsim_cells_total{engine="native"}'] == 1
+    with pytest.raises(ValueError, match="takes labels"):
+        c.labels(bench="BFS")
+    with pytest.raises(ValueError, match="has labels"):
+        c.inc()
+
+
+def test_registration_is_idempotent_but_shape_strict():
+    reg = MetricsRegistry(clock=FakeClock())
+    a = reg.counter("warpsim_x_total", "doc")
+    assert reg.counter("warpsim_x_total", "other doc") is a
+    with pytest.raises(ValueError, match="already registered"):
+        reg.gauge("warpsim_x_total")
+    with pytest.raises(ValueError, match="already registered"):
+        reg.counter("warpsim_x_total", labelnames=("k",))
+    with pytest.raises(ValueError, match="bad metric name"):
+        reg.counter("warpsim bad name")
+
+
+def test_exposition_has_help_and_type_and_parses():
+    reg = MetricsRegistry(clock=FakeClock())
+    reg.counter("warpsim_a_total", "things counted").inc()
+    text = reg.render()
+    assert "# HELP warpsim_a_total things counted" in text
+    assert "# TYPE warpsim_a_total counter" in text
+    assert parse_exposition(text) == {"warpsim_a_total": 1.0}
+    with pytest.raises(ValueError, match="malformed"):
+        parse_exposition("no_value_here\n")
+
+
+def test_snapshot_flattens_histograms():
+    reg = MetricsRegistry(clock=FakeClock())
+    reg.counter("warpsim_a_total").inc(2)
+    reg.histogram("warpsim_b_seconds", buckets=(1.0,)).observe(0.5)
+    snap = reg.snapshot()
+    assert snap["warpsim_a_total"] == {"": 2.0}
+    assert snap["warpsim_b_seconds"] == {".sum": 0.5, ".count": 1}
+
+
+# ---------------------------------------------------------------------------
+# CounterView: the legacy dict shape over registry counters
+# ---------------------------------------------------------------------------
+
+
+def test_counter_view_is_mapping_and_strict():
+    reg = MetricsRegistry(clock=FakeClock())
+    view = CounterView(reg, {"simulated": ("warpsim_sim_total", "doc"),
+                             "hits": ("warpsim_hits_total", "doc")})
+    view.inc("simulated")
+    view.inc("hits", 3)
+    assert view["simulated"] == 1
+    assert dict(view) == {"simulated": 1, "hits": 3}
+    assert len(view) == 2
+    with pytest.raises(KeyError, match="not in this view"):
+        view.inc("typo")
+    assert view.metric_names() == {"simulated": "warpsim_sim_total",
+                                   "hits": "warpsim_hits_total"}
+    # The value genuinely lives in the registry, not a shadow dict.
+    assert reg.get("warpsim_hits_total").value == 3
+
+
+# ---------------------------------------------------------------------------
+# Counter drift: legacy stats() views <-> registry, both directions
+# ---------------------------------------------------------------------------
+
+
+def _registry_counter_names(registry):
+    return {n for n in registry.names()
+            if isinstance(registry.get(n), obs_mod.Counter)}
+
+
+def test_service_counters_match_registry_both_ways(tmp_path):
+    svc = SweepService(str(tmp_path), persist_traces=False)
+    view_names = set(svc.counters.metric_names().values())
+    # ->: every legacy counter is a registered registry counter.
+    assert view_names <= _registry_counter_names(svc.obs.registry)
+    # <-: every registry counter is reachable through the legacy view —
+    # nothing counts into /metrics that /stats can't see.
+    assert _registry_counter_names(svc.obs.registry) <= view_names
+    # The legacy dict shape is exactly the view's keys.
+    assert set(svc.stats()["counters"]) == set(svc.counters)
+    assert set(svc.counters) == set(service_mod._COUNTER_METRICS)
+
+
+def test_client_counters_match_registry_both_ways():
+    client = ResilientClient(["http://127.0.0.1:1"], sleep=_noop_sleep)
+    view_names = set(client.counters.metric_names().values())
+    counter_names = _registry_counter_names(client.obs.registry)
+    assert view_names == counter_names
+    legacy = client.client_stats()
+    assert set(legacy) - {"endpoints"} == set(client.counters)
+    assert set(client.counters) == set(service_mod._CLIENT_COUNTER_METRICS)
+
+
+def test_bump_of_undeclared_counter_raises(tmp_path):
+    # The drift guard at runtime: a typo'd bump can't mint a counter.
+    svc = SweepService(str(tmp_path), persist_traces=False)
+    with pytest.raises(KeyError, match="not in this view"):
+        svc.bump("simualted")
+
+
+# ---------------------------------------------------------------------------
+# Header codec
+# ---------------------------------------------------------------------------
+
+
+def test_header_round_trip():
+    ob = Observability(clock=FakeClock())
+    with obs_mod.start_trace("study", obs=ob) as ctx:
+        value = format_op_header("op-7", ctx)
+        op, tid, sid = parse_op_header(value)
+        assert op == "op-7"
+        assert tid == ctx.trace_id
+        assert sid == ctx.span_id
+
+
+def test_header_bare_legacy_value_parses_as_pure_op():
+    assert parse_op_header("cell-abc123") == ("cell-abc123", None, None)
+    assert parse_op_header(None) == ("", None, None)
+    assert parse_op_header("") == ("", None, None)
+
+
+def test_header_without_context_is_just_the_op():
+    assert format_op_header("op-1", None) == "op-1"
+    assert obs_mod.trace_headers(None) == {}
+
+
+def test_trace_headers_carry_ambient_context():
+    ob = Observability(clock=FakeClock())
+    with obs_mod.start_trace("study", obs=ob) as ctx:
+        headers = obs_mod.trace_headers()
+        op, tid, sid = parse_op_header(headers[OP_HEADER])
+        assert (op, tid, sid) == ("", ctx.trace_id, ctx.span_id)
+
+
+def test_non_recording_context_propagates_nothing(monkeypatch):
+    monkeypatch.setenv("WARPSIM_OBS_SAMPLE", "0")
+    ob = Observability(clock=FakeClock())
+    with obs_mod.start_trace("study", obs=ob) as ctx:
+        assert ctx.recording is False
+        assert obs_mod.trace_headers() == {}
+    assert ob.spans.dump() == []
+
+
+# ---------------------------------------------------------------------------
+# Span ring + context propagation
+# ---------------------------------------------------------------------------
+
+
+def test_ring_is_bounded_and_counts_lifetime():
+    buf = TraceBuffer(maxlen=4)
+    for i in range(10):
+        buf.record({"trace": "t", "span": str(i)})
+    assert len(buf) == 4
+    assert buf.recorded == 10
+    assert [s["span"] for s in buf.dump()] == ["6", "7", "8", "9"]
+
+
+def test_ring_default_capacity_from_env(monkeypatch):
+    monkeypatch.delenv("WARPSIM_OBS_RING", raising=False)
+    assert TraceBuffer().maxlen == DEFAULT_RING
+    monkeypatch.setenv("WARPSIM_OBS_RING", "16")
+    assert TraceBuffer().maxlen == 16
+
+
+def test_spans_nest_and_parent_correctly():
+    ob = Observability(clock=FakeClock())
+    with obs_mod.start_trace("study", obs=ob, backend="inprocess") as root:
+        with obs_mod.span("inner") as inner:
+            obs_mod.event("fault", point="p")
+            assert inner.trace_id == root.trace_id
+    spans = {s["name"]: s for s in ob.spans.dump(root.trace_id)}
+    assert set(spans) == {"study", "inner", "fault"}
+    assert spans["study"]["parent"] is None
+    assert spans["inner"]["parent"] == root.span_id
+    assert spans["fault"]["parent"] == spans["inner"]["span"]
+    assert spans["study"]["attrs"] == {"backend": "inprocess"}
+    assert spans["fault"]["dur_s"] == 0.0
+
+
+def test_nested_start_trace_extends_instead_of_forking():
+    ob = Observability(clock=FakeClock())
+    with obs_mod.start_trace("outer", obs=ob) as outer:
+        with obs_mod.start_trace("inner", obs=ob) as inner:
+            assert inner.trace_id == outer.trace_id
+    assert ob.spans.traces() == [
+        {"trace": outer.trace_id, "spans": 2, "root": "outer"}]
+
+
+def test_join_trace_parents_to_remote_span():
+    ob = Observability(clock=FakeClock())
+    with obs_mod.join_trace("abcd1234", "server/study", obs=ob,
+                            parent="ffff00001111"):
+        pass
+    (s,) = ob.spans.dump("abcd1234")
+    assert s["parent"] == "ffff00001111"
+    assert s["name"] == "server/study"
+
+
+def test_join_trace_without_id_is_passthrough():
+    ob = Observability(clock=FakeClock())
+    with obs_mod.join_trace(None, "server/study", obs=ob) as ctx:
+        assert ctx is None
+    assert ob.spans.dump() == []
+
+
+def test_activate_reenters_context_in_another_thread():
+    ob = Observability(clock=FakeClock())
+    got = {}
+    with obs_mod.start_trace("study", obs=ob) as ctx:
+        def task():
+            # A bare pool thread has no ambient context...
+            got["before"] = obs_mod.current()
+            with obs_mod.activate(ctx):
+                got["during"] = obs_mod.current()
+                with obs_mod.span("pool-task"):
+                    pass
+        t = threading.Thread(target=task)
+        t.start()
+        t.join()
+    assert got["before"] is None
+    assert got["during"] is ctx
+    names = [s["name"] for s in ob.spans.dump(ctx.trace_id)]
+    assert "pool-task" in names
+
+
+def test_activate_none_is_passthrough():
+    with obs_mod.activate(None) as ctx:
+        assert ctx is None
+
+
+# ---------------------------------------------------------------------------
+# Stage profiling + the WARPSIM_OBS kill switch
+# ---------------------------------------------------------------------------
+
+
+def test_stage_observes_histogram_and_records_span():
+    clock = FakeClock()
+    ob = Observability(clock=clock)
+    with obs_mod.start_trace("study", obs=ob) as ctx:
+        with obs_mod.stage("engine", engine="fast"):
+            clock.t += 0.25
+    child = ob.stage_seconds.labels(stage="engine")
+    assert child.count == 1
+    assert child.sum == pytest.approx(0.25)
+    names = [s["name"] for s in ob.spans.dump(ctx.trace_id)]
+    assert "engine" in names
+
+
+def test_stage_without_trace_still_observes_histogram():
+    # Library code calls stage() unconditionally; with no active trace
+    # the duration still lands in the ambient (default) histogram.
+    before = obs_mod.default().stage_seconds.labels(stage="t_obs_x").count
+    with obs_mod.stage("t_obs_x"):
+        pass
+    after = obs_mod.default().stage_seconds.labels(stage="t_obs_x").count
+    assert after == before + 1
+
+
+def test_kill_switch_makes_hooks_no_ops(monkeypatch):
+    monkeypatch.setenv("WARPSIM_OBS", "0")
+    ob = Observability(clock=FakeClock())
+    with obs_mod.start_trace("study", obs=ob) as ctx:
+        assert ctx is None
+        with obs_mod.span("inner") as inner:
+            assert inner is None
+        obs_mod.event("fault")
+        with obs_mod.stage("engine"):
+            pass
+    assert ob.spans.dump() == []
+    with obs_mod.join_trace("sometid", "server/x", obs=ob) as ctx:
+        assert ctx is None
+    assert ob.spans.dump() == []
+
+
+def test_sampling_is_deterministic_per_trace_id():
+    # The decision is a pure function of the trace id and the rate.
+    assert obs_mod._sampled("deadbeef") is True          # default rate 1.0
+    for tid in ("a1", "b2", "c3"):
+        first = obs_mod._sampled(tid)
+        assert all(obs_mod._sampled(tid) == first for _ in range(3))
+
+
+def test_sampling_rate_extremes(monkeypatch):
+    monkeypatch.setenv("WARPSIM_OBS_SAMPLE", "1.0")
+    assert obs_mod._sampled("anything") is True
+    monkeypatch.setenv("WARPSIM_OBS_SAMPLE", "0.0")
+    assert obs_mod._sampled("anything") is False
+
+
+# ---------------------------------------------------------------------------
+# Chaos: a retried request stays ONE trace (attempt spans, no fork)
+# ---------------------------------------------------------------------------
+
+
+def test_retried_request_keeps_one_logical_span_chain(tmp_path):
+    """An injected 503 on the first /study attempt: the retry re-sends
+    the same op (marker-keyed plan passes it) and the SAME trace id —
+    both server hops land in one trace, parented to their respective
+    client attempt spans. Retries append attempts; they never fork."""
+    plan = FaultPlan.from_spec("server/study:error=503,times=1")
+    svc = SweepService(str(tmp_path), persist_traces=False, fault_plan=plan)
+    ob = Observability()
+    with _daemon(svc) as url:
+        client = ResilientClient([url], sleep=_noop_sleep)
+        with obs_mod.start_trace("study", obs=ob) as ctx:
+            tid = ctx.trace_id
+            result = client.study(Study(
+                machines={"ws8": machines.baseline(8)},
+                benches=("BFS",), n_threads=128))
+        assert result.records
+    local = ob.spans.dump(tid)
+    attempts = [s for s in local if s["name"] == "client.attempt"]
+    assert len(attempts) == 2                      # the 503 + the retry
+    assert attempts[0]["attrs"]["op"] == attempts[1]["attrs"]["op"]
+    # The daemon saw both hops on the SAME trace — nothing forked.
+    server = svc.obs.spans.dump(tid)
+    study_spans = [s for s in server if s["name"] == "server/study"]
+    assert len(study_spans) == 2
+    attempt_ids = {s["span"] for s in attempts}
+    assert {s["parent"] for s in study_spans} <= attempt_ids
+    # Every span the daemon recorded belongs to this one trace.
+    assert {t["trace"] for t in svc.obs.spans.traces()} == {tid}
+    assert svc.counters["faults_injected"] == 1
